@@ -1,0 +1,9 @@
+"""Small shared helpers for the benchmark package."""
+
+
+class NullIO:
+    def write(self, *_):
+        pass
+
+    def flush(self):
+        pass

@@ -1,0 +1,105 @@
+"""Regenerate EXPERIMENTS.md tables from results/*.jsonl artifacts.
+
+    PYTHONPATH=src:. python -m benchmarks.experiments_report
+"""
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+
+from repro import configs
+from benchmarks import roofline as RL
+
+
+def dryrun_table(path="results/dryrun.jsonl") -> str:
+    rows = OrderedDict()
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if "error" in r:
+                continue
+            rows[(r["arch"], r["shape"], r["mesh"])] = r
+    hdr = ("| arch | shape | mesh | compile (s) | HLO GFLOP/dev | HBM GB/dev "
+           "| link MB/dev | XLA temp GB | analytic GB | fits 16G |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    order = {n: i for i, n in enumerate(configs.ASSIGNED)}
+    lines = []
+    for (arch, shape, mesh), r in sorted(
+            rows.items(), key=lambda kv: (order.get(kv[0][0], 99), kv[0][1],
+                                          kv[0][2])):
+        a = r.get("analysis", {})
+        am = r.get("analytic_memory", {})
+        coll = a.get("collectives", {}).get("total", {}).get("link_bytes", 0)
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {r.get('compile_s', '?')} | "
+            f"{a.get('flops_per_device', 0)/1e9:.1f} | "
+            f"{a.get('hbm_bytes_per_device', 0)/1e9:.2f} | "
+            f"{coll/1e6:.1f} | "
+            f"{r.get('memory', {}).get('temp_size_in_bytes', 0)/1e9:.1f} | "
+            f"{am.get('total', 0)/1e9:.1f} | "
+            f"{'✓' if am.get('fits_16g') else '✗'} |")
+    return hdr + "\n".join(lines)
+
+
+def perf_log(path="results/perf_iters.jsonl") -> str:
+    if not os.path.exists(path):
+        return "_(no perf iterations recorded yet)_"
+    lines = ["| cell | variant | compute (ms) | memory (ms) | collective "
+             "(ms) | dominant | useful/HLO | roofline frac | note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if "error" in r:
+                lines.append(f"| {r['arch']}×{r['shape']} | {r['variant']} "
+                             f"| — | — | — | ERROR | — | — | {r['error']} |")
+                continue
+            lines.append(
+                f"| {r['arch']}×{r['shape']} | {r['variant']} | "
+                f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+                f"{r['collective_s']*1e3:.1f} | {r['dominant']} | "
+                f"{r['useful_ratio']:.3f} | "
+                f"{r['roofline_fraction']*100:.2f}% | "
+                f"{r.get('note', '')} |")
+    return "\n".join(lines)
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    try:
+        rows = RL.load_rows("results/dryrun.jsonl", "16x16")
+        rtable = RL.markdown_table(rows)
+    except FileNotFoundError:
+        rtable = "_(dry-run not yet executed)_"
+    try:
+        dtable = dryrun_table()
+    except FileNotFoundError:
+        dtable = "_(dry-run not yet executed)_"
+
+    def fill(doc, marker, content):
+        start = doc.find(marker)
+        assert start >= 0, marker
+        # replace everything between this marker and the next section header
+        end = doc.find("\n## ", start)
+        if end < 0:
+            end = len(doc)
+        return doc[:start] + marker + "\n\n" + content + "\n\n" + doc[end:]
+
+    doc = fill(doc, "<!-- DRYRUN_TABLE -->", dtable)
+    doc = fill(doc, "<!-- ROOFLINE_TABLE -->", rtable)
+    doc = fill(doc, "<!-- PERF_LOG -->", perf_log())
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

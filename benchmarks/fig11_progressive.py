@@ -1,0 +1,30 @@
+"""Fig. 11 — progressive confidence network ablation: g vs g′ vs g̃.
+
+g   stage-1 only (features-only exit; lowest latency, weakest allocation)
+g′  final-stage only (decides after FULL onboard inference; best allocation,
+    pays full onboard latency for every offloaded sample)
+g̃   progressive (the paper's design: early exits + late robustness)
+"""
+from __future__ import annotations
+
+import time
+
+
+def run(bundle):
+    rows = []
+    variants = {
+        # offload iff g̃_i < τ_i; τ=-1 disables a stage (score ∈ [0,1])
+        "g_only": (0.5, -1.0),
+        "gprime_only": (-1.0, 0.45),
+        "g_tilde": (0.5, 0.4),
+    }
+    for task in ("vqa", "cls"):
+        for name, taus in variants.items():
+            t0 = time.time()
+            sv = bundle.spaceverse(taus=taus)
+            r = sv.evaluate(task, bundle.datasets[task])
+            rows.append((f"fig11_{task}_{name}", time.time() - t0,
+                         f"perf={r['performance']:.3f};"
+                         f"latency={r['latency_s']:.3f}s;"
+                         f"offload={r['offload_rate']:.2f}"))
+    return rows

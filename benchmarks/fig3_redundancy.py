@@ -1,0 +1,73 @@
+"""Fig. 3 — satellite-data redundancy: random masking vs ideal masking.
+
+(a) random masking at growing ratios degrades accuracy slowly at first
+    (paper: −6.9 % at 40 % masked) — evidence of redundancy;
+(b) ideal masking (drop only regions irrelevant to the target, using the
+    dataset's exact region-relevance labels) beats random masking on
+    detection (paper: +14.1 % IoU at 80 % masked).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import GSOnly
+from repro.core import eo_adapter as EO
+from repro.core.similarity import task_simi
+from repro.data import synthetic
+
+
+def _eval_masked(bundle, task, keep_mask_fn, seed=0):
+    """keep_mask_fn(region_rel (B,R), key) → bool (B,R) regions to KEEP."""
+    data = bundle.datasets[task]
+    key = jax.random.PRNGKey(seed)
+    n = data["images"].shape[0]
+    preds = []
+    for i in range(0, n, 32):
+        sl = slice(i, min(i + 32, n))
+        images = jnp.asarray(data["images"][sl])
+        regions = synthetic.regions_of(images, bundle.adapter_cfg.grid)
+        key, sub = jax.random.split(key)
+        keep = keep_mask_fn(jnp.asarray(data["region_rel"][sl]), sub)
+        masked = jnp.where(keep[..., None, None, None], regions, 0.0)
+        images2 = synthetic.assemble(masked, bundle.adapter_cfg.grid)
+        toks, _ = EO.generate(bundle.gs.params, bundle.gs.cfg,
+                              bundle.adapter_cfg, task, images2,
+                              jnp.asarray(data["prompts"][sl]),
+                              bundle.cascade_cfg.answer_vocab)
+        preds.append(np.asarray(EO.prediction_from_tokens(task, toks)))
+    pred = np.concatenate(preds)
+    label = data["region_rel"] if task == "det" else data["labels"]
+    return float(np.asarray(task_simi(task, jnp.asarray(pred),
+                                      jnp.asarray(label[:n]))).mean())
+
+
+def run(bundle):
+    rows = []
+    # (a) random masking sweep on cls
+    task = "cls"
+    base = None
+    for ratio in (0.0, 0.2, 0.4, 0.6, 0.8):
+        t0 = time.time()
+        perf = _eval_masked(
+            bundle, task,
+            lambda rel, k, r=ratio: jax.random.uniform(k, rel.shape) >= r)
+        if base is None:
+            base = perf
+        rows.append((f"fig3a_random_mask_{int(ratio*100)}", time.time() - t0,
+                     f"task={task};perf={perf:.3f};"
+                     f"drop={(base-perf)/max(base,1e-6)*100:.1f}%"))
+    # (b) ideal vs random masking at 80 % on det
+    task = "det"
+    t0 = time.time()
+    rnd = _eval_masked(bundle, task,
+                       lambda rel, k: jax.random.uniform(k, rel.shape) >= 0.8)
+    ideal = _eval_masked(bundle, task, lambda rel, k: rel)  # keep relevant
+    full = _eval_masked(bundle, task, lambda rel, k: jnp.ones_like(rel))
+    rows.append(("fig3b_det_mask80", time.time() - t0,
+                 f"random={rnd:.3f};ideal={ideal:.3f};full={full:.3f};"
+                 f"ideal_vs_full={(ideal-full)/max(full,1e-6)*100:+.1f}%"))
+    return rows

@@ -1,0 +1,204 @@
+"""§Perf hillclimb harness: hypothesis → change → re-lower → measure.
+
+Runs named variants of a single (arch × shape) cell on the single-pod mesh
+and prints the three roofline terms before/after, appending structured
+records to results/perf_iters.jsonl.
+
+    PYTHONPATH=src:. python -m benchmarks.perf_iter \
+        --arch qwen2-vl-7b --shape prefill_32k \
+        --variants baseline,attn_batch_over_model
+
+Variants (composable with +, e.g. ``mb4+remat_dots``):
+  baseline              the sharding/remat the dry-run table used
+  mb4 / mb8             gradient-accumulation microbatching (train)
+  remat_dots            save matmul outputs instead of full recompute
+  ce16 / ce32           finer CE chunking
+  attn_batch_over_model replicated-attention archs: re-shard the batch over
+                        ("data","model") for the whole step — the model axis
+                        stops doing redundant attention compute
+  seq_over_model        decode caches: sequence (not heads) over model
+  kv_heads_over_model   decode caches: KV heads over model when divisible
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import get_shape
+from repro.distributed import hlo_parser
+from repro.launch.dryrun import build_lowerable
+from repro.launch.mesh import make_production_mesh
+from benchmarks.roofline import PEAK_FLOPS, HBM_BW, LINK_BW, model_flops
+
+
+def _batch_over_dm(cfg, mesh, shape, b_specs):
+    """Shard the batch over (data × model): turns the model axis into extra
+    data parallelism for archs whose attention can't TP-shard."""
+    def fix(spec):
+        parts = list(spec)
+        if parts and parts[0] is not None:
+            parts[0] = ("data", "model")
+        elif parts:
+            parts[0] = ("data", "model")
+        return P(*parts)
+    return jax.tree.map(fix, b_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _cache_seq_over_model(cfg, mesh, shape, c_specs):
+    def fix(spec):
+        parts = list(spec)
+        if len(parts) >= 5:     # attention kv
+            parts[2], parts[3] = "model", None
+        return P(*parts)
+    return jax.tree.map(fix, c_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def _cache_kv_heads_over_model(cfg, mesh, shape, c_specs):
+    def fix(spec):
+        parts = list(spec)
+        if len(parts) >= 5 and cfg.num_kv_heads % mesh.shape["model"] == 0:
+            parts[2], parts[3] = None, "model"
+        return P(*parts)
+    return jax.tree.map(fix, c_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def _pure_dp(cfg, mesh, p_shape, p_specs):
+    """Replicate ALL params (no TP) — for small models the model axis is
+    better spent as extra data parallelism than as TP with tiny shards."""
+    return jax.tree.map(lambda s: P(*([None] * len(s))), p_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _attn_flat_tp(cfg, mesh, p_shape, p_specs):
+    """Shard attention projections on the FLAT head dim even when the head
+    count doesn't divide the model axis (GSPMD reshards around the
+    (B,S,H,hd) reshape); measures whether uneven head TP beats replication."""
+    def fix(path, spec):
+        name = "/".join(str(getattr(x, "key", getattr(x, "idx", "")))
+                        for x in path)
+        last = name.rsplit("/", 1)[-1]
+        if last in ("wq", "wk", "wv"):
+            return P(None, None, "model")
+        if last == "wo":
+            return P(None, "model", None)
+        return spec
+    return jax.tree_util.tree_map_with_path(
+        fix, p_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def _moe_ep_pad(cfg, mesh, p_shape, p_specs):
+    """Force expert parallelism even when num_experts % 16 != 0 (GSPMD pads
+    the expert dim); dispatch becomes all-to-all instead of all-reducing the
+    full (E, C, d) buffer across the TP axis."""
+    def fix(path, spec):
+        name = "/".join(str(getattr(x, "key", getattr(x, "idx", ""))) for x in path)
+        if "ffn" in name and name.rsplit("/", 1)[-1] in ("wg", "wu", "wd") \
+                and "shared" not in name:
+            nd = len(spec)
+            if nd == 4:          # (n_super, E, a, b)
+                return P(None, "model", None, None)
+        return spec
+    return jax.tree_util.tree_map_with_path(
+        fix, p_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    "mb4": {"microbatches": 4},
+    "mb8": {"microbatches": 8},
+    "remat_dots": {"remat_policy": "dots"},
+    "ce16": {"ce_chunks": 16},
+    "ce32": {"ce_chunks": 32},
+    "attn_batch_over_model": {"batch_spec_fn": _batch_over_dm},
+    "seq_over_model": {"cache_spec_fn": _cache_seq_over_model},
+    "kv_heads_over_model": {"cache_spec_fn": _cache_kv_heads_over_model},
+    "moe_ep_pad": {"param_spec_fn": _moe_ep_pad},
+    "pure_dp": {"param_spec_fn": _pure_dp, "batch_spec_fn": _batch_over_dm},
+    "attn_flat_tp": {"param_spec_fn": _attn_flat_tp},
+    # physically pad routed experts to the mesh multiple → true EP
+    "moe_pad64": {"cfg_fn": lambda cfg: __import__("dataclasses").replace(
+        cfg, moe_num_experts=64)},
+}
+
+
+def run_variant(arch: str, shape_name: str, variant: str) -> Dict:
+    cfg = configs.get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh()
+    kwargs: Dict = {}
+    for part in variant.split("+"):
+        kwargs.update(VARIANTS[part])
+    cfg_fn = kwargs.pop("cfg_fn", None)
+    if cfg_fn:
+        cfg = cfg_fn(cfg)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        fn, arg_specs = build_lowerable(cfg, shape, mesh, **kwargs)
+        compiled = fn.lower(*arg_specs).compile()
+    a = hlo_parser.analyze(compiled.as_text())
+    mf = model_flops(arch, shape_name) / mesh.size
+    hbm = a["hbm_bytes_per_device"]
+    kregion = a.get("kernel_region_bytes_per_device", 0.0)
+    if kregion > 0:  # same kernel-substitution as the roofline table
+        from benchmarks.roofline import kernel_attention_bytes
+        hbm = hbm - kregion + kernel_attention_bytes(arch, shape_name)
+    coll = a["collectives"]["total"]
+    terms = {
+        "compute_s": a["flops_per_device"] / PEAK_FLOPS,
+        "memory_s": hbm / HBM_BW,
+        "collective_s": (coll["link_bytes"]
+                         - coll.get("kernel_link_bytes", 0.0)) / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    step = max(terms.values())
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "useful_ratio": round(mf / max(a["flops_per_device"], 1.0), 4),
+        "roofline_fraction": round((mf / step) / PEAK_FLOPS, 6),
+        "temp_gb": None,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    try:
+        rec["temp_gb"] = round(
+            compiled.memory_analysis().temp_size_in_bytes / 1e9, 2)
+    except Exception:
+        pass
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--note", default="")
+    ap.add_argument("--out", default="results/perf_iters.jsonl")
+    args = ap.parse_args()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        for v in args.variants.split(","):
+            try:
+                rec = run_variant(args.arch, args.shape, v.strip())
+                if args.note:
+                    rec["note"] = args.note
+                print(json.dumps(rec))
+            except Exception as e:
+                rec = {"arch": args.arch, "shape": args.shape, "variant": v,
+                       "error": f"{type(e).__name__}: {e}"}
+                print(json.dumps(rec))
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Re-run the HLO analysis over saved (gzipped) partitioned modules and
+rewrite the ``analysis`` field of results/dryrun.jsonl — lets parser fixes
+and §Perf accounting iterations proceed without recompiling 68 cells.
+
+    PYTHONPATH=src:. python -m benchmarks.reanalyze
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import os
+import sys
+
+from repro.distributed import hlo_parser
+
+
+def main(path: str = "results/dryrun.jsonl"):
+    out = []
+    n = 0
+    with open(path) as f:
+        for line in f:
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            hp = rec.get("hlo_path")
+            if hp and os.path.exists(hp):
+                with gzip.open(hp, "rt") as g:
+                    rec["analysis"] = hlo_parser.analyze(g.read())
+                n += 1
+            out.append(rec)
+    with open(path, "w") as f:
+        for rec in out:
+            f.write(json.dumps(rec) + "\n")
+    print(f"re-analysed {n}/{len(out)} records")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl")

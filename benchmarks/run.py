@@ -1,0 +1,81 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Scale via
+``REPRO_BENCH_SCALE`` ∈ {"ci" (default), "full"}.  The roofline summary reads
+``results/dryrun.jsonl`` if the multi-pod dry-run has been executed.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+MODULES = ("fig2_onboard", "fig3_redundancy", "fig4_connectivity",
+           "fig9_overall", "fig10_offload", "fig11_progressive",
+           "fig12_multiscale")
+
+
+def run_one(name: str) -> None:
+    """Run a single figure module inline (invoked per-subprocess: XLA:CPU's
+    JIT code cache exhausts after many compilations in one process)."""
+    import importlib
+    from benchmarks.common import get_bundle, csv_row
+    bundle = get_bundle()
+    mod = importlib.import_module(f"benchmarks.{name}")
+    t0 = time.time()
+    try:
+        for row in mod.run(bundle):
+            print(csv_row(*row), flush=True)
+    except Exception as e:  # pragma: no cover
+        print(csv_row(f"{name}_ERROR", time.time() - t0,
+                      f"{type(e).__name__}:{e}"), flush=True)
+
+
+def main() -> None:
+    t_all = time.time()
+    if len(sys.argv) > 2 and sys.argv[1] == "--module":
+        run_one(sys.argv[2])
+        return
+    from benchmarks.common import get_bundle, csv_row
+
+    get_bundle()  # train + cache once; subprocesses reload from disk
+    print("name,us_per_call,derived")
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src:."
+    for name in MODULES:
+        t0 = time.time()
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--module", name],
+            capture_output=True, text=True, env=env)
+        out = proc.stdout.strip()
+        if out:
+            print(out, flush=True)
+        if proc.returncode != 0:
+            print(csv_row(f"{name}_SUBPROC_ERROR", time.time() - t0,
+                          proc.stderr.strip()[-200:].replace("\n", " ")),
+                  flush=True)
+
+    # roofline summary (from the dry-run artifact, if present)
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_rows("results/dryrun.jsonl", "16x16")
+        for r in rows:
+            print(csv_row(
+                f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                f"compute={r['compute_s']*1e3:.2f}ms;"
+                f"memory={r['memory_s']*1e3:.2f}ms;"
+                f"collective={r['collective_s']*1e3:.2f}ms;"
+                f"bottleneck={r['dominant']};"
+                f"frac={r['roofline_fraction']*100:.1f}%"), flush=True)
+    except FileNotFoundError:
+        print(csv_row("roofline_SKIPPED", 0.0,
+                      "run repro.launch.dryrun first"), flush=True)
+
+    print(csv_row("total_wall", time.time() - t_all, "benchmarks complete"),
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""SpaceVerse reproduction: satellite-ground synergistic LVLM inference
+(ACM MM'25) as a production-grade JAX/TPU framework."""

@@ -1,0 +1,4 @@
+"""Baselines from §4.1.5: satellite-only, GS-only, Tabi, AI-RG."""
+from repro.baselines.static import SatelliteOnly, GSOnly  # noqa: F401
+from repro.baselines.tabi import Tabi  # noqa: F401
+from repro.baselines.airg import AIRG  # noqa: F401

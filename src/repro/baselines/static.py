@@ -1,0 +1,103 @@
+"""Status-quo baselines (§4.1.5): satellite-only and GS-only.
+
+GS-only optionally applies the naive random-masking redundancy reduction used
+in the Fig. 3 / Fig. 12 studies.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eo_adapter as EO
+from repro.core import preprocess as PP
+from repro.core.cascade import TierModel, CascadeConfig
+from repro.core.latency import LatencyModel, DEFAULT_LINK
+from repro.core.similarity import task_simi
+from repro.data import synthetic
+from repro.network.link import LinkModel
+
+
+def _eval_loop(run_batch, task, data, batch_size=32):
+    n = data["images"].shape[0]
+    outs = []
+    for i in range(0, n, batch_size):
+        sl = slice(i, min(i + batch_size, n))
+        outs.append(run_batch(jnp.asarray(data["images"][sl]),
+                              jnp.asarray(data["prompts"][sl])))
+    pred = np.concatenate([np.asarray(o["pred"]) for o in outs])
+    lat = np.concatenate([o["latency_s"] for o in outs])
+    label = (data["region_rel"] if task == "det" else data["labels"])[:n]
+    simi = np.asarray(task_simi(task, jnp.asarray(pred), jnp.asarray(label)))
+    out = {"performance": float(simi.mean()), "latency_s": float(lat.mean()),
+           "per_sample_latency": lat, "per_sample_simi": simi}
+    if "offload" in outs[0]:
+        out["offload_rate"] = float(np.concatenate(
+            [o["offload"] for o in outs]).mean())
+    return out
+
+
+class SatelliteOnly:
+    """Everything runs on the compact onboard model."""
+
+    def __init__(self, sat: TierModel, adapter_cfg: EO.EOAdapterConfig,
+                 cc: CascadeConfig = CascadeConfig(),
+                 latency: LatencyModel = LatencyModel()):
+        self.sat, self.ac, self.cc, self.lat = sat, adapter_cfg, cc, latency
+
+    def run_batch(self, images, prompts, task: str):
+        toks, _ = EO.generate(self.sat.params, self.sat.cfg, self.ac, task,
+                              images, prompts, self.cc.answer_vocab)
+        pred = EO.prediction_from_tokens(task, toks)
+        l_ans = self.ac.answer_len(task)
+        lat = (self.lat.sat_encode_s() + self.lat.sat_prefill_s()
+               + self.lat.sat_decode_s(l_ans))
+        return {"pred": pred,
+                "latency_s": np.full((images.shape[0],), lat)}
+
+    def evaluate(self, task, data, batch_size=32):
+        return _eval_loop(lambda im, pr: self.run_batch(im, pr, task),
+                          task, data, batch_size)
+
+
+class GSOnly:
+    """Everything offloads; raw images transit the link (optionally with the
+    naive random-masking reduction at ``keep_frac``)."""
+
+    def __init__(self, gs: TierModel, adapter_cfg: EO.EOAdapterConfig,
+                 cc: CascadeConfig = CascadeConfig(),
+                 latency: LatencyModel = LatencyModel(),
+                 link: LinkModel = DEFAULT_LINK,
+                 keep_frac: Optional[float] = None, seed: int = 0):
+        self.gs, self.ac, self.cc = gs, adapter_cfg, cc
+        self.lat, self.link = latency, link
+        self.keep_frac = keep_frac
+        self.key = jax.random.PRNGKey(seed)
+
+    def run_batch(self, images, prompts, task: str):
+        b = images.shape[0]
+        full_bytes = self.lat.full_bytes(task)
+        if self.keep_frac is not None and self.keep_frac < 1.0:
+            regions = synthetic.regions_of(images, self.ac.grid)
+            self.key, sub = jax.random.split(self.key)
+            filt, txb, meta = PP.random_mask_filter(regions, self.keep_frac,
+                                                    sub)
+            images = synthetic.assemble(filt, self.ac.grid)
+            frac = np.asarray(meta["kept"]).mean(-1)
+        else:
+            frac = np.ones((b,))
+        toks, _ = EO.generate(self.gs.params, self.gs.cfg, self.ac, task,
+                              images, prompts, self.cc.answer_vocab)
+        pred = EO.prediction_from_tokens(task, toks)
+        l_ans = self.ac.answer_len(task)
+        tx = np.array([self.lat.tx_s(self.link, full_bytes * f)
+                       for f in frac])
+        gs_s = np.asarray(self.lat.gs_infer_s(l_ans, frac))
+        return {"pred": pred, "latency_s": tx + gs_s,
+                "offload": np.ones((b,), bool)}
+
+    def evaluate(self, task, data, batch_size=32):
+        return _eval_loop(lambda im, pr: self.run_batch(im, pr, task),
+                          task, data, batch_size)

@@ -1,0 +1,62 @@
+"""Config registry: ``get_config(name)`` / ``list_configs()``.
+
+One module per assigned architecture (exact public-literature dims), plus the
+paper's own satellite/ground pair.  ``get_config(name, reduced=True)`` returns
+the same-family smoke-test scale.
+"""
+from repro.configs.base import ArchConfig, BlockSpec, reduced_config  # noqa: F401
+from repro.configs import shapes  # noqa: F401
+
+from repro.configs.gemma3_1b import CONFIG as _gemma3_1b
+from repro.configs.codeqwen15_7b import CONFIG as _codeqwen15_7b
+from repro.configs.gemma2_27b import CONFIG as _gemma2_27b
+from repro.configs.glm4_9b import CONFIG as _glm4_9b
+from repro.configs.xlstm_125m import CONFIG as _xlstm_125m
+from repro.configs.hymba_1_5b import CONFIG as _hymba_1_5b
+from repro.configs.qwen2_vl_7b import CONFIG as _qwen2_vl_7b
+from repro.configs.phi35_moe import CONFIG as _phi35_moe
+from repro.configs.qwen2_moe import CONFIG as _qwen2_moe
+from repro.configs.musicgen_medium import CONFIG as _musicgen_medium
+from repro.configs.spaceverse_pair import SAT_CONFIG as _qwen2_vl_2b
+
+_REGISTRY = {
+    c.name: c
+    for c in (
+        _gemma3_1b,
+        _codeqwen15_7b,
+        _gemma2_27b,
+        _glm4_9b,
+        _xlstm_125m,
+        _hymba_1_5b,
+        _qwen2_vl_7b,
+        _phi35_moe,
+        _qwen2_moe,
+        _musicgen_medium,
+        _qwen2_vl_2b,
+    )
+}
+
+# The ten assigned architectures (the 2B satellite model is extra).
+ASSIGNED = (
+    "gemma3-1b",
+    "codeqwen1.5-7b",
+    "gemma2-27b",
+    "glm4-9b",
+    "xlstm-125m",
+    "hymba-1.5b",
+    "qwen2-vl-7b",
+    "phi3.5-moe-42b-a6.6b",
+    "qwen2-moe-a2.7b",
+    "musicgen-medium",
+)
+
+
+def list_configs():
+    return sorted(_REGISTRY)
+
+
+def get_config(name: str, reduced: bool = False) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {list_configs()}")
+    cfg = _REGISTRY[name]
+    return reduced_config(cfg) if reduced else cfg

@@ -1,0 +1,24 @@
+"""musicgen-medium — decoder-only over EnCodec tokens. [arXiv:2306.05284; hf]
+
+48L d_model=1536 24H d_ff=6144 vocab=2048 (per codebook), 4 codebooks with
+the delay-pattern interleave handled by the audio frontend stub
+(``input_specs()`` provides token codes per codebook; embeddings are summed).
+"""
+from repro.configs.base import ArchConfig, BlockSpec, ATTN
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    head_dim=64,
+    frontend="audio",
+    num_codebooks=4,
+    block_pattern=(BlockSpec(kind=ATTN),),
+    tie_embeddings=False,
+    supports_long_context=False,  # pure full attention
+)

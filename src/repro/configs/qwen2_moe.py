@@ -1,0 +1,25 @@
+"""qwen2-moe-a2.7b — 4 shared + 60 routed top-4. [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+
+24L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=151936, MoE 60e top-4.
+Shared experts are fused into one always-on SwiGLU of width 4*1408.
+"""
+from repro.configs.base import ArchConfig, BlockSpec, ATTN
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151_936,
+    head_dim=128,
+    moe_num_experts=60,
+    moe_top_k=4,
+    moe_num_shared=4,
+    moe_d_ff=1408,
+    block_pattern=(BlockSpec(kind=ATTN, moe=True),),
+    tie_embeddings=False,
+    supports_long_context=False,  # pure full attention
+)

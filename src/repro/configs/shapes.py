@@ -1,0 +1,54 @@
+"""Assigned input-shape set for every LM-family architecture.
+
+Each architecture is paired with four shapes; ``decode_*``/``long_*`` lower
+``serve_step`` (one new token against a KV cache of ``seq_len``), not
+``train_step``.  ``long_500k`` requires sub-quadratic / window-bounded
+attention — archs with ``supports_long_context=False`` skip it (documented in
+DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def get_shape(name: str) -> ShapeSpec:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; have {[s.name for s in ALL_SHAPES]}")
+
+
+def shapes_for(cfg: ArchConfig) -> List[ShapeSpec]:
+    """The live (arch x shape) cells for this architecture."""
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.supports_long_context:
+        out.append(LONG_500K)
+    return out
+
+
+def smoke_shape(kind: str) -> ShapeSpec:
+    """Reduced shape for CPU smoke tests."""
+    return {
+        "train": ShapeSpec("smoke_train", 64, 2, "train"),
+        "prefill": ShapeSpec("smoke_prefill", 64, 2, "prefill"),
+        "decode": ShapeSpec("smoke_decode", 64, 2, "decode"),
+    }[kind]

@@ -1,0 +1,12 @@
+"""SpaceVerse core: the paper's contribution as composable JAX modules.
+
+- ``confidence``        progressive confidence network g̃ (§3.1)
+- ``region_attention``  Eq. (2) text-image region scoring (kernel-backed)
+- ``preprocess``        Eq. (3) multi-scale filter + byte accounting
+- ``cascade``           Algorithm 1 orchestrator (two-tier inference)
+- ``eo_adapter``        LVLM task protocol for EO tasks
+- ``similarity``        Simi metrics + confidence targets
+- ``latency``           paper-calibrated deployment latency model
+"""
+from repro.core import (cascade, confidence, eo_adapter, latency,  # noqa: F401
+                        preprocess, region_attention, similarity)

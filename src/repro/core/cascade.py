@@ -1,0 +1,208 @@
+"""SpaceVerse cascade orchestrator — Algorithm 1.
+
+Per input (x_k, T_k):
+ 1. encode regions V(x_k) and prompt E(T_k) with the onboard model W^s;
+ 2. progressive confidence: stage 1 from pooled V(x) alone; stages i>1 after
+    each additional chunk of N_t generated tokens; a score below τ_i aborts
+    onboard decoding and offloads;
+ 3. offloaded samples pass Eq. (2) region scoring + Eq. (3) multi-scale
+    preprocessing, transit the simulated link, and are answered by W^g;
+ 4. surviving samples answer onboard.
+
+Accuracy comes from the really-executed proxy models; per-sample latency from
+``LatencyModel`` evaluated at the paper's deployment pair (DESIGN.md §7).
+The whole batch path is vectorised — decisions are boolean masks, so both
+branches are computed and the latency ledger charges each sample only for the
+branch it actually took (the physical system runs one branch; the simulator
+runs both to know the counterfactual).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import confidence as C
+from repro.core import eo_adapter as EO
+from repro.core import preprocess as PP
+from repro.core import region_attention as RA
+from repro.core.latency import LatencyModel, DEFAULT_LINK
+from repro.core.similarity import task_simi
+from repro.data import synthetic
+from repro.network.link import LinkModel
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeConfig:
+    taus: Tuple[float, ...] = (0.5, 0.4)      # τ_1..τ_I (paper §4.1.4)
+    alpha: float = 0.35
+    beta: float = 0.55
+    n_t: int = 8                               # tokens per progressive chunk
+    answer_vocab: int = 64
+
+
+@dataclasses.dataclass
+class TierModel:
+    params: Params
+    cfg: ArchConfig
+
+
+class SpaceVerse:
+    """Two-tier cascade with progressive confidence + multi-scale preprocess."""
+
+    def __init__(self, sat: TierModel, gs: TierModel,
+                 adapter_cfg: EO.EOAdapterConfig, conf_params: Params,
+                 cascade_cfg: CascadeConfig = CascadeConfig(),
+                 latency: LatencyModel = LatencyModel(),
+                 link: LinkModel = DEFAULT_LINK):
+        self.sat = sat
+        self.gs = gs
+        self.adapter_cfg = adapter_cfg
+        self.conf = conf_params
+        self.cc = cascade_cfg
+        self.lat = latency
+        self.link = link
+
+    # ------------------------------------------------------------------
+    def _stage_plan(self, task: str) -> Sequence[int]:
+        """Token counts decoded before confidence stages 2..I (the last stage
+        always sees the complete output)."""
+        l_ans = self.adapter_cfg.answer_len(task)
+        n_stages = C.num_stages(self.conf)
+        if n_stages <= 1:
+            return []
+        chunks = []
+        done = 0
+        for i in range(n_stages - 2):
+            c = min(self.cc.n_t, l_ans - done)
+            chunks.append(max(c, 0))
+            done += c
+        chunks.append(max(l_ans - done, 0))   # final stage: complete output
+        return chunks
+
+    # ------------------------------------------------------------------
+    def run_batch(self, task: str, images: jax.Array, prompts: jax.Array
+                  ) -> Dict[str, Any]:
+        ac, cc, lat = self.adapter_cfg, self.cc, self.lat
+        b = images.shape[0]
+        l_ans = ac.answer_len(task)
+
+        # --- onboard encoders (V, E) --------------------------------------
+        region_feats = EO.encode_regions(self.sat.params, ac, images)  # (B,R,d)
+        text_feats = EO.encode_text(self.sat.params, self.sat.cfg,
+                                    ac.prompt_token(task, prompts))    # (B,1,d)
+        visual_pooled = region_feats.astype(jnp.float32).mean(axis=1)
+
+        # --- progressive confidence + chunked onboard decode ---------------
+        scores = [C.apply_stage(self.conf, 0, visual_pooled)]
+        offload = scores[0] < cc.taus[0]              # aborted before decode
+        exit_stage = jnp.where(offload, 0, -1)        # -1 = still running
+
+        logits, cache, idx = EO.prefill_prompt(
+            self.sat.params, self.sat.cfg, ac, task, images, prompts, l_ans)
+        toks_all, probs_all = [], []
+        decoded = 0
+        for si, n_tok in enumerate(self._stage_plan(task)):
+            if n_tok > 0:
+                toks, probs, cache, logits, idx = EO.decode_chunk(
+                    self.sat.params, self.sat.cfg, cache, logits, idx, n_tok,
+                    cc.answer_vocab)
+                toks_all.append(toks)
+                probs_all.append(probs)
+                decoded += n_tok
+            gen = jnp.concatenate(toks_all, 1)
+            state = EO.token_features(self.sat.params, gen)
+            s = C.apply_stage(self.conf, si + 1, visual_pooled, state)
+            scores.append(s)
+            tau = cc.taus[min(si + 1, len(cc.taus) - 1)]
+            newly = (s < tau) & (exit_stage < 0)
+            exit_stage = jnp.where(newly, si + 1, exit_stage)
+            offload = offload | newly
+
+        sat_tokens = (jnp.concatenate(toks_all, 1) if toks_all
+                      else jnp.zeros((b, l_ans), jnp.int32))
+        sat_probs = (jnp.concatenate(probs_all, 1) if probs_all
+                     else jnp.zeros((b, l_ans, cc.answer_vocab)))
+        sat_pred = EO.prediction_from_tokens(task, sat_tokens)
+
+        # --- Eq. 2 + Eq. 3 preprocessing for offloaded samples -------------
+        regions_px = synthetic.regions_of(images, ac.grid)
+        _, norm_scores = RA.score_regions(region_feats[:, :, None, :],
+                                          text_feats)
+        filtered, tx_bytes_regions, meta = PP.multiscale_filter(
+            regions_px, norm_scores, alpha=cc.alpha, beta=cc.beta)
+        gs_images = synthetic.assemble(filtered, ac.grid)
+        kept_frac = 1.0 - meta["discarded"].mean(-1)
+
+        # scale modelled raw-image bytes by the achieved compression
+        full_bytes = lat.full_bytes(task)
+        comp = np.asarray(tx_bytes_regions) / np.maximum(
+            np.asarray(meta["full_bytes"]), 1.0)
+        tx_bytes = full_bytes * comp                              # (B,)
+
+        # --- GS inference on preprocessed images ---------------------------
+        gs_tokens, gs_probs = EO.generate(self.gs.params, self.gs.cfg, ac,
+                                          task, gs_images, prompts,
+                                          cc.answer_vocab)
+        gs_pred = EO.prediction_from_tokens(task, gs_tokens)
+
+        # --- merge ----------------------------------------------------------
+        off_np = np.asarray(offload)
+        if task == "det":
+            pred = jnp.where(offload[:, None], gs_pred, sat_pred)
+        else:
+            pred = jnp.where(offload, gs_pred, sat_pred)
+
+        # --- latency ledger --------------------------------------------------
+        plan = self._stage_plan(task)
+        lat_s = np.full((b,), lat.sat_encode_s() + lat.conf_stage_s())
+        exit_np = np.asarray(exit_stage)
+        # onboard decode cost: tokens decoded before this sample's exit
+        toks_before = np.zeros((b,))
+        for si in range(len(plan)):
+            ran_chunk = (exit_np < 0) | (exit_np >= si + 1)
+            toks_before += np.where(ran_chunk, plan[si], 0)
+        ran_prefill = exit_np != 0
+        lat_s += ran_prefill * lat.sat_prefill_s()
+        lat_s += lat.sat_decode_s(toks_before)
+        lat_s += np.maximum(exit_np, 0) * lat.conf_stage_s()
+        tx_s = np.array([lat.tx_s(self.link, byt) for byt in tx_bytes])
+        gs_s = np.asarray(lat.gs_infer_s(l_ans, np.asarray(kept_frac)))
+        lat_s += off_np * (tx_s + gs_s)
+
+        return {
+            "pred": pred, "offload": offload, "exit_stage": exit_stage,
+            "conf_scores": jnp.stack(scores, 1),
+            "sat_pred": sat_pred, "gs_pred": gs_pred,
+            "sat_probs": sat_probs, "gs_probs": gs_probs,
+            "tx_bytes": tx_bytes, "latency_s": lat_s,
+            "kept_frac": np.asarray(kept_frac),
+            "region_scores": norm_scores,
+        }
+
+    # ------------------------------------------------------------------
+    def evaluate(self, task: str, data: Dict[str, np.ndarray],
+                 batch_size: int = 32) -> Dict[str, Any]:
+        n = data["images"].shape[0]
+        outs = []
+        for i in range(0, n, batch_size):
+            sl = slice(i, min(i + batch_size, n))
+            outs.append(self.run_batch(task, jnp.asarray(data["images"][sl]),
+                                       jnp.asarray(data["prompts"][sl])))
+        pred = np.concatenate([np.asarray(o["pred"]) for o in outs])
+        lat_s = np.concatenate([o["latency_s"] for o in outs])
+        off = np.concatenate([np.asarray(o["offload"]) for o in outs])
+        label = (data["region_rel"] if task == "det" else data["labels"])[:n]
+        simi = np.asarray(task_simi(task, jnp.asarray(pred),
+                                    jnp.asarray(label)))
+        return {"performance": float(simi.mean()),
+                "latency_s": float(lat_s.mean()),
+                "offload_rate": float(off.mean()),
+                "per_sample_latency": lat_s, "per_sample_simi": simi,
+                "offload": off}

@@ -1,0 +1,111 @@
+"""Progressive confidence network g̃ (§3.1).
+
+A shared MLP trunk ``M`` with ``I`` stage-specific input projections
+``{L_i}``: stage 1 scores from pooled visual features V(x) alone (before any
+decode step); stage i>1 additionally sees the pooled hidden states of the
+(i−1)·N_t tokens generated so far.  g̃_i = [L_i; M] predicts the
+satellite↔ground output similarity; a sample whose score falls below τ_i is
+offloaded and onboard decoding is aborted (early-exit — the latency win of g
+combined with the robustness of g′, Fig. 6).
+
+Training (Eq. 1): Σ_i MSE(g̃_i(V(x), A_{i−1}), cos(ŷ^s, ŷ^g)), supervised on
+a held-out split where both tiers were run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def init_confidence(key: jax.Array, d_visual: int, d_state: int,
+                    hidden: int = 128, num_stages: int = 2) -> Params:
+    """L_1: d_visual → hidden;  L_i (i>1): d_visual + d_state → hidden;
+    trunk M: hidden → hidden → 1."""
+    ks = jax.random.split(key, num_stages + 2)
+    projs = []
+    for i in range(num_stages):
+        d_in = d_visual if i == 0 else d_visual + d_state
+        w = jax.random.normal(ks[i], (d_in, hidden)) * (d_in ** -0.5)
+        projs.append({"w": w.astype(jnp.float32),
+                      "b": jnp.zeros((hidden,), jnp.float32)})
+    m1 = jax.random.normal(ks[-2], (hidden, hidden)) * (hidden ** -0.5)
+    m2 = jax.random.normal(ks[-1], (hidden, 1)) * (hidden ** -0.5)
+    return {
+        "projs": projs,
+        "trunk": {"w1": m1.astype(jnp.float32),
+                  "b1": jnp.zeros((hidden,), jnp.float32),
+                  "w2": m2.astype(jnp.float32),
+                  "b2": jnp.zeros((1,), jnp.float32)},
+    }
+
+
+def num_stages(params: Params) -> int:
+    return len(params["projs"])
+
+
+def apply_stage(params: Params, stage: int, visual: jax.Array,
+                state: jax.Array | None = None) -> jax.Array:
+    """g̃_{stage+1}.  visual: (B, d_visual) pooled V(x); state: (B, d_state)
+    pooled hidden of the tokens generated so far (None for stage 0).
+    Returns (B,) predicted similarity in [0, 1]."""
+    x = visual.astype(jnp.float32)
+    if stage > 0:
+        assert state is not None, "stage>0 needs generated-token features"
+        x = jnp.concatenate([x, state.astype(jnp.float32)], axis=-1)
+    p = params["projs"][stage]
+    h = jax.nn.relu(x @ p["w"] + p["b"])
+    t = params["trunk"]
+    h = jax.nn.relu(h @ t["w1"] + t["b1"])
+    return jax.nn.sigmoid((h @ t["w2"] + t["b2"])[..., 0])
+
+
+def loss_fn(params: Params, visual: jax.Array,
+            states: Sequence[jax.Array], target: jax.Array) -> jax.Array:
+    """Eq. (1): Σ_i MSE(g̃_i(·), cos-sim target).  states[i] is the pooled
+    token features available to stage i+1 (len = num_stages − 1)."""
+    total = jnp.mean((apply_stage(params, 0, visual) - target) ** 2)
+    for i, st in enumerate(states):
+        pred = apply_stage(params, i + 1, visual, st)
+        total = total + jnp.mean((pred - target) ** 2)
+    return total
+
+
+def train_confidence(params: Params, visual: jax.Array,
+                     states: Sequence[jax.Array], target: jax.Array, *,
+                     steps: int = 300, lr: float = 1e-2,
+                     batch: int = 64, seed: int = 0
+                     ) -> Tuple[Params, List[float]]:
+    """Adam on Eq. (1) over a small supervision split (paper: 5% of train)."""
+    n = visual.shape[0]
+    opt = {"m": jax.tree.map(jnp.zeros_like, params),
+           "v": jax.tree.map(jnp.zeros_like, params)}
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def step(params, opt, idx, t):
+        vis = visual[idx]
+        sts = [s[idx] for s in states]
+        tgt = target[idx]
+        loss, grads = jax.value_and_grad(loss_fn)(params, vis, sts, tgt)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"],
+                         grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+        params = jax.tree.map(
+            lambda p, mh_, vh_: p - lr * mh_ / (jnp.sqrt(vh_) + eps),
+            params, mh, vh)
+        return params, {"m": m, "v": v}, loss
+
+    losses = []
+    for t in range(1, steps + 1):
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (min(batch, n),), 0, n)
+        params, opt, loss = step(params, opt, idx, jnp.float32(t))
+        losses.append(float(loss))
+    return params, losses

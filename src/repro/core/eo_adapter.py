@@ -1,0 +1,199 @@
+"""EO task adapter: wraps a backbone into the paper's LVLM task protocol.
+
+The satellite/GS LVLMs answer Earth-observation prompts autoregressively over
+a shared sequence layout:
+
+    [ R region tokens | prompt token | answer tokens ]
+
+- region tokens: one visual token per image region — a learned linear patch
+  projector over raw region pixels (the stubbed "visual encoder V"),
+- prompt token: task/class id embedded with the backbone's token table (the
+  "text encoder E" — same feature space as V, exactly as §3.2.2 requires),
+- answers: VQA → 1 yes/no token; classification → 1 class token;
+  detection → N_r per-region yes/no tokens (multi-token, which is what the
+  progressive confidence stages chunk over).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data import synthetic
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+YES, NO = 1, 0  # answer token ids
+
+
+@dataclasses.dataclass(frozen=True)
+class EOAdapterConfig:
+    grid: int = 4                       # N_r = grid² regions
+    image_size: int = 64
+    channels: int = 3
+    num_classes: int = 8
+
+    @property
+    def n_regions(self) -> int:
+        return self.grid * self.grid
+
+    @property
+    def patch_dim(self) -> int:
+        side = self.image_size // self.grid
+        return side * side * self.channels
+
+    def answer_len(self, task: str) -> int:
+        return self.n_regions if task == "det" else 1
+
+    def prompt_token(self, task: str, prompts: jax.Array) -> jax.Array:
+        """Disjoint prompt-id ranges per task (T_k must identify the task):
+        vqa → [0, C); cls → C; det → [C+1, 2C+1)."""
+        c = self.num_classes
+        p = prompts.astype(jnp.int32)
+        if task == "vqa":
+            return p
+        if task == "cls":
+            return jnp.full_like(p, c)
+        if task == "det":
+            return c + 1 + p
+        raise ValueError(task)
+
+
+def init_adapter(key: jax.Array, backbone_cfg: ArchConfig,
+                 adapter_cfg: EOAdapterConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (adapter_cfg.patch_dim, backbone_cfg.d_model))
+    return {
+        "backbone": T.init_params(backbone_cfg, k2),
+        "patch_proj": (w * adapter_cfg.patch_dim ** -0.5).astype(
+            jnp.dtype(backbone_cfg.dtype)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoders (the paper's V and E)
+# ---------------------------------------------------------------------------
+
+def encode_regions(params: Params, adapter_cfg: EOAdapterConfig,
+                   images: jax.Array) -> jax.Array:
+    """V(x^r): (B, H, W, C) → (B, R, d) one visual token per region."""
+    regions = synthetic.regions_of(images, adapter_cfg.grid)
+    b, r = regions.shape[:2]
+    flat = regions.reshape(b, r, -1).astype(params["patch_proj"].dtype)
+    return flat @ params["patch_proj"]
+
+
+def encode_text(params: Params, backbone_cfg: ArchConfig,
+                prompt_tokens: jax.Array) -> jax.Array:
+    """E(T): (B,) prompt ids → (B, 1, d) text features."""
+    tok = params["backbone"]["embed"]["tok"]
+    return jnp.take(tok, prompt_tokens, axis=0)[:, None, :]
+
+
+def token_features(params: Params, tokens: jax.Array) -> jax.Array:
+    """Pooled embedding of generated tokens A_i: (B, L) ids → (B, d)."""
+    tok = params["backbone"]["embed"]["tok"]
+    return jnp.take(tok, tokens, axis=0).astype(jnp.float32).mean(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Training batches
+# ---------------------------------------------------------------------------
+
+def build_batch(params: Params, backbone_cfg: ArchConfig,
+                adapter_cfg: EOAdapterConfig, task: str,
+                images: jax.Array, prompts: jax.Array,
+                answers: jax.Array) -> Dict[str, jax.Array]:
+    """answers: (B, L_ans) int32 — supervised answer tokens."""
+    b = images.shape[0]
+    r = adapter_cfg.n_regions
+    l_ans = answers.shape[1]
+    patch_embeds = encode_regions(params, adapter_cfg, images)
+    prompt = adapter_cfg.prompt_token(task, prompts)[:, None]
+    # input text tokens: [prompt, ans_0 .. ans_{L-2}] — teacher forcing
+    tokens = jnp.concatenate([prompt, answers[:, :-1]], axis=1)
+    s_total = r + 1 + (l_ans - 1)
+    targets = jnp.zeros((b, s_total), jnp.int32)
+    mask = jnp.zeros((b, s_total), jnp.float32)
+    targets = jax.lax.dynamic_update_slice(targets, answers, (0, r))
+    mask = jax.lax.dynamic_update_slice(mask, jnp.ones_like(answers,
+                                                            jnp.float32),
+                                        (0, r))
+    return {"tokens": tokens, "patch_embeds": patch_embeds,
+            "targets": targets, "loss_mask": mask}
+
+
+def answers_from_labels(adapter_cfg: EOAdapterConfig, task: str,
+                        labels: jax.Array,
+                        region_rel: Optional[jax.Array] = None) -> jax.Array:
+    if task == "vqa":
+        return labels[:, None].astype(jnp.int32)           # 0/1
+    if task == "cls":
+        return labels[:, None].astype(jnp.int32)           # class id
+    if task == "det":
+        assert region_rel is not None
+        return region_rel.astype(jnp.int32)                # (B, R) 0/1
+    raise ValueError(task)
+
+
+# ---------------------------------------------------------------------------
+# Inference: chunked greedy generation (the progressive-confidence substrate)
+# ---------------------------------------------------------------------------
+
+def prefill_prompt(params: Params, backbone_cfg: ArchConfig,
+                   adapter_cfg: EOAdapterConfig, task: str,
+                   images: jax.Array, prompts: jax.Array,
+                   extra_len: int) -> Tuple[jax.Array, Tuple, jax.Array]:
+    """Prefill [regions | prompt]; cache sized for the answer."""
+    patch_embeds = encode_regions(params, adapter_cfg, images)
+    prompt = adapter_cfg.prompt_token(task, prompts)[:, None]
+    inputs = {"tokens": prompt, "patch_embeds": patch_embeds}
+    max_len = adapter_cfg.n_regions + 1 + extra_len
+    return T.prefill(params["backbone"], backbone_cfg, inputs, max_len)
+
+
+def decode_chunk(params: Params, backbone_cfg: ArchConfig, cache: Tuple,
+                 first_logits: jax.Array, index: jax.Array, n_tokens: int,
+                 answer_vocab: int
+                 ) -> Tuple[jax.Array, jax.Array, Tuple, jax.Array, jax.Array]:
+    """Greedy-decode ``n_tokens`` answer tokens restricted to the answer
+    vocabulary. Returns (tokens (B,n), probs (B,n,V_ans), cache, last_logits,
+    next_index)."""
+    b = first_logits.shape[0]
+    toks, probs = [], []
+    logits = first_logits
+    for _ in range(n_tokens):
+        a_logits = logits[:, :answer_vocab]
+        p = jax.nn.softmax(a_logits, axis=-1)
+        nxt = jnp.argmax(a_logits, axis=-1).astype(jnp.int32)
+        toks.append(nxt)
+        probs.append(p)
+        logits, cache = T.decode_step(
+            params["backbone"], backbone_cfg, cache,
+            {"tokens": nxt[:, None]}, index)
+        index = index + 1
+    return (jnp.stack(toks, 1), jnp.stack(probs, 1), cache, logits, index)
+
+
+def generate(params: Params, backbone_cfg: ArchConfig,
+             adapter_cfg: EOAdapterConfig, task: str, images: jax.Array,
+             prompts: jax.Array, answer_vocab: int
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Full greedy answer: returns (tokens (B, L_ans), probs (B, L_ans, V))."""
+    l_ans = adapter_cfg.answer_len(task)
+    logits, cache, idx = prefill_prompt(params, backbone_cfg, adapter_cfg,
+                                        task, images, prompts, l_ans)
+    toks, probs, *_ = decode_chunk(params, backbone_cfg, cache, logits, idx,
+                                   l_ans, answer_vocab)
+    return toks, probs
+
+
+def prediction_from_tokens(task: str, tokens: jax.Array) -> jax.Array:
+    """tokens (B, L_ans) → task prediction (label id or region mask)."""
+    if task in ("vqa", "cls"):
+        return tokens[:, 0]
+    return tokens  # det: (B, R) 0/1 mask

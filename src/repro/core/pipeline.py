@@ -1,0 +1,232 @@
+"""End-to-end system assembly: train the two proxy LVLM tiers on synthetic
+EO tasks, supervise the progressive confidence network on a small split
+(paper: 5 % of train), and assemble SpaceVerse + all baselines.
+
+This is the substrate for the Fig. 9–12 benchmarks, the examples, and the
+integration tests.  Proxy scale keeps CPU runtimes sane; the latency ledger
+is evaluated at deployment scale by ``LatencyModel`` (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.configs.spaceverse_pair import proxy_pair
+from repro.core import confidence as C
+from repro.core import eo_adapter as EO
+from repro.core.cascade import CascadeConfig, SpaceVerse, TierModel
+from repro.core.latency import LatencyModel
+from repro.core.similarity import output_similarity
+from repro.data import synthetic
+from repro.train import optimizer as O
+from repro.train import trainer as TR
+
+TASKS = ("vqa", "cls", "det")
+
+
+@dataclasses.dataclass
+class SystemBundle:
+    sat: TierModel
+    gs: TierModel
+    adapter_cfg: EO.EOAdapterConfig
+    conf_params: Any
+    cascade_cfg: CascadeConfig
+    latency: LatencyModel
+    datasets: Dict[str, Dict[str, np.ndarray]]       # task → test data
+    train_datasets: Dict[str, Dict[str, np.ndarray]]
+    history: Dict[str, Any]
+
+    def spaceverse(self, **overrides) -> SpaceVerse:
+        cc = dataclasses.replace(self.cascade_cfg, **overrides) \
+            if overrides else self.cascade_cfg
+        return SpaceVerse(self.sat, self.gs, self.adapter_cfg,
+                          self.conf_params, cc, self.latency)
+
+
+# ---------------------------------------------------------------------------
+# Proxy LVLM training
+# ---------------------------------------------------------------------------
+
+def _task_batch(adapter_cfg: EO.EOAdapterConfig, task: str,
+                data: Dict[str, np.ndarray], idx: np.ndarray,
+                dtype) -> Dict[str, jnp.ndarray]:
+    """Teacher-forced batch with raw region pixels (projector trains e2e)."""
+    images = jnp.asarray(data["images"][idx])
+    prompts = jnp.asarray(data["prompts"][idx])
+    answers = EO.answers_from_labels(adapter_cfg, task,
+                                     jnp.asarray(data["labels"][idx]),
+                                     jnp.asarray(data["region_rel"][idx]))
+    regions = synthetic.regions_of(images, adapter_cfg.grid)
+    b, r = regions.shape[:2]
+    raw = regions.reshape(b, r, -1).astype(dtype)
+    prompt = adapter_cfg.prompt_token(task, prompts)[:, None]
+    l_ans = answers.shape[1]
+    tokens = jnp.concatenate([prompt, answers[:, :-1]], axis=1)
+    s_total = r + 1 + (l_ans - 1)
+    targets = jnp.zeros((b, s_total), jnp.int32)
+    mask = jnp.zeros((b, s_total), jnp.float32)
+    targets = jax.lax.dynamic_update_slice(targets, answers, (0, r))
+    mask = jax.lax.dynamic_update_slice(
+        mask, jnp.ones_like(answers, jnp.float32), (0, r))
+    return {"tokens": tokens, "raw_regions": raw,
+            "targets": targets, "loss_mask": mask}
+
+
+def train_proxy(backbone_cfg: ArchConfig, adapter_cfg: EO.EOAdapterConfig,
+                train_data: Dict[str, Dict[str, np.ndarray]], *,
+                steps: int = 300, batch_size: int = 16, lr: float = 3e-3,
+                region_dropout: float = 0.2, seed: int = 0
+                ) -> Tuple[Dict, List[float]]:
+    """Multi-task training of one tier (patch projector + backbone).
+
+    ``region_dropout`` randomly zeroes regions during training so inference
+    on Eq. 3-filtered (partially masked/downsampled) images is
+    in-distribution — the robustness the paper's pretrained LVLMs have."""
+    key = jax.random.PRNGKey(seed)
+    k_init, key = jax.random.split(key)
+    params = EO.init_adapter(k_init, backbone_cfg, adapter_cfg)
+    opt_cfg = O.OptConfig(lr=lr, warmup_steps=max(steps // 20, 5),
+                          total_steps=steps, weight_decay=0.0)
+    opt_state = O.init_opt_state(params)
+
+    from repro.models import transformer as T
+
+    def loss_fn(params, batch):
+        model_batch = {k: v for k, v in batch.items() if k != "raw_regions"}
+        model_batch["patch_embeds"] = (
+            batch["raw_regions"] @ params["patch_proj"])
+        return T.loss_fn(params["backbone"], backbone_cfg, model_batch,
+                         remat=False)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, stats = O.apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+        return params, opt_state, loss
+
+    losses = []
+    tasks = [t for t in TASKS if t in train_data]
+    dtype = params["patch_proj"].dtype
+    for s in range(steps):
+        task = tasks[s % len(tasks)]
+        key, sub, kd = jax.random.split(key, 3)
+        n = train_data[task]["images"].shape[0]
+        idx = np.asarray(jax.random.permutation(sub, n)[:batch_size])
+        batch = _task_batch(adapter_cfg, task, train_data[task], idx, dtype)
+        if region_dropout > 0:
+            keep = jax.random.uniform(
+                kd, batch["raw_regions"].shape[:2]) >= region_dropout
+            batch["raw_regions"] = batch["raw_regions"] * \
+                keep[..., None].astype(dtype)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Confidence-net supervision (§3.1.4)
+# ---------------------------------------------------------------------------
+
+def build_confidence_data(sat: TierModel, gs: TierModel,
+                          adapter_cfg: EO.EOAdapterConfig,
+                          data: Dict[str, np.ndarray], task: str,
+                          answer_vocab: int, batch_size: int = 32):
+    """Run both tiers on the supervision split; target = cos(ŷ^s, ŷ^g)."""
+    n = data["images"].shape[0]
+    vis, states, tgts = [], [], []
+    for i in range(0, n, batch_size):
+        sl = slice(i, min(i + batch_size, n))
+        images = jnp.asarray(data["images"][sl])
+        prompts = jnp.asarray(data["prompts"][sl])
+        rf = EO.encode_regions(sat.params, adapter_cfg, images)
+        vis.append(np.asarray(rf.astype(jnp.float32).mean(1)))
+        s_toks, s_probs = EO.generate(sat.params, sat.cfg, adapter_cfg, task,
+                                      images, prompts, answer_vocab)
+        g_toks, g_probs = EO.generate(gs.params, gs.cfg, adapter_cfg, task,
+                                      images, prompts, answer_vocab)
+        states.append(np.asarray(EO.token_features(sat.params, s_toks)))
+        tgts.append(np.asarray(output_similarity(s_probs, g_probs)))
+    return (np.concatenate(vis), np.concatenate(states),
+            np.concatenate(tgts))
+
+
+def train_confidence_net(sat: TierModel, gs: TierModel,
+                         adapter_cfg: EO.EOAdapterConfig,
+                         train_data: Dict[str, Dict[str, np.ndarray]],
+                         answer_vocab: int, *, frac: float = 0.05,
+                         num_stages: int = 2, steps: int = 400,
+                         seed: int = 0):
+    vis_all, st_all, tgt_all = [], [], []
+    for task, data in train_data.items():
+        n = max(int(data["images"].shape[0] * frac), 16)
+        sub = {k: v[:n] for k, v in data.items() if isinstance(v, np.ndarray)}
+        v, s, t = build_confidence_data(sat, gs, adapter_cfg, sub, task,
+                                        answer_vocab)
+        vis_all.append(v)
+        st_all.append(s)
+        tgt_all.append(t)
+    vis = jnp.asarray(np.concatenate(vis_all))
+    st = jnp.asarray(np.concatenate(st_all))
+    tgt = jnp.asarray(np.concatenate(tgt_all))
+    d_visual, d_state = vis.shape[-1], st.shape[-1]
+    conf = C.init_confidence(jax.random.PRNGKey(seed), d_visual, d_state,
+                             hidden=64, num_stages=num_stages)
+    # stages 2..I all see pooled generated-token features
+    states = [st] * (num_stages - 1)
+    conf, losses = C.train_confidence(conf, vis, states, tgt, steps=steps,
+                                      seed=seed)
+    return conf, losses
+
+
+# ---------------------------------------------------------------------------
+# Full assembly
+# ---------------------------------------------------------------------------
+
+def build_system(*, scale: str = "small", n_train: int = 256,
+                 n_test: int = 128, proxy_steps: int = 250,
+                 conf_steps: int = 300, seed: int = 0,
+                 tasks: Tuple[str, ...] = TASKS,
+                 grid: int = 4, image_size: int = 64,
+                 cascade_cfg: Optional[CascadeConfig] = None
+                 ) -> SystemBundle:
+    sat_cfg, gs_cfg = proxy_pair(scale)
+    adapter_cfg = EO.EOAdapterConfig(grid=grid, image_size=image_size)
+    eo_cfg = synthetic.EOTaskConfig(image_size=image_size, grid=grid,
+                                    num_classes=adapter_cfg.num_classes)
+    train_data = {t: synthetic.make_dataset(t, n_train, seed=seed + i,
+                                            cfg=eo_cfg)
+                  for i, t in enumerate(tasks)}
+    test_data = {t: synthetic.make_dataset(t, n_test, seed=seed + 100 + i,
+                                           cfg=eo_cfg)
+                 for i, t in enumerate(tasks)}
+
+    cc = cascade_cfg or CascadeConfig(
+        answer_vocab=max(adapter_cfg.num_classes + 1, 2))
+
+    sat_params, sat_losses = train_proxy(sat_cfg, adapter_cfg, train_data,
+                                         steps=proxy_steps, seed=seed)
+    # the GS tier trains longer at a gentler LR (deeper model), preserving the
+    # paper's |W^g| > |W^s| quality ordering
+    gs_params, gs_losses = train_proxy(gs_cfg, adapter_cfg, train_data,
+                                       steps=int(proxy_steps * 1.5),
+                                       lr=2e-3, seed=seed + 1)
+    sat = TierModel(sat_params, sat_cfg)
+    gs = TierModel(gs_params, gs_cfg)
+
+    conf, conf_losses = train_confidence_net(
+        sat, gs, adapter_cfg, train_data, cc.answer_vocab,
+        num_stages=len(cc.taus), steps=conf_steps, seed=seed)
+
+    return SystemBundle(
+        sat=sat, gs=gs, adapter_cfg=adapter_cfg, conf_params=conf,
+        cascade_cfg=cc, latency=LatencyModel(),
+        datasets=test_data, train_datasets=train_data,
+        history={"sat_losses": sat_losses, "gs_losses": gs_losses,
+                 "conf_losses": conf_losses})

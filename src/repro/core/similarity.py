@@ -1,0 +1,52 @@
+"""Simi(·,·) metrics (§3.1.1) and the confidence-training target.
+
+The confidence network regresses the realized satellite↔ground output
+similarity cos(ŷ^s, ŷ^g) (Eq. 1 RHS); task quality is measured with the
+task-appropriate Simi against ground truth: exact match for VQA/
+classification, region-set IoU for detection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine(a: jax.Array, b: jax.Array, axis: int = -1,
+           eps: float = 1e-8) -> jax.Array:
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    num = (af * bf).sum(axis)
+    den = jnp.linalg.norm(af, axis=axis) * jnp.linalg.norm(bf, axis=axis)
+    return num / jnp.maximum(den, eps)
+
+
+def output_similarity(dist_s: jax.Array, dist_g: jax.Array) -> jax.Array:
+    """cos(ŷ^s, ŷ^g) over answer distributions, per sample.
+
+    dist_*: (B, L_ans, V) answer-token probability distributions.  Multi-token
+    answers are compared position-wise then averaged (a smooth, bounded [0,1]
+    target for the MSE in Eq. 1)."""
+    sim = cosine(dist_s, dist_g, axis=-1)          # (B, L_ans)
+    return sim.mean(-1)
+
+
+def simi_exact(pred: jax.Array, label: jax.Array) -> jax.Array:
+    """VQA / classification: 1 if equal (per sample)."""
+    return (pred == label).astype(jnp.float32)
+
+
+def simi_region_iou(pred_mask: jax.Array, true_mask: jax.Array) -> jax.Array:
+    """Detection: IoU between predicted / true region sets (B, N_r) bool."""
+    p = pred_mask.astype(jnp.float32)
+    t = true_mask.astype(jnp.float32)
+    inter = (p * t).sum(-1)
+    union = jnp.maximum((jnp.maximum(p, t)).sum(-1), 1.0)
+    return inter / union
+
+
+def task_simi(task: str, pred, label):
+    if task in ("vqa", "cls"):
+        return simi_exact(pred, label)
+    if task == "det":
+        return simi_region_iou(pred, label)
+    raise ValueError(task)

@@ -1,0 +1,2 @@
+"""Data layer: procedural EO datasets + sharded host pipeline."""
+from repro.data import synthetic  # noqa: F401

@@ -1,0 +1,4 @@
+"""Distribution layer: sharding rules (DP/TP/EP/SP + pod axis), HLO
+analysis, GPipe pipeline parallelism, collective overlap helpers."""
+from repro.distributed import (collectives, hlo_analysis, hlo_parser,  # noqa: F401
+                               memory_model, pipeline, sharding)

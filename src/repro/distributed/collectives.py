@@ -1,0 +1,61 @@
+"""Collective helpers: ZeRO-friendly gradient sync + comm/compute overlap.
+
+- ``reduce_scatter_grads`` / ``all_gather_params``: the reduce-scatter →
+  local-update → all-gather decomposition of the data-parallel step (half
+  the link bytes of a plain all-reduce when combined with ZeRO-1 sharded
+  optimizer state).
+- ``chunked_psum``: splits one large gradient psum into per-leaf chunks
+  issued eagerly, letting XLA's latency-hiding scheduler overlap each
+  chunk's all-reduce with the backward compute that produces the next —
+  the standard bucketed-overlap pattern expressed jax-natively.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def reduce_scatter_grads(grads: Params, axis: str) -> Params:
+    """psum_scatter each leaf over ``axis`` (leading dim must divide)."""
+    size = jax.lax.axis_size(axis)
+
+    def one(g):
+        if g.ndim == 0 or g.shape[0] % size != 0:
+            return jax.lax.psum(g, axis) / size
+        return jax.lax.psum_scatter(g, axis, scatter_dimension=0,
+                                    tiled=True) / size
+    return jax.tree.map(one, grads)
+
+
+def all_gather_params(shards: Params, full_like: Params, axis: str) -> Params:
+    def one(s, f):
+        if s.shape == f.shape:
+            return s
+        return jax.lax.all_gather(s, axis, axis=0, tiled=True)
+    return jax.tree.map(one, shards, full_like)
+
+
+def chunked_psum(grads: Params, axis: str, n_buckets: int = 4) -> Params:
+    """Bucketed gradient all-reduce: leaves are grouped into ``n_buckets``
+    by size and psum'd per bucket, giving the scheduler independent
+    collectives to overlap with compute."""
+    leaves, treedef = jax.tree.flatten(grads)
+    order = sorted(range(len(leaves)), key=lambda i: -leaves[i].size)
+    buckets: List[List[int]] = [[] for _ in range(max(n_buckets, 1))]
+    sizes = [0] * max(n_buckets, 1)
+    for i in order:                      # greedy balance by bytes
+        b = sizes.index(min(sizes))
+        buckets[b].append(i)
+        sizes[b] += leaves[i].size
+    out = list(leaves)
+    for bucket in buckets:
+        if not bucket:
+            continue
+        reduced = jax.lax.psum(tuple(leaves[i] for i in bucket), axis)
+        for i, r in zip(bucket, reduced):
+            out[i] = r
+    return jax.tree.unflatten(treedef, out)

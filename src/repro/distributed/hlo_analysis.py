@@ -1,0 +1,114 @@
+"""HLO text analysis: collective byte accounting + op histograms.
+
+``cost_analysis()`` has no collective term, so §Roofline parses the
+partitioned module text.  Shapes in the post-SPMD module are PER-DEVICE, so
+per-op link traffic follows the standard ring formulas:
+
+  all-reduce        2·R·(g−1)/g     (R = result bytes, g = group size)
+  all-gather        R·(g−1)/g       (R = gathered result)
+  reduce-scatter    R·(g−1)         (operand = R·g; sends (g−1)/g of it)
+  all-to-all        R·(g−1)/g
+  collective-permute R
+
+The absolute numbers carry ring-algorithm assumptions; what the perf loop
+relies on is that they respond monotonically to sharding changes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[2,16,4608]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")[\s(.]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ARR_RE.search(line)
+    if m:  # iota format: replica_groups=[n_groups,group_size]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def collective_summary(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, result_bytes, link_bytes} (per device)."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0.0, "link_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if "-start" in line and f"{kind}-start" not in line:
+            pass
+        rb = _shape_bytes(dtype, dims)
+        g = _group_size(line)
+        if kind == "all-reduce":
+            lb = 2.0 * rb * (g - 1) / g
+        elif kind == "all-gather":
+            lb = rb * (g - 1) / g
+        elif kind == "reduce-scatter":
+            lb = rb * (g - 1)
+        elif kind == "all-to-all":
+            lb = rb * (g - 1) / g
+        else:  # collective-permute
+            lb = rb
+        rec = out[kind]
+        rec["count"] += 1
+        rec["result_bytes"] += rb
+        rec["link_bytes"] += lb
+    total = {"count": 0, "result_bytes": 0.0, "link_bytes": 0.0}
+    for rec in out.values():
+        for k in total:
+            total[k] += rec[k]
+    out["total"] = total
+    return dict(out)
+
+
+def op_histogram(hlo_text: str, top: int = 12) -> Dict[str, int]:
+    """Counts of interesting op kinds (fusion/reshape/transpose/gather...)."""
+    kinds = ("fusion", "custom-call", "reshape", "transpose", "gather",
+             "scatter", "dynamic-slice", "dynamic-update-slice", "while",
+             "dot", "convolution", "copy")
+    counts = {k: 0 for k in kinds}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        for k in kinds:
+            if re.search(rf"\b{k}\b", rhs):
+                counts[k] += 1
+                break
+    return {k: v for k, v in counts.items() if v}
+
+
+def total_collective_link_bytes(summary: Dict[str, Dict[str, float]]) -> float:
+    return float(summary.get("total", {}).get("link_bytes", 0.0))

@@ -1,0 +1,390 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — under a
+scan-over-layers model that undercounts FLOPs/bytes by the layer count (and
+collectives inside the loop by the same factor).  This module parses the
+post-SPMD HLO text into computations, reads while trip counts from
+``backend_config={"known_trip_count":{"n":...}}`` (falling back to the
+condition comparison constant), and walks the entry computation accumulating
+per-device:
+
+- ``flops``       2·(result elements)·(contraction size) for every dot,
+                  including inside fusion bodies,
+- ``hbm_bytes``   operand+result bytes of top-level buffer-touching ops
+                  (fusion internals excluded — they stay in registers/VMEM),
+- ``collectives`` link-byte accounting per kind (ring formulas),
+                  trip-multiplied.
+
+Shapes in the partitioned module are per-device, so all outputs are
+per-device quantities — exactly what the §Roofline terms want.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_KIND_RE = re.compile(
+    r"^\(?\s*(?:[a-z0-9]+\[[\d,]*\][^\s]*\s*,?\s*)+\)?\s*([a-z][\w\-]*)\(")
+_CALLEE = re.compile(r"(?:calls|body)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_CONST_INT = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^()]*\)|[a-z0-9]+\[[\d,]*\])[^,)]*)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_info(text: str) -> Tuple[float, List[int]]:
+    """(total bytes across shapes found, dims of the first shape)."""
+    total = 0.0
+    first_dims: List[int] = []
+    for i, (dt, dims) in enumerate(_SHAPE_RE.findall(text)):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in dl:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        if not first_dims and i == 0:
+            first_dims = dl
+    return total, first_dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    line: str
+    result_bytes: float
+    result_dims: List[int]
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symbols: Dict[str, Tuple[float, List[int]]]  # name → (bytes, dims)
+
+
+def _operands_of(rhs: str) -> List[str]:
+    """%refs inside the op's argument parens (attributes stripped)."""
+    start = rhs.find("(")
+    if start < 0:
+        return []
+    depth = 0
+    end = start
+    for i, ch in enumerate(rhs[start:], start):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w.\-]+)", rhs[start:end + 1])
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        s = _COMMENT_RE.sub("", raw).strip()
+        if not s:
+            continue
+        if s.endswith("{") and "->" in s and "=" not in s.split("->")[0]:
+            # computation header
+            is_entry = s.startswith("ENTRY")
+            name_part = s[len("ENTRY"):].strip() if is_entry else s
+            name = name_part.split()[0].lstrip("%").split("(")[0]
+            cur = Computation(name, [], {})
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            # header params: "name: shape"
+            hdr_args = name_part[name_part.find("("):name_part.rfind("->")]
+            for pname, pshape in _PARAM_RE.findall(hdr_args):
+                cur.symbols[pname] = _shape_info(pshape)
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(s)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        kind = "unknown"
+        kind_pos = len(rhs)
+        for km in re.finditer(r"([a-z][\w\-]*)\(", rhs):
+            if km.group(1) not in _DTYPE_BYTES:
+                kind = km.group(1)
+                kind_pos = km.start()
+                break
+        rb, dims = _shape_info(rhs[:kind_pos])
+        op = Op(name, kind, s, rb, dims, _operands_of(rhs))
+        cur.ops.append(op)
+        cur.symbols[name] = (rb, dims)
+    return comps, entry
+
+
+def _trip_count(line: str, comps, cond_name: Optional[str]) -> int:
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    if cond_name and cond_name in comps:
+        consts = []
+        for op in comps[cond_name].ops:
+            consts += [int(x) for x in _CONST_INT.findall(op.line)]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    n_res = 1
+    for d in op.result_dims:
+        n_res *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if m and m.group(1) and op.operands:
+        lhs = comp.symbols.get(op.operands[0])
+        if lhs:
+            dims = lhs[1]
+            for i in m.group(1).split(","):
+                idx = int(i)
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2.0 * n_res * contract
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ARR_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def _collective_link_bytes(kind: str, op: Op) -> float:
+    rb = op.result_bytes
+    g = _group_size(op.line)
+    if kind == "all-reduce":
+        return 2.0 * rb * (g - 1) / g
+    if kind == "all-gather":
+        return rb * (g - 1) / g
+    if kind == "reduce-scatter":
+        return rb * (g - 1)
+    if kind == "all-to-all":
+        return rb * (g - 1) / g
+    return rb  # collective-permute
+
+
+class Analyzer:
+    def __init__(self, hlo: str):
+        self.comps, self.entry = parse_module(hlo)
+        self._flops_cache: Dict[str, float] = {}
+        self._bytes_cache: Dict[str, float] = {}
+        self._kbytes_cache: Dict[str, float] = {}
+        self.while_trips: Dict[str, int] = {}
+
+    def _callee_trips(self, op: Op) -> Tuple[Optional[str], int]:
+        m = _CALLEE.search(op.line)
+        c = _COND.search(op.line)
+        trips = _trip_count(op.line, self.comps,
+                            c.group(1) if c else None) \
+            if op.kind == "while" else 1
+        return (m.group(1) if m else None), trips
+
+    # -- flops: include fusion bodies ------------------------------------
+    def comp_flops(self, name: str) -> float:
+        if name in self._flops_cache:
+            return self._flops_cache[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0
+        self._flops_cache[name] = 0.0
+        total = 0.0
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                total += _dot_flops(op, comp)
+            elif op.kind in ("fusion", "call", "map", "reduce",
+                             "reduce-window", "sort", "scatter", "select-and-scatter"):
+                callee, _ = self._callee_trips(op)
+                # calls= / to_apply= computations may hold dots (rare)
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.line)
+                if m:
+                    total += self.comp_flops(m.group(1))
+            elif op.kind == "while":
+                callee, trips = self._callee_trips(op)
+                if callee:
+                    self.while_trips[callee] = trips
+                    total += trips * self.comp_flops(callee)
+            elif op.kind == "conditional":
+                for callee in re.findall(r"%([\w.\-]+)", op.line):
+                    if callee in self.comps:
+                        total += self.comp_flops(callee)
+        self._flops_cache[name] = total
+        return total
+
+    # -- bytes: top-level buffer-touching ops only ------------------------
+    #
+    # Ops whose metadata op_name carries a KERNELREGION_<kind> scope belong
+    # to a region that executes as a Pallas kernel on the real target; their
+    # HLO-level traffic (score tiles spilled between fusions, etc.) is
+    # tracked separately so the roofline can substitute the kernel's true
+    # HBM bytes.
+    def _op_bytes(self, comp: Computation, op: Op) -> float:
+        if op.kind in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * op.result_bytes
+        if op.kind in ("dynamic-update-slice", "scatter"):
+            upd = (comp.symbols.get(op.operands[1])
+                   if len(op.operands) > 1 else None)
+            return 2.0 * (upd[0] if upd else 0.0)
+        total = op.result_bytes
+        for o in op.operands:
+            sym = comp.symbols.get(o)
+            if sym:
+                total += sym[0]
+        return total
+
+    def comp_bytes(self, name: str) -> float:
+        if name not in self._bytes_cache:
+            self._split_bytes(name)
+        return self._bytes_cache[name]
+
+    def comp_kernel_bytes(self, name: str) -> float:
+        if name not in self._kbytes_cache:
+            self._split_bytes(name)
+        return self._kbytes_cache[name]
+
+    def _split_bytes(self, name: str) -> None:
+        comp = self.comps.get(name)
+        self._bytes_cache[name] = 0.0
+        self._kbytes_cache[name] = 0.0
+        if comp is None:
+            return
+        total = 0.0
+        kernel = 0.0
+        for op in comp.ops:
+            if op.kind in _SKIP_BYTES:
+                continue
+            in_kernel = "KERNELREGION_" in op.line
+            if op.kind == "while":
+                callee, trips = self._callee_trips(op)
+                if callee:
+                    sub = trips * self.comp_bytes(callee)
+                    sub_k = trips * self.comp_kernel_bytes(callee)
+                    if in_kernel:
+                        kernel += sub      # whole subtree is kernel-scoped
+                    else:
+                        kernel += sub_k
+                        total += sub - sub_k
+                continue
+            if op.kind in ("call", "conditional"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.line)
+                if m:
+                    sub = self.comp_bytes(m.group(1))
+                    sub_k = self.comp_kernel_bytes(m.group(1))
+                    if in_kernel:
+                        kernel += sub
+                    else:
+                        kernel += sub_k
+                        total += sub - sub_k
+                continue
+            b = self._op_bytes(comp, op)
+            if in_kernel:
+                kernel += b
+            else:
+                total += b
+        self._bytes_cache[name] = total + kernel
+        self._kbytes_cache[name] = kernel
+
+    # -- collectives -------------------------------------------------------
+    #
+    # Collectives inside KERNELREGION_ scopes are artifacts of the unfused
+    # HLO path (e.g. GSPMD psums a weight grad per recurrence STEP inside a
+    # scan that the Pallas kernel executes wholly on-chip) — they are
+    # tallied separately so the roofline can drop them.
+    def collectives(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"count": 0.0, "link_bytes": 0.0,
+                     "kernel_link_bytes": 0.0})
+
+        def walk(name: str, mult: float, depth: int = 0,
+                 in_kernel: bool = False):
+            comp = self.comps.get(name)
+            if comp is None or depth > 12:
+                return
+            for op in comp.ops:
+                op_kernel = in_kernel or ("KERNELREGION_" in op.line)
+                kind = op.kind.replace("-start", "")
+                if kind in _COLLECTIVE_KINDS:
+                    rec = out[kind]
+                    lb = mult * _collective_link_bytes(kind, op)
+                    rec["count"] += mult
+                    rec["link_bytes"] += lb
+                    if op_kernel:
+                        rec["kernel_link_bytes"] += lb
+                elif op.kind in ("fusion", "call"):
+                    m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.line)
+                    if m:
+                        walk(m.group(1), mult, depth + 1, op_kernel)
+                elif op.kind == "while":
+                    callee, trips = self._callee_trips(op)
+                    if callee:
+                        walk(callee, mult * trips, depth + 1, op_kernel)
+                elif op.kind == "conditional":
+                    for callee in re.findall(r"%([\w.\-]+)", op.line):
+                        if callee in self.comps:
+                            walk(callee, mult, depth + 1, op_kernel)
+
+        if self.entry:
+            walk(self.entry, 1.0)
+        total = {"count": 0.0, "link_bytes": 0.0, "kernel_link_bytes": 0.0}
+        for rec in out.values():
+            total["count"] += rec["count"]
+            total["link_bytes"] += rec["link_bytes"]
+            total["kernel_link_bytes"] += rec["kernel_link_bytes"]
+        out["total"] = total
+        return dict(out)
+
+    def summary(self) -> Dict:
+        flops = self.comp_flops(self.entry) if self.entry else 0.0
+        hbm = self.comp_bytes(self.entry) if self.entry else 0.0
+        kernel = self.comp_kernel_bytes(self.entry) if self.entry else 0.0
+        return {
+            "flops_per_device": flops,
+            "hbm_bytes_per_device": hbm,
+            "kernel_region_bytes_per_device": kernel,
+            "collectives": self.collectives(),
+            "while_trips": dict(self.while_trips),
+            "n_computations": len(self.comps),
+        }
+
+
+def analyze(hlo_text: str) -> Dict:
+    return Analyzer(hlo_text).summary()

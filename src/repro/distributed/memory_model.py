@@ -1,0 +1,101 @@
+"""Analytic per-device HBM model (capacity planning for §Dry-run).
+
+XLA:CPU's scheduler optimises instruction-level parallelism, not liveness, so
+``memory_analysis().temp_size_in_bytes`` from the CPU dry-run over-reports
+the high-water mark a memory-aware TPU schedule would reach (observed ~3–5×
+on remat'd training graphs).  This model computes the structural lower bound
+a TPU must hold:
+
+  train   params + grads(f32) + Adam m/v (ZeRO-1) + per-block remat
+          residuals (one x per layer) + one block's linearisation working
+          set + CE chunk buffers
+  prefill params + KV cache + O(block) activations
+  decode  params + KV cache + O(1) activations
+
+All terms respect the actual PartitionSpecs (TP/EP/DP/SP sharding divides
+the relevant dims).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.distributed import sharding as SH
+from repro.launch import specs as SP
+
+HBM_PER_DEVICE = 16e9  # TPU v5e
+
+
+def _sharded_bytes(shape_tree: Any, spec_tree: Any, mesh) -> float:
+    """Total per-device bytes of a spec-annotated ShapeDtypeStruct tree."""
+    axis_size = dict(mesh.shape)
+
+    def leaf_bytes(leaf, spec):
+        n = float(np.prod(leaf.shape)) if leaf.shape else 1.0
+        n *= np.dtype(leaf.dtype).itemsize
+        denom = 1
+        for part in tuple(spec) if spec is not None else ():
+            if part is None:
+                continue
+            for ax in (part if isinstance(part, tuple) else (part,)):
+                denom *= axis_size.get(ax, 1)
+        return n / denom
+
+    flat_s = jax.tree.leaves(shape_tree)
+    flat_p = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    return sum(leaf_bytes(s, p) for s, p in zip(flat_s, flat_p))
+
+
+def analytic_memory(cfg: ArchConfig, shape: ShapeSpec, mesh
+                    ) -> Dict[str, float]:
+    p_shape = SP.params_shape(cfg)
+    p_specs = SH.param_specs(cfg, mesh, p_shape)
+    params_b = _sharded_bytes(p_shape, p_specs, mesh)
+
+    d_loc = SH.data_size(mesh)
+    m_size = mesh.shape.get("model", 1)
+    b_loc = max(shape.global_batch // d_loc, 1)
+    d = cfg.d_model
+    dtype_b = 2  # bf16
+
+    out: Dict[str, float] = {"params": params_b}
+
+    if shape.kind == "train":
+        z_specs = SH.zero1_specs(cfg, mesh, p_shape, p_specs)
+        fp32 = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, np.float32), p_shape)
+        out["adam_mv"] = 2 * _sharded_bytes(fp32, z_specs, mesh)
+        out["grads_fp32"] = _sharded_bytes(fp32, p_specs, mesh)
+        s = shape.seq_len
+        # per-block remat residual: one x per layer (+ final)
+        out["remat_residuals"] = (cfg.num_layers + 1) * b_loc * s * d * dtype_b
+        # one block's backward linearisation working set (f32 internals):
+        # x, q/k/v, attention o, mlp hidden (sharded over model), ~6 buffers
+        ff_loc = max(cfg.d_ff, cfg.moe_d_ff or 0) / max(m_size, 1)
+        hd = cfg.resolved_head_dim
+        q_loc = cfg.num_heads * hd / (m_size if cfg.num_heads % m_size == 0
+                                      else 1)
+        out["block_working_set"] = b_loc * s * 4.0 * (
+            2 * d + 2 * q_loc + 2 * ff_loc)
+        # chunked CE: logits + one_hot f32 for one chunk (vocab sharded)
+        v_loc = cfg.vocab_size / (m_size if cfg.vocab_size % m_size == 0
+                                  else 1)
+        out["ce_chunk"] = 2 * b_loc * (s / 8) * v_loc * 4.0
+    else:
+        c_shape = SP.cache_shape(cfg, shape.global_batch, shape.seq_len)
+        c_specs = SH.cache_specs(cfg, mesh, shape, c_shape)
+        out["kv_cache"] = _sharded_bytes(c_shape, c_specs, mesh)
+        if shape.kind == "prefill":
+            s = shape.seq_len
+            out["activations"] = 6 * b_loc * s * d * dtype_b
+        else:
+            out["activations"] = 4 * b_loc * d * 4.0
+
+    out["total"] = float(sum(out.values()))
+    out["fits_16g"] = bool(out["total"] < HBM_PER_DEVICE)
+    return out

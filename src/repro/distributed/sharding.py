@@ -1,0 +1,233 @@
+"""PartitionSpec rules for params, optimizer state, caches and batches.
+
+Policy (single-pod mesh ("data","model"); multi-pod adds a leading "pod"
+axis that folds into data parallelism):
+
+- **TP** over "model": attention q/o projections shard by heads, k/v by KV
+  heads, MLP/MoE hidden dims, and the vocabulary dim of embed/head —
+  each only when the dim is divisible by the model-axis size (otherwise the
+  leaf stays replicated; small-model attention replication is deliberate and
+  shows up in the roofline as a hillclimb lever).
+- **EP**: expert dim of MoE weights when num_experts divides; otherwise TP
+  inside each expert's FFN.
+- **DP** over ("pod","data"): the batch dim of every activation/batch leaf.
+- **SP for long-context decode** (batch=1): the KV sequence dim shards over
+  ("data","model") [or "data" + KV-heads over "model" when those divide] —
+  flash-decoding split-K across devices.
+- **ZeRO-1**: optimizer moments take the parameter spec plus the largest
+  still-replicated dim sharded over "data".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+
+Params = Any
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, params_shape: Params) -> Params:
+    """Spec tree matching ``params_shape`` (a ShapeDtypeStruct pytree)."""
+    m = mesh_axis_size(mesh, "model")
+    hd = cfg.resolved_head_dim
+    q_ok = cfg.num_heads % m == 0
+    kv_ok = cfg.num_kv_heads % m == 0
+    ff_ok = cfg.d_ff % m == 0 and cfg.d_ff > 0
+    moe_ff = cfg.moe_d_ff or cfg.d_ff
+    ep_ok = cfg.moe_num_experts % m == 0 and cfg.moe_num_experts > 0
+    moe_tp_ok = moe_ff % m == 0
+    vocab_ok = cfg.vocab_size % m == 0
+    d_in = cfg.ssm_expand * cfg.d_model
+    ssm_ok = cfg.resolved_ssm_heads % m == 0 and (d_in // max(
+        cfg.resolved_ssm_heads, 1)) % 1 == 0
+    shared_ff_ok = (cfg.moe_num_shared * moe_ff) % m == 0 \
+        if cfg.moe_num_shared else False
+
+    def rule(path, leaf) -> P:
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        last = name.rsplit("/", 1)[-1]
+        blocks = name.startswith("blocks")  # leading n_super dim
+
+        def spec(*tail):
+            """Prepend None for the stacked n_super dim of block leaves."""
+            assert len(tail) + (1 if blocks else 0) == nd, (name, leaf.shape)
+            return P(*(((None,) if blocks else ()) + tail))
+
+        # --- embedding / head ---
+        if name == "embed/tok":
+            if cfg.num_codebooks:
+                return P(None, "model" if vocab_ok else None, None)
+            return P("model" if vocab_ok else None, None)
+        if name == "embed/head":
+            return P(None, "model" if vocab_ok else None)
+
+        # --- norms and other vectors/scalars ---
+        if nd <= (2 if blocks else 1):
+            return spec(*([None] * (nd - (1 if blocks else 0))))
+
+        # --- attention ---
+        if last in ("wq",):
+            return spec(None, "model" if q_ok else None)
+        if last in ("wk", "wv"):
+            return spec(None, "model" if kv_ok else None)
+        if last == "wo":
+            return spec("model" if q_ok else None, None)
+
+        # --- MoE ---
+        if "ffn" in name and last in ("wg", "wu") and nd == (4 if blocks else 3):
+            if ep_ok:
+                return spec("model", None, None)
+            return spec(None, None, "model" if moe_tp_ok else None)
+        if "ffn" in name and last == "wd" and nd == (4 if blocks else 3):
+            if ep_ok:
+                return spec("model", None, None)
+            return spec(None, "model" if moe_tp_ok else None, None)
+        if last == "router":
+            return spec(None, None)
+        if "shared" in name and last in ("wg", "wu"):
+            return spec(None, "model" if shared_ff_ok else None)
+        if "shared" in name and last == "wd":
+            return spec("model" if shared_ff_ok else None, None)
+
+        # --- dense MLP ---
+        if last in ("wg", "wu"):
+            return spec(None, "model" if ff_ok else None)
+        if last == "wd":
+            return spec("model" if ff_ok else None, None)
+
+        # --- mamba / mlstm / slstm projections ---
+        if last in ("w_in", "w_bc", "w_up", "w_dt", "w_i", "w_f"):
+            return spec(None, "model" if ssm_ok else None)
+        if last in ("w_out", "w_down"):
+            return spec("model" if ssm_ok else None, None)
+        if last in ("wq_m", "wk_m", "wv_m"):
+            return spec(None, "model" if ssm_ok else None)
+        if last == "r_gates":
+            return spec(None, None, None)
+        if last == "w_gates":
+            return spec(None, "model" if ssm_ok else None)
+
+        # default: replicate
+        return spec(*([None] * (nd - (1 if blocks else 0))))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def zero1_specs(cfg: ArchConfig, mesh: Mesh, params_shape: Params,
+                p_specs: Params) -> Params:
+    """ZeRO-1 moment specs: param spec + largest replicated dim → "data"."""
+    dsize = mesh_axis_size(mesh, "data")
+
+    def widen(leaf, spec):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        best, best_size = -1, 0
+        for i, (dim, pt) in enumerate(zip(leaf.shape, parts)):
+            if pt is None and dim % dsize == 0 and dim > best_size:
+                best, best_size = i, dim
+        if best >= 0:
+            parts[best] = "data"
+        return P(*parts)
+
+    return jax.tree.map(widen, params_shape, p_specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec,
+                batch_shape: Dict[str, Any]) -> Dict[str, Any]:
+    """Input-batch specs: batch dim over (pod, data) when divisible."""
+    da = data_axes(mesh)
+    bsz = shape.global_batch
+    b_axes = da if (bsz % data_size(mesh) == 0 and da) else ()
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        tail = (None,) * (nd - 1)
+        return P(b_axes if b_axes else None, *tail)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec,
+                cache_shape: Tuple) -> Tuple:
+    """KV-cache / recurrent-state specs for decode shapes.
+
+    Layout: attn k/v (n_super, B, S, n_kv, hd); states (n_super, B, ...).
+    """
+    m = mesh_axis_size(mesh, "model")
+    da = data_axes(mesh)
+    bsz = shape.global_batch
+    kv_ok = cfg.num_kv_heads % m == 0
+    batch_sharded = bsz % data_size(mesh) == 0 and bool(da)
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        name = _path_str(path)
+        # attention KV leaves are named .../k or .../v; recurrent states
+        # ("state", "h", "c", "n", "m") shard batch-only regardless of rank
+        last = name.rsplit("/", 1)[-1]
+        is_attn_kv = nd == 5 and last in ("k", "v")
+        if is_attn_kv:
+            if batch_sharded:
+                # batch over data(+pod); kv-heads over model if divisible,
+                # else split-K: sequence over model
+                if kv_ok:
+                    return P(None, da, None, "model", None)
+                return P(None, da, "model", None, None)
+            # long-context batch=1: sequence over every axis we can
+            if kv_ok:
+                return P(None, None, "data", "model", None)
+            return P(None, None, ("data", "model"), None, None)
+        # recurrent states: batch over data when divisible, else replicate
+        if batch_sharded and nd >= 2:
+            return P(None, da, *([None] * (nd - 2)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def named(mesh: Mesh, spec_tree: Params) -> Params:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for SpaceVerse compute hot-spots.
+
+- ``region_score``     Eq. (2) text-image region attention (paper hot loop)
+- ``flash_attention``  prefill/train attention (causal/window/softcap, GQA)
+- ``decode_attention`` split-K decode against long KV caches
+- ``ssm_scan``         chunked gated linear attention (Mamba-2 SSD / mLSTM)
+
+``ops`` holds the jit'd dispatch wrappers; ``ref`` holds the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,114 @@
+"""Pallas TPU decode attention (flash-decoding style split-K).
+
+One query token per sequence against a long KV cache.  The KV sequence axis
+is the innermost grid dimension; partial (max, denom, accumulator) statistics
+persist in VMEM scratch and are combined online — the split-K structure is
+what lets the sequence axis also be sharded across devices for ``long_500k``
+(each shard computes partial stats; the combine is a cheap psum done by the
+wrapper in ``ops.py`` when run under shard_map).
+
+``cache_len`` (#valid slots) arrives via scalar prefetch so block masks can
+be computed without touching HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale: float, window: int,
+                   softcap: Optional[float], kv_blk: int, n_kv: int):
+    ikv = pl.program_id(2)
+    cache_len = len_ref[0]
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Skip blocks entirely outside [lo, cache_len).
+    lo = jnp.maximum(cache_len - window, 0) if window > 0 else 0
+    needed = (ikv * kv_blk < cache_len) & ((ikv + 1) * kv_blk > lo)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (group, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (kv_blk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        cols = ikv * kv_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < cache_len
+        if window > 0:
+            mask &= cols >= cache_len - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            cache_len: jax.Array, *, window: int = 0,
+                            softcap: Optional[float] = None,
+                            scale: Optional[float] = None,
+                            kv_blk: int = 256,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, KH, group, hd); k, v: (B, KH, S, hd); cache_len: () int32
+    → (B, KH, group, hd)."""
+    b, kh, group, hd = q.shape
+    s = k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    kv_blk = min(kv_blk, s)
+    assert s % kv_blk == 0
+    n_kv = s // kv_blk
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, softcap=softcap,
+        kv_blk=kv_blk, n_kv=n_kv)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd), lambda b_, h_, ik, *_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, kv_blk, hd), lambda b_, h_, ik, *_: (b_, h_, ik, 0)),
+            pl.BlockSpec((1, 1, kv_blk, hd), lambda b_, h_, ik, *_: (b_, h_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda b_, h_, ik, *_: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+        ],
+    )
+
+    cache_len = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, group, hd), q.dtype),
+        interpret=interpret,
+    )(cache_len, q, k, v)

@@ -1,0 +1,170 @@
+"""Jit-ready wrappers around the Pallas kernels with backend dispatch.
+
+On TPU the Pallas implementations run natively; on this CPU-only container
+the pure-jnp oracles in ``ref.py`` execute instead (Pallas TPU kernels cannot
+lower for the CPU backend).  Tests pin ``impl="pallas_interpret"`` to execute
+the kernel bodies in Python and compare against the oracle.
+
+The wrappers also own layout adaptation (the models use (B, S, H, d); the
+kernels want (B, H, S, d)) and head-dim padding to MXU-friendly multiples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+from repro.kernels.region_score import region_score_pallas
+
+Impl = Optional[str]
+# None (auto) | "ref" | "flash_structured" | "pallas" | "pallas_interpret"
+
+_DEFAULT_OVERRIDE: Optional[str] = None
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    """Process-wide override (the dry-run sets "flash_structured" so the
+    lowered HLO matches the TPU kernel's work profile)."""
+    global _DEFAULT_OVERRIDE
+    _DEFAULT_OVERRIDE = impl
+
+
+def default_impl() -> str:
+    if _DEFAULT_OVERRIDE:
+        return _DEFAULT_OVERRIDE
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: Impl) -> Tuple[str, bool]:
+    impl = impl or default_impl()
+    if impl in ("ref", "flash_structured"):
+        return impl, False
+    if impl == "pallas":
+        return "pallas", False
+    if impl == "pallas_interpret":
+        return "pallas", True
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# region_score
+# ---------------------------------------------------------------------------
+
+def region_score(v: jax.Array, e: jax.Array, *, impl: Impl = None) -> jax.Array:
+    """Eq. (2): v (B, R, Nv, D), e (B, Ne, D) → (B, R) float32."""
+    kind, interp = _resolve(impl)
+    if kind in ("ref", "flash_structured"):
+        return ref.region_score(v, e)
+    return region_score_pallas(v, e, interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (B, S, H, hd) model layout
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    impl: Impl = None) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, K, hd) → (B, Sq, H, hd)."""
+    kind, interp = _resolve(impl)
+    if kind == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale)
+    if kind == "flash_structured":
+        # named scope → HLO metadata tag; the roofline analyser re-attributes
+        # this region's HBM traffic to the Pallas kernel's analytic bytes
+        with jax.named_scope("KERNELREGION_flash"):
+            return ref.flash_structured(q, k, v, causal, window, softcap,
+                                        scale)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_pallas(qt, kt, vt, causal=causal, window=window,
+                               softcap=softcap, scale=scale, interpret=interp)
+    return o.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single query token per sequence)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cache_len: jax.Array, *, window: int = 0,
+                     softcap: Optional[float] = None,
+                     scale: Optional[float] = None,
+                     impl: Impl = None) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, S, K, hd); cache_len: () int32 → (B, H, hd)."""
+    kind, interp = _resolve(impl)
+    s = k.shape[1]
+    if window > 0 and s > window:
+        # static-size band slice around the current position: windowed decode
+        # touches O(window) cache instead of O(S) — same trick the Pallas
+        # kernel plays with block skipping, here at the HLO level.
+        start = jnp.clip(cache_len - window, 0, s - window)
+        k = jax.lax.dynamic_slice_in_dim(k, start, window, axis=1)
+        v = jax.lax.dynamic_slice_in_dim(v, start, window, axis=1)
+        cache_len = cache_len - start
+    if kind in ("ref", "flash_structured"):
+        with jax.named_scope("KERNELREGION_decode"):
+            return ref.decode_attention(q, k, v, cache_len, window=window,
+                                        softcap=softcap, scale=scale)
+    b, h, hd = q.shape
+    kh = k.shape[2]
+    group = h // kh
+    qg = q.reshape(b, kh, group, hd)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = decode_attention_pallas(qg, kt, vt, cache_len, window=window,
+                                softcap=softcap, scale=scale, interpret=interp)
+    return o.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# chunked gated linear attention (model layout (B, S, H, d))
+# ---------------------------------------------------------------------------
+
+def ssm_scan(q: jax.Array, k: jax.Array, v: jax.Array, log_g: jax.Array,
+             state: Optional[jax.Array] = None, *, chunk: int = 64,
+             impl: Impl = None) -> Tuple[jax.Array, jax.Array]:
+    """q, k: (B, S, H, dk); v: (B, S, H, dv); log_g: (B, S, H);
+    state (B, H, dk, dv) → (o (B, S, H, dv), final_state)."""
+    kind, interp = _resolve(impl)
+    if kind in ("ref", "flash_structured"):
+        with jax.named_scope("KERNELREGION_ssm"):
+            return ref.ssm_scan(q, k, v, log_g, state, chunk=chunk)
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    o, sf = ssm_scan_pallas(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), log_g.transpose(0, 2, 1),
+        state.astype(jnp.float32), chunk=chunk, interpret=interp)
+    return o.transpose(0, 2, 1, 3), sf
+
+
+ssm_decode_step = ref.ssm_decode_step  # O(1) per-token update; no kernel needed
+
+
+# ---------------------------------------------------------------------------
+# sLSTM recurrence
+# ---------------------------------------------------------------------------
+
+def slstm_scan(gates_x: jax.Array, r: jax.Array, state=None, *,
+               impl: Impl = None):
+    """gates_x: (B,S,4d) [z|i|f|o]; r: (H,P,4P) → (h (B,S,d), final state)."""
+    kind, interp = _resolve(impl)
+    if kind in ("ref", "flash_structured"):
+        with jax.named_scope("KERNELREGION_slstm"):
+            return ref.slstm_scan(gates_x, r, state)
+    from repro.kernels.slstm_scan import slstm_scan_pallas
+    assert state is None, "pallas slstm kernel starts from zero state"
+    return slstm_scan_pallas(gates_x, r, interpret=interp)

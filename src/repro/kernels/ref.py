@@ -1,0 +1,444 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references (tests assert the Pallas kernels match
+them in interpret mode) AND the CPU execution path: this container has no
+TPU, so model code dispatches here via ``repro.kernels.ops``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# region_score — Eq. (2) of the paper: all-pairs text-image cosine attention
+# ---------------------------------------------------------------------------
+
+def region_score(v: jax.Array, e: jax.Array) -> jax.Array:
+    """K(x^r) = sum_i sum_j cos(V_i(x^r), E_j(T)).
+
+    v: (B, R, Nv, D) visual tokens per region; e: (B, Ne, D) text tokens.
+    Returns (B, R) attention scores.
+    """
+    vn = v / (jnp.linalg.norm(v.astype(jnp.float32), axis=-1, keepdims=True) + 1e-6)
+    en = e / (jnp.linalg.norm(e.astype(jnp.float32), axis=-1, keepdims=True) + 1e-6)
+    return jnp.einsum("brvd,bed->br", vn.astype(jnp.float32),
+                      en.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention — causal/windowed/softcapped GQA attention (prefill/train)
+# ---------------------------------------------------------------------------
+
+def _attn_mask(s_q: int, s_kv: int, window: int, causal: bool,
+               q_offset: int = 0) -> jax.Array:
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_kv)[None, :]
+    mask = jnp.ones((s_q, s_kv), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= kj > qi - window
+    return mask
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, K, hd) with H % K == 0 → (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    group = h // kh
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, sq, kh, group, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = _attn_mask(sq, k.shape[1], window, causal, q_offset=k.shape[1] - sq)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _band_start(i: jax.Array, q_blk: int, band: int, skv: int) -> jax.Array:
+    return jnp.clip(i * q_blk + q_blk - band, 0, skv - band)
+
+
+def _fs_scores(qi, kb, *, scale, softcap):
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kb) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _fs_forward(q, k, v, causal, window, softcap, scale, q_blk, kv_blk):
+    """Returns (o (b,kh,g,nq,q_blk,hd) f32, lse (b,kh,g,nq,q_blk) f32)."""
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    group = h // kh
+    nq = sq // q_blk
+    f32 = jnp.float32
+    qb = q.astype(f32).reshape(b, nq, q_blk, kh, group, hd)
+    qb = qb.transpose(1, 0, 3, 4, 2, 5)           # (nq, b, kh, g, q_blk, hd)
+    kf = k.astype(f32).transpose(0, 2, 1, 3)      # (b, kh, skv, hd)
+    vf = v.astype(f32).transpose(0, 2, 1, 3)
+
+    if window > 0:
+        band = min(window + q_blk, skv)
+
+        def one_q(i, qi):
+            # NB: the q-block index lives in the scan CARRY — were it a
+            # constant xs, XLA hoists the per-block masks for ALL blocks
+            # out of the loop, materialising an S^2-scale pred tensor.
+            start = _band_start(i, q_blk, band, skv)
+            kb = jax.lax.dynamic_slice_in_dim(kf, start, band, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vf, start, band, axis=2)
+            s = _fs_scores(qi, kb, scale=scale, softcap=softcap)
+            rows = i * q_blk + jnp.arange(q_blk)[:, None]
+            cols = start + jnp.arange(band)[None, :]
+            mask = (cols <= rows) & (cols > rows - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m = s.max(-1)
+            p = jnp.exp(s - m[..., None])
+            l = p.sum(-1)
+            o = jnp.einsum("bkgqs,bksd->bkgqd", p, vb) \
+                / jnp.maximum(l, 1e-30)[..., None]
+            return o, m + jnp.log(jnp.maximum(l, 1e-30))
+
+        def q_scan(i, qi):
+            o, lse_i = one_q(i, qi)
+            return i + 1, (o, lse_i)
+
+        _, (o, lse) = jax.lax.scan(q_scan, jnp.int32(0), qb)
+    else:
+        kvb = min(kv_blk, skv)
+        nkv = skv // kvb
+        kb_all = kf.reshape(b, kh, nkv, kvb, hd)
+        vb_all = vf.reshape(b, kh, nkv, kvb, hd)
+
+        def one_q(i, qi):
+            def kv_step(carry, _):
+                j, m_prev, l_prev, acc = carry
+                kb = jax.lax.dynamic_slice_in_dim(kb_all, j, 1, 2)[:, :, 0]
+                vb = jax.lax.dynamic_slice_in_dim(vb_all, j, 1, 2)[:, :, 0]
+                s = _fs_scores(qi, kb, scale=scale, softcap=softcap)
+                if causal:
+                    rows = i * q_blk + jnp.arange(q_blk)[:, None]
+                    cols = j * kvb + jnp.arange(kvb)[None, :]
+                    s = jnp.where((cols <= rows)[None, None, None], s,
+                                  NEG_INF)
+                m_new = jnp.maximum(m_prev, s.max(-1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m_prev - m_new)
+                l_new = alpha * l_prev + p.sum(-1)
+                acc = acc * alpha[..., None] + jnp.einsum(
+                    "bkgqs,bksd->bkgqd", p, vb)
+                return (j + 1, m_new, l_new, acc), None
+
+            m0 = jnp.full((b, kh, group, q_blk), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, kh, group, q_blk), jnp.float32)
+            a0 = jnp.zeros((b, kh, group, q_blk, hd), jnp.float32)
+            (_, m, l, acc), _ = jax.lax.scan(
+                kv_step, (jnp.int32(0), m0, l0, a0), None, length=nkv)
+            o = acc / jnp.maximum(l, 1e-30)[..., None]
+            return o, m + jnp.log(jnp.maximum(l, 1e-30))
+
+        def q_scan(i, qi):
+            o, lse_i = one_q(i, qi)
+            return i + 1, (o, lse_i)
+
+        _, (o, lse) = jax.lax.scan(q_scan, jnp.int32(0), qb)
+    # o: (nq, b, kh, g, q_blk, hd); lse: (nq, b, kh, g, q_blk)
+    return o, lse, qb
+
+
+def _fs_out(o, b, sq, h, hd, dtype):
+    return o.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hd).astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_structured(q, k, v, causal=True, window=0, softcap=None,
+                     scale=None, q_blk=256, kv_blk=256):
+    """Tiled online-softmax attention in pure jnp — the HLO-level analogue of
+    the Pallas flash kernel, used for dry-run lowering so the compiled
+    FLOP/byte/memory profile matches the TPU target:
+
+    - no (B, H, S, S) score materialisation in HBM,
+    - custom VJP that recomputes P blockwise (flash backward) instead of
+      letting scan save softmax residuals (which silently reconstructs S²),
+    - sliding-window layers slice a static (window + q_blk) KV band per
+      query block → O(S·window) work, which is what makes ``long_500k``
+      lowerable for the SWA architectures.
+    """
+    b, sq, h, hd = q.shape
+    scale = scale if scale is not None else hd ** -0.5
+    q_blk = min(q_blk, sq)
+    assert sq % q_blk == 0 and sq == k.shape[1], "prefill/train only"
+    o, _, _ = _fs_forward(q, k, v, causal, window, softcap, scale, q_blk,
+                          kv_blk)
+    return _fs_out(o, b, sq, h, hd, q.dtype)
+
+
+def _fs_fwd(q, k, v, causal, window, softcap, scale, q_blk, kv_blk):
+    b, sq, h, hd = q.shape
+    scale_ = scale if scale is not None else hd ** -0.5
+    q_blk_ = min(q_blk, sq)
+    o, lse, _ = _fs_forward(q, k, v, causal, window, softcap, scale_, q_blk_,
+                            kv_blk)
+    out = _fs_out(o, b, sq, h, hd, q.dtype)
+    return out, (q, k, v, out, lse)
+
+
+def _fs_bwd(causal, window, softcap, scale, q_blk, kv_blk, res, do):
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    group = h // kh
+    scale_ = scale if scale is not None else hd ** -0.5
+    q_blk_ = min(q_blk, sq)
+    nq = sq // q_blk_
+    f32 = jnp.float32
+
+    qb = q.astype(f32).reshape(b, nq, q_blk_, kh, group, hd)
+    qb = qb.transpose(1, 0, 3, 4, 2, 5)
+    dob = do.astype(f32).reshape(b, nq, q_blk_, kh, group, hd)
+    dob = dob.transpose(1, 0, 3, 4, 2, 5)
+    ob = out.astype(f32).reshape(b, nq, q_blk_, kh, group, hd)
+    ob = ob.transpose(1, 0, 3, 4, 2, 5)
+    delta = (dob * ob).sum(-1)                   # (nq, b, kh, g, q_blk)
+    kf = k.astype(f32).transpose(0, 2, 1, 3)     # (b, kh, skv, hd)
+    vf = v.astype(f32).transpose(0, 2, 1, 3)
+
+    def block_grads(i, qi, doi, lsei, di, kb, vb, mask):
+        """Shared per-(q block × kv band) backward math."""
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kb) * scale_
+        if softcap is not None:
+            t = jnp.tanh(s / softcap)
+            s_capped = softcap * t
+            dcap = 1.0 - t * t
+        else:
+            s_capped = s
+            dcap = None
+        s_capped = jnp.where(mask[None, None, None], s_capped, NEG_INF)
+        p = jnp.exp(s_capped - lsei[..., None])
+        dp = jnp.einsum("bkgqd,bksd->bkgqs", doi, vb)
+        ds = p * (dp - di[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        dq_i = jnp.einsum("bkgqs,bksd->bkgqd", ds, kb) * scale_
+        dk_b = jnp.einsum("bkgqs,bkgqd->bksd", ds, qi) * scale_
+        dv_b = jnp.einsum("bkgqs,bkgqd->bksd", p, doi)
+        return dq_i, dk_b, dv_b
+
+    if window > 0:
+        band = min(window + q_blk_, skv)
+
+        def q_step(carry, xs):
+            dk_acc, dv_acc, i = carry
+            qi, doi, lsei, di = xs
+            start = _band_start(i, q_blk_, band, skv)
+            kb = jax.lax.dynamic_slice_in_dim(kf, start, band, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vf, start, band, axis=2)
+            rows = i * q_blk_ + jnp.arange(q_blk_)[:, None]
+            cols = start + jnp.arange(band)[None, :]
+            mask = (cols <= rows) & (cols > rows - window)
+            dq_i, dk_b, dv_b = block_grads(i, qi, doi, lsei, di, kb, vb, mask)
+            upd_k = jax.lax.dynamic_slice_in_dim(dk_acc, start, band, 2) + dk_b
+            upd_v = jax.lax.dynamic_slice_in_dim(dv_acc, start, band, 2) + dv_b
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(dk_acc, upd_k, start, 2)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(dv_acc, upd_v, start, 2)
+            return (dk_acc, dv_acc, i + 1), dq_i
+
+        dk0 = jnp.zeros_like(kf)
+        dv0 = jnp.zeros_like(vf)
+        (dk_acc, dv_acc, _), dq = jax.lax.scan(
+            q_step, (dk0, dv0, jnp.int32(0)), (qb, dob, lse, delta))
+    else:
+        kvb = min(kv_blk, skv)
+        nkv = skv // kvb
+
+        def q_step(carry, xs):
+            dk_acc, dv_acc, i = carry
+            qi, doi, lsei, di = xs
+
+            def kv_step(inner, _):
+                dk_a, dv_a, dq_i, j = inner
+                kb = jax.lax.dynamic_slice_in_dim(kf, j * kvb, kvb, 2)
+                vb = jax.lax.dynamic_slice_in_dim(vf, j * kvb, kvb, 2)
+                rows = i * q_blk_ + jnp.arange(q_blk_)[:, None]
+                cols = j * kvb + jnp.arange(kvb)[None, :]
+                mask = (cols <= rows) if causal else jnp.ones(
+                    (q_blk_, kvb), bool)
+                dq_j, dk_b, dv_b = block_grads(i, qi, doi, lsei, di, kb, vb,
+                                               mask)
+                dk_a = jax.lax.dynamic_update_slice_in_dim(
+                    dk_a, jax.lax.dynamic_slice_in_dim(dk_a, j * kvb, kvb, 2)
+                    + dk_b, j * kvb, 2)
+                dv_a = jax.lax.dynamic_update_slice_in_dim(
+                    dv_a, jax.lax.dynamic_slice_in_dim(dv_a, j * kvb, kvb, 2)
+                    + dv_b, j * kvb, 2)
+                return (dk_a, dv_a, dq_i + dq_j, j + 1), None
+
+            dq_i0 = jnp.zeros_like(qi)
+            (dk_acc, dv_acc, dq_i, _), _ = jax.lax.scan(
+                kv_step, (dk_acc, dv_acc, dq_i0, jnp.int32(0)), None,
+                length=nkv)
+            return (dk_acc, dv_acc, i + 1), dq_i
+
+        dk0 = jnp.zeros_like(kf)
+        dv0 = jnp.zeros_like(vf)
+        (dk_acc, dv_acc, _), dq = jax.lax.scan(
+            q_step, (dk0, dv0, jnp.int32(0)), (qb, dob, lse, delta))
+
+    dq = dq.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hd).astype(q.dtype)
+    dk = dk_acc.transpose(0, 2, 1, 3).astype(k.dtype)
+    dv = dv_acc.transpose(0, 2, 1, 3).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_structured.defvjp(_fs_fwd, _fs_bwd)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention — one-token GQA attention against a (possibly long) cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cache_len: jax.Array, *, window: int = 0,
+                     softcap: Optional[float] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, S, K, hd); cache_len: () or (B,) int32
+    (number of valid cache slots incl. the current token) → (B, H, hd)."""
+    b, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    group = h // kh
+    scale = scale if scale is not None else hd ** -0.5
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    qf = q.astype(jnp.float32).reshape(b, kh, group, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = jnp.arange(s)[None, :]
+    valid = pos < cache_len[:, None]
+    if window > 0:
+        valid &= pos > (cache_len[:, None] - 1 - window)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan — chunked gated linear attention (Mamba-2 SSD / mLSTM core)
+# ---------------------------------------------------------------------------
+
+def ssm_scan(q: jax.Array, k: jax.Array, v: jax.Array, log_g: jax.Array,
+             state: Optional[jax.Array] = None, *,
+             chunk: int = 64) -> Tuple[jax.Array, jax.Array]:
+    """Gated linear attention: S_t = exp(g_t)·S_{t-1} + k_t v_tᵀ ; o_t = S_tᵀ q_t.
+
+    q, k: (B, S, H, dk); v: (B, S, H, dv); log_g: (B, S, H) per-token log decay
+    (≤ 0); state: (B, H, dk, dv) initial state.  Returns (o, final_state).
+    Chunk-parallel form: intra-chunk dense matmuls + scan over chunk states.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(b, n, chunk, h, dk).transpose(1, 0, 3, 2, 4)
+    kc = k.astype(f32).reshape(b, n, chunk, h, dk).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(f32).reshape(b, n, chunk, h, dv).transpose(1, 0, 3, 2, 4)
+    gc = log_g.astype(f32).reshape(b, n, chunk, h).transpose(1, 0, 3, 2)
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), f32)
+    else:
+        state = state.astype(f32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), f32))
+
+    def step(carry, xs):
+        st = carry                                   # (b, h, dk, dv)
+        qi, ki, vi, gi = xs                          # (b,h,c,d*) / (b,h,c)
+        cum = jnp.cumsum(gi, axis=-1)                # inclusive cumsum
+        total = cum[..., -1:]
+        # inter-chunk: o_i += exp(cum_i) q_i · S_prev
+        o_inter = jnp.einsum("bhcd,bhdv->bhcv", qi * jnp.exp(cum)[..., None], st)
+        # intra-chunk: scores_ij = (q_i·k_j) exp(cum_i - cum_j), j<=i
+        scores = jnp.einsum("bhcd,bhed->bhce", qi, ki)
+        decay = jnp.exp(cum[..., :, None] - cum[..., None, :])
+        scores = scores * decay * tri
+        o_intra = jnp.einsum("bhce,bhev->bhcv", scores, vi)
+        # state update
+        kd = ki * jnp.exp(total - cum)[..., None]
+        st = jnp.exp(total)[..., None] * st + jnp.einsum("bhcd,bhcv->bhdv", kd, vi)
+        return st, o_inter + o_intra
+
+    final, o = jax.lax.scan(step, state, (qc, kc, vc, gc))
+    o = o.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dv)
+    return o.astype(q.dtype), final
+
+
+def ssm_decode_step(q: jax.Array, k: jax.Array, v: jax.Array,
+                    log_g: jax.Array, state: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. q,k: (B,H,dk); v: (B,H,dv); log_g: (B,H);
+    state: (B,H,dk,dv) → (o (B,H,dv), new_state)."""
+    f32 = jnp.float32
+    st = jnp.exp(log_g.astype(f32))[..., None, None] * state.astype(f32)
+    st = st + jnp.einsum("bhd,bhv->bhdv", k.astype(f32), v.astype(f32))
+    o = jnp.einsum("bhd,bhdv->bhv", q.astype(f32), st)
+    return o.astype(q.dtype), st
+
+
+# ---------------------------------------------------------------------------
+# slstm_scan — stabilised sLSTM recurrence (sequential; Pallas keeps the
+# recurrent weights + state VMEM-resident on TPU)
+# ---------------------------------------------------------------------------
+
+def slstm_scan(gates_x: jax.Array, r: jax.Array,
+               state=None) -> Tuple[jax.Array, Tuple]:
+    """gates_x: (B, S, 4d) blocks [z|i|f|o]; r: (H, P, 4P) block-diagonal
+    recurrent weights (per-head output [z|i|f|o]).  Returns
+    (h (B, S, d), final (h, c, n, m) each (B, H, P))."""
+    b, s, d4 = gates_x.shape
+    d = d4 // 4
+    heads, p_dim = r.shape[0], r.shape[1]
+    f32 = jnp.float32
+    if state is None:
+        z = jnp.zeros((b, heads, p_dim), f32)
+        state = (z, z, z + 1e-6, z)
+    h0, c0, n0, m0 = [x.astype(f32) for x in state]
+    rf = r.astype(f32)
+
+    def step(carry, gx):
+        h_prev, c_prev, n_prev, m_prev = carry
+        rec = jnp.einsum("bhp,hpq->bhq", h_prev, rf)          # (B, H, 4P)
+        g = gx.astype(f32).reshape(b, 4, heads, p_dim) \
+            + rec.reshape(b, heads, 4, p_dim).transpose(0, 2, 1, 3)
+        zt = jnp.tanh(g[:, 0])
+        ii = g[:, 1]
+        log_f = jax.nn.log_sigmoid(g[:, 2])
+        ot = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum(log_f + m_prev, ii)
+        i_p = jnp.exp(ii - m_new)
+        f_p = jnp.exp(log_f + m_prev - m_new)
+        c_new = f_p * c_prev + i_p * zt
+        n_new = f_p * n_prev + i_p
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    final, hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                             gates_x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(gates_x.dtype)
+    return h, final

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for the sLSTM recurrence (beyond-paper addition).
+
+The sLSTM cell is inherently sequential (recurrent gate matrices), so the
+HLO-level `lax.scan` re-reads the recurrent weights and round-trips the
+(h, c, n, m) state through HBM every step — the dominant memory term of the
+xlstm-125m roofline.  This kernel keeps R and the state resident in VMEM
+across the whole time loop: HBM traffic collapses to streaming gates_x in
+and h out once.
+
+Layout contract (shared with kernels/ref.py::slstm_scan):
+  gates_x (B, S, 4·d)  input-side pre-activations, blocks [z | i | f | o],
+                       each block h-major (H, P) flattened
+  r       (H, P, 4·P)  block-diagonal recurrent weights; the 4P output of
+                       head h splits as [z | i | f | o] per head
+Outputs: h (B, S, d) and the final (h, c, n, m) state (B, H, P) each.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slstm_kernel(gx_ref, r_ref, h_out_ref, hf_ref, cf_ref, nf_ref, mf_ref,
+                  h_ref, c_ref, n_ref, m_ref, *, seq_len: int, heads: int,
+                  p_dim: int):
+    d = heads * p_dim
+    h_ref[...] = jnp.zeros_like(h_ref)
+    c_ref[...] = jnp.zeros_like(c_ref)
+    n_ref[...] = jnp.full_like(n_ref, 1e-6)
+    m_ref[...] = jnp.zeros_like(m_ref)
+    r = r_ref[...].astype(jnp.float32)            # (H, P, 4P)
+
+    def step(t, _):
+        gx = gx_ref[0, t].astype(jnp.float32)     # (4d,)
+        h_prev = h_ref[...]                       # (H, P)
+        rec = jax.lax.dot_general(
+            h_prev[:, None, :], r, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)[:, 0, :]   # (H, 4P)
+        g = gx.reshape(4, heads, p_dim) \
+            + rec.reshape(heads, 4, p_dim).transpose(1, 0, 2)
+        zt = jnp.tanh(g[0])
+        ii = g[1]
+        log_f = jax.nn.log_sigmoid(g[2])
+        ot = jax.nn.sigmoid(g[3])
+        m_new = jnp.maximum(log_f + m_ref[...], ii)
+        i_p = jnp.exp(ii - m_new)
+        f_p = jnp.exp(log_f + m_ref[...] - m_new)
+        c_new = f_p * c_ref[...] + i_p * zt
+        n_new = f_p * n_ref[...] + i_p
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        h_ref[...] = h_new
+        c_ref[...] = c_new
+        n_ref[...] = n_new
+        m_ref[...] = m_new
+        h_out_ref[0, t] = h_new.reshape(d).astype(h_out_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, seq_len, step, ())
+    hf_ref[0] = h_ref[...]
+    cf_ref[0] = c_ref[...]
+    nf_ref[0] = n_ref[...]
+    mf_ref[0] = m_ref[...]
+
+
+def slstm_scan_pallas(gates_x: jax.Array, r: jax.Array, *,
+                      interpret: bool = False):
+    """gates_x: (B, S, 4d); r: (H, P, 4P) → (h (B,S,d), (hf,cf,nf,mf))."""
+    b, s, d4 = gates_x.shape
+    d = d4 // 4
+    heads, p_dim = r.shape[0], r.shape[1]
+    kernel = functools.partial(_slstm_kernel, seq_len=s, heads=heads,
+                               p_dim=p_dim)
+    state_spec = pl.BlockSpec((1, heads, p_dim), lambda i: (i, 0, 0))
+    state_shape = jax.ShapeDtypeStruct((b, heads, p_dim), jnp.float32)
+    h, hf, cf, nf, mf = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, s, d4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((heads, p_dim, 4 * p_dim), lambda i: (0, 0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+                   state_spec, state_spec, state_spec, state_spec],
+        out_shape=[jax.ShapeDtypeStruct((b, s, d), gates_x.dtype),
+                   state_shape, state_shape, state_shape, state_shape],
+        scratch_shapes=[
+            pltpu.VMEM((heads, p_dim), jnp.float32),
+            pltpu.VMEM((heads, p_dim), jnp.float32),
+            pltpu.VMEM((heads, p_dim), jnp.float32),
+            pltpu.VMEM((heads, p_dim), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gates_x, r)
+    return h, (hf, cf, nf, mf)

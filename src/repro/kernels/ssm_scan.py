@@ -1,0 +1,97 @@
+"""Pallas TPU chunked gated-linear-attention scan (Mamba-2 SSD / mLSTM core).
+
+TPU adaptation of the CUDA selective-scan: instead of a sequential per-token
+recurrence, the sequence is split into chunks; intra-chunk work is dense
+(q·kᵀ decay-masked matmuls on the MXU) and only the O(S/chunk) chunk-state
+recurrence is serialized — the state is carried in VMEM scratch across the
+innermost grid dimension.
+
+Inputs (layout chosen so the chunk axis is contiguous):
+  q, k : (B, H, S, dk)    v : (B, H, S, dv)    log_g : (B, H, S) (≤ 0)
+  state: (B, H, dk, dv)   initial recurrent state
+Outputs: o (B, H, S, dv), final_state (B, H, dk, dv).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(q_ref, k_ref, v_ref, g_ref, s0_ref, o_ref, sf_ref, st_ref, *,
+                chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        st_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (chunk, dk)
+    k = k_ref[0, 0].astype(jnp.float32)          # (chunk, dk)
+    v = v_ref[0, 0].astype(jnp.float32)          # (chunk, dv)
+    g = g_ref[0, 0].astype(jnp.float32)          # (chunk,)
+    cum = jnp.cumsum(g)                          # inclusive
+    total = cum[-1]
+
+    st = st_ref[...]                             # (dk, dv)
+    # inter-chunk contribution
+    o_inter = jax.lax.dot_general(q * jnp.exp(cum)[:, None], st,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # intra-chunk: scores_ij = (q_i·k_j) exp(cum_i − cum_j) for j ≤ i
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    scores = jnp.where(cols <= rows, scores * decay, 0.0)
+    o_intra = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    o_ref[0, 0] = (o_inter + o_intra).astype(o_ref.dtype)
+
+    # state update: S ← exp(total)·S + Σ_j exp(total − cum_j) k_j v_jᵀ
+    kd = k * jnp.exp(total - cum)[:, None]
+    st_ref[...] = jnp.exp(total) * st + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ic == n_chunks - 1)
+    def _finalize():
+        sf_ref[0, 0] = st_ref[...]
+
+
+def ssm_scan_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                    log_g: jax.Array, state: jax.Array, *,
+                    chunk: int = 64, interpret: bool = False):
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=n_chunks)
+
+    o, sf = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, dv), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, ic: (b_, h_, ic)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, dv), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, h, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_g, state)
+    return o, sf

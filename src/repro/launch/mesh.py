@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) over ("data", "model") — 256 TPU v5e chips.
+Multi-pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips, the
+"pod" axis crossing the inter-pod DCN/ICI boundary.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the locally-available devices (tests / examples)."""
+    n = len(jax.devices())
+    data = max(n // model, 1)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes of a mesh (pod folds into data parallelism)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` mirrors the real batch/cache layouts used by the
+trainer and serving engine; the dry-run lowers against these.  VLM/audio
+frontends are stubs: patch/frame embeddings appear as precomputed inputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer as T
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _model_inputs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, SDS]:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "vision":
+        n_patch = min(cfg.num_patches, seq // 2)
+        return {
+            "patch_embeds": SDS((batch, n_patch, cfg.d_model), dt),
+            "tokens": SDS((batch, seq - n_patch), jnp.int32),
+        }
+    if cfg.frontend == "audio":
+        return {"codes": SDS((batch, seq, cfg.num_codebooks), jnp.int32)}
+    return {"tokens": SDS((batch, seq), jnp.int32)}
+
+
+def _decode_inputs(cfg: ArchConfig, batch: int) -> Dict[str, SDS]:
+    if cfg.frontend == "audio":
+        return {"codes": SDS((batch, 1, cfg.num_codebooks), jnp.int32)}
+    return {"tokens": SDS((batch, 1), jnp.int32)}
+
+
+def params_shape(cfg: ArchConfig) -> Any:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(T.init_params, cfg), key)
+
+
+def cache_shape(cfg: ArchConfig, batch: int, max_len: int) -> Tuple:
+    return jax.eval_shape(
+        functools.partial(T.init_cache, cfg, batch, max_len))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Everything the lowered step function needs, as ShapeDtypeStructs.
+
+    train  → {batch}                         for train_step(params, opt, batch)
+    prefill→ {inputs}                        for prefill(params, inputs)
+    decode → {cache, inputs, index}          for decode_step(params, cache, ...)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = dict(_model_inputs(cfg, b, s))
+        batch["targets"] = SDS((b, s), jnp.int32)
+        batch["loss_mask"] = SDS((b, s), jnp.float32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        return {"inputs": _model_inputs(cfg, b, s)}
+    if shape.kind == "decode":
+        return {
+            "cache": cache_shape(cfg, b, s),
+            "inputs": _decode_inputs(cfg, b),
+            "index": SDS((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,6 @@
+"""Model zoo: composable decoder blocks + the 10 assigned architectures.
+
+``transformer`` is the generic stack; architectures are pure data
+(``repro.configs``).  See ``frontends`` for the stubbed modality frontends.
+"""
+from repro.models import transformer, layers, frontends  # noqa: F401

@@ -1,0 +1,446 @@
+"""Model building blocks (pure JAX; params are pytrees of jnp arrays).
+
+Every mixer consumes/produces (B, S, d_model) and threads an optional
+recurrent cache so the same code serves train / prefill / decode:
+
+- ``ATTN``   GQA softmax attention (RoPE or M-RoPE, sliding window, qk-norm,
+             logit softcap) backed by the flash/decode Pallas kernels.
+- ``MAMBA``  Mamba-2-style SSD head (selective gated linear attention) backed
+             by the chunked ``ssm_scan`` kernel.  (The short depthwise conv of
+             the CUDA reference is omitted — documented in DESIGN.md §7.)
+- ``MLSTM``  xLSTM matrix-memory cell: GLA with sigmoid forget/input gates and
+             a q·n normaliser, folded into ``ssm_scan`` via an augmented value
+             column.
+- ``SLSTM``  xLSTM scalar-memory cell with block-diagonal recurrence and
+             stabilised exponential gating (sequential ``lax.scan``).
+- ``HYBRID`` Hymba: parallel attention + mamba branches fused by per-branch
+             RMS-normalised mean.
+- MoE FFN    capacity-based scatter dispatch (top-k, optional shared experts,
+             load-balance aux loss) — O(T·k·d) dispatch, EP-shardable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec, ATTN, MAMBA, MLSTM, SLSTM, HYBRID
+from repro.kernels import ops
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Common helpers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def _dense(key, fan_in, shape, dtype):
+    return (jax.random.normal(key, shape) * (fan_in ** -0.5)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                mrope_sections: Optional[Tuple[int, int, int]] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """positions: (B, S) or (3, B, S) for M-RoPE → cos, sin of (B, S, hd/2)."""
+    half = head_dim // 2
+    inv_freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 2:
+        ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (B,S,half)
+    else:
+        assert mrope_sections is not None and sum(mrope_sections) == half
+        ang3 = positions.astype(jnp.float32)[..., None] * inv_freq  # (3,B,S,half)
+        sect = jnp.concatenate([
+            jnp.full((n,), i, jnp.int32) for i, n in enumerate(mrope_sections)
+        ])
+        ang = jnp.take_along_axis(
+            ang3.transpose(1, 2, 3, 0),  # (B,S,half,3)
+            jnp.broadcast_to(sect[None, None, :, None],
+                             ang3.shape[1:3] + (half, 1)), axis=-1)[..., 0]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention mixer
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _dense(k1, d, (d, nq), dt),
+        "wk": _dense(k2, d, (d, nkv), dt),
+        "wv": _dense(k3, d, (d, nkv), dt),
+        "wo": _dense(k4, nq, (nq, d), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int,
+                    dtype) -> Params:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
+              cos: jax.Array, sin: jax.Array,
+              cache: Optional[Params] = None,
+              cache_index: Optional[jax.Array] = None,
+              mode: str = "train") -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if mode in ("train", "prefill"):
+        o = ops.flash_attention(q, k, v, causal=True, window=window,
+                                softcap=cfg.attn_softcap)
+        new_cache = None
+        if mode == "prefill":
+            assert cache is not None
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1),
+            }
+    else:  # decode: s == 1
+        assert cache is not None and cache_index is not None
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        o = ops.decode_attention(q[:, 0], ck, cv, idx + 1, window=window,
+                                 softcap=cfg.attn_softcap)
+        o = o[:, None]
+    o = o.reshape(b, s, cfg.num_heads * hd)
+    return o @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wg": _dense(k1, d, (d, ff), dt),
+            "wu": _dense(k2, d, (d, ff), dt),
+            "wd": _dense(k3, ff, (ff, d), dt)}
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN — capacity-based scatter dispatch (EP-shardable, O(T·k·d) routing)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.moe_num_experts
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": _dense(k1, d, (d, e), jnp.float32),
+        "wg": _dense(k2, d, (e, d, ff), dt),
+        "wu": _dense(k3, d, (e, d, ff), dt),
+        "wd": _dense(k4, ff, (e, ff, d), dt),
+    }
+    if cfg.moe_num_shared:
+        shared = dataclasses.replace(cfg, d_ff=cfg.moe_num_shared * ff)
+        p["shared"] = init_mlp(k5, shared)
+    return p
+
+
+def moe(p: Params, x: jax.Array, cfg: ArchConfig
+        ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out, aux_load_balance_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    xf = x.reshape(t, d)
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                       # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(0)                                        # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (t * k)
+    aux = cfg.moe_aux_loss_weight * e * jnp.sum(me * ce)
+
+    capacity = max(int(cfg.moe_capacity_factor * t * k / e) + 1, 8)
+    flat_idx = idx.reshape(t * k)                             # token-major
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)     # (T·k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(pos, flat_idx[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    slot = jnp.where(keep, pos, capacity - 1)
+
+    x_rep = jnp.repeat(xf, k, axis=0)                         # (T·k, d)
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[flat_idx, slot].add(
+        jnp.where(keep[:, None], x_rep, jnp.zeros_like(x_rep)))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    out_buf = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["wd"])
+
+    y = out_buf[flat_idx, slot]                               # (T·k, d)
+    y = y * (keep[:, None] * gate.reshape(t * k, 1)).astype(y.dtype)
+    y = y.reshape(t, k, d).sum(axis=1)
+    if "shared" in p:
+        y = y + mlp(p["shared"], xf)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2-style SSD mixer (selective gated linear attention)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    h = cfg.resolved_ssm_heads
+    n = max(cfg.ssm_state, 16)
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "w_in": _dense(k1, d, (d, 2 * d_in), dt),
+        "w_bc": _dense(k2, d, (d, 2 * h * n), dt),
+        "w_dt": _dense(k3, d, (d, h), dt),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "w_out": _dense(k4, d_in, (d_in, d), dt),
+        "d_skip": jnp.ones((h,), jnp.float32) * 0.0,
+    }
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int) -> Params:
+    h = cfg.resolved_ssm_heads
+    n = max(cfg.ssm_state, 16)
+    p_dim = cfg.ssm_expand * cfg.d_model // h
+    return {"state": jnp.zeros((batch, h, n, p_dim), jnp.float32)}
+
+
+def mamba(p: Params, x: jax.Array, *, cfg: ArchConfig,
+          cache: Optional[Params] = None, mode: str = "train"
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    h = cfg.resolved_ssm_heads
+    n = max(cfg.ssm_state, 16)
+    d_in = cfg.ssm_expand * d
+    p_dim = d_in // h
+
+    xz = x @ p["w_in"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                       # (B,S,d_in)
+    bc = x @ p["w_bc"]
+    b_mat, c_mat = jnp.split(bc.reshape(b, s, h, 2 * n), 2, axis=-1)
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    log_g = -dt * jnp.exp(p["a_log"])                          # ≤ 0
+    v = x_in.reshape(b, s, h, p_dim) * dt[..., None].astype(x.dtype)
+
+    state = cache["state"] if cache is not None else None
+    if mode == "decode":
+        o, new_state = ops.ssm_decode_step(
+            c_mat[:, 0], b_mat[:, 0], v[:, 0], log_g[:, 0], state)
+        o = o[:, None]
+    else:
+        o, new_state = ops.ssm_scan(c_mat, b_mat, v, log_g, state)
+    o = o + v * p["d_skip"][:, None].astype(x.dtype)           # D skip path
+    o = o.reshape(b, s, d_in) * jax.nn.silu(z)
+    out = o @ p["w_out"]
+    new_cache = {"state": new_state} if mode in ("prefill", "decode") else None
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM mLSTM mixer (matrix memory with q·n normaliser)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_in = 2 * d
+    h = cfg.resolved_ssm_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": _dense(ks[0], d, (d, 2 * d_in), dt),
+        "wq": _dense(ks[1], d_in, (d_in, d_in), dt),
+        "wk": _dense(ks[2], d_in, (d_in, d_in), dt),
+        "wv": _dense(ks[3], d_in, (d_in, d_in), dt),
+        "w_i": _dense(ks[4], d_in, (d_in, h), jnp.float32),
+        "w_f": _dense(ks[5], d_in, (d_in, h), jnp.float32),
+        "f_bias": jnp.ones((h,), jnp.float32) * 3.0,
+        "w_down": _dense(ks[6], d_in, (d_in, d), dt),
+    }
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int) -> Params:
+    h = cfg.resolved_ssm_heads
+    dk = 2 * cfg.d_model // h
+    return {"state": jnp.zeros((batch, h, dk, dk + 1), jnp.float32)}
+
+
+def mlstm(p: Params, x: jax.Array, *, cfg: ArchConfig,
+          cache: Optional[Params] = None, mode: str = "train"
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    h = cfg.resolved_ssm_heads
+    d_in = 2 * d
+    dk = d_in // h
+
+    up = x @ p["w_up"]
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q = (x_in @ p["wq"]).reshape(b, s, h, dk) * (dk ** -0.5)
+    k = (x_in @ p["wk"]).reshape(b, s, h, dk)
+    v = (x_in @ p["wv"]).reshape(b, s, h, dk)
+    i_gate = jax.nn.sigmoid((x_in.astype(jnp.float32) @ p["w_i"]))  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(
+        (x_in.astype(jnp.float32) @ p["w_f"]) + p["f_bias"])
+
+    # Fold normaliser n into the GLA state via an augmented value column.
+    k_scaled = k * i_gate[..., None].astype(k.dtype)
+    v_aug = jnp.concatenate(
+        [v, jnp.ones((b, s, h, 1), v.dtype)], axis=-1)          # (B,S,H,dk+1)
+
+    state = cache["state"] if cache is not None else None
+    if mode == "decode":
+        o_aug, new_state = ops.ssm_decode_step(
+            q[:, 0], k_scaled[:, 0], v_aug[:, 0], log_f[:, 0], state)
+        o_aug = o_aug[:, None]
+    else:
+        o_aug, new_state = ops.ssm_scan(q, k_scaled, v_aug, log_f, state)
+    o, den = o_aug[..., :dk], o_aug[..., dk:]
+    o = o / jnp.maximum(jnp.abs(den), 1.0)
+    o = o.reshape(b, s, d_in) * jax.nn.silu(z)
+    out = o @ p["w_down"]
+    new_cache = {"state": new_state} if mode in ("prefill", "decode") else None
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM sLSTM mixer (scalar memory, stabilised exponential gating)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.resolved_ssm_heads
+    p_dim = d // h
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": _dense(ks[0], d, (d, 4 * d), jnp.float32),
+        "r_gates": _dense(ks[1], p_dim, (h, p_dim, 4 * p_dim), jnp.float32),
+        "bias": jnp.concatenate([jnp.zeros((2 * d,)),
+                                 jnp.ones((d,)) * 3.0,     # forget bias
+                                 jnp.zeros((d,))]).astype(jnp.float32),
+        "w_out": _dense(ks[2], d, (d, d), dt),
+    }
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int) -> Params:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": z}
+
+
+def slstm(p: Params, x: jax.Array, *, cfg: ArchConfig,
+          cache: Optional[Params] = None, mode: str = "train"
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    h = cfg.resolved_ssm_heads
+    p_dim = d // h
+
+    gates_x = x.astype(jnp.float32) @ p["w_gates"] + p["bias"]  # (B,S,4d)
+
+    state = None
+    if cache is not None:
+        state = tuple(cache[k].astype(jnp.float32).reshape(b, h, p_dim)
+                      for k in ("h", "c", "n", "m"))
+    hs, final = ops.slstm_scan(gates_x, p["r_gates"], state)
+    out = hs.astype(x.dtype) @ p["w_out"]
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        hf, cf, nf, mf = final
+        new_cache = {"h": hf.reshape(b, d), "c": cf.reshape(b, d),
+                     "n": nf.reshape(b, d), "m": mf.reshape(b, d)}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Hymba hybrid mixer: attention ‖ mamba, per-branch normalised mean
+# ---------------------------------------------------------------------------
+
+def init_hybrid(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "attn": init_attention(k1, cfg),
+        "mamba": init_mamba(k2, cfg),
+        "norm_a": jnp.zeros((cfg.d_model,), dt),
+        "norm_m": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype) -> Params:
+    return {"attn": init_attn_cache(cfg, batch, max_len, dtype),
+            "mamba": init_mamba_cache(cfg, batch)}
+
+
+def hybrid(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
+           cos: jax.Array, sin: jax.Array, cache: Optional[Params] = None,
+           cache_index: Optional[jax.Array] = None, mode: str = "train"
+           ) -> Tuple[jax.Array, Optional[Params]]:
+    a_out, a_cache = attention(
+        p["attn"], x, cfg=cfg, window=window, cos=cos, sin=sin,
+        cache=None if cache is None else cache["attn"],
+        cache_index=cache_index, mode=mode)
+    m_out, m_cache = mamba(
+        p["mamba"], x, cfg=cfg,
+        cache=None if cache is None else cache["mamba"], mode=mode)
+    out = 0.5 * (rms_norm(a_out, p["norm_a"], cfg.norm_eps)
+                 + rms_norm(m_out, p["norm_m"], cfg.norm_eps))
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"attn": a_cache, "mamba": m_cache}
+    return out, new_cache

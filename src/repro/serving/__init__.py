@@ -1,0 +1,4 @@
+"""Serving runtime: batched engine + two-tier cascade server."""
+from repro.serving.request import Request, Response  # noqa: F401
+from repro.serving.engine import InferenceEngine, EngineConfig  # noqa: F401
+from repro.serving.cascade_server import CascadeServer  # noqa: F401

@@ -1,0 +1,32 @@
+"""Serving request/response records."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    task: str                       # vqa | cls | det
+    image: np.ndarray               # (H, W, C)
+    prompt: int                     # class / task prompt id
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    t_arrival: float = 0.0
+    max_new_tokens: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Response:
+    request_id: int
+    tokens: np.ndarray              # (L_ans,)
+    pred: Any
+    tier: str                       # "satellite" | "ground"
+    exit_stage: int                 # −1 = answered onboard
+    latency_s: float
+    tx_bytes: float
+    timings: Dict[str, float] = dataclasses.field(default_factory=dict)

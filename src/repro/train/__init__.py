@@ -1,0 +1,3 @@
+"""Training runtime: AdamW+ZeRO-1, remat'd train step with grad accumulation,
+gradient compression, async checkpointing, elastic recovery plans."""
+from repro.train import optimizer, trainer, checkpoint, compression, elastic  # noqa: F401

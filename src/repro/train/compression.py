@@ -1,0 +1,86 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two schemes, composable with error feedback (memory of the residual is added
+back before the next compression — keeps convergence at high sparsity):
+
+- ``topk``  keep the k largest-magnitude entries per leaf (sparsification);
+- ``int8``  per-leaf symmetric int8 quantisation.
+
+Under pjit the compressed representation is what crosses the ``data``/"pod"
+axes; on this container the compress→decompress round-trip is executed
+exactly so tests can assert the error-feedback invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "none"          # none | topk | int8
+    topk_frac: float = 0.01       # fraction of entries kept for topk
+    error_feedback: bool = True
+
+
+def init_error_state(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_leaf(g: jax.Array, frac: float) -> jax.Array:
+    flat = g.reshape(-1)
+    k = max(int(flat.size * frac), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def _int8_leaf(g: jax.Array) -> jax.Array:
+    scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Params, err: Optional[Params],
+                   cfg: CompressionConfig) -> Tuple[Params, Optional[Params]]:
+    """Returns (decompressed grads as transmitted, new error state)."""
+    if cfg.scheme == "none":
+        return grads, err
+
+    def one(g, e):
+        gf = g.astype(jnp.float32)
+        if cfg.error_feedback and e is not None:
+            gf = gf + e
+        if cfg.scheme == "topk":
+            sent = _topk_leaf(gf, cfg.topk_frac)
+        elif cfg.scheme == "int8":
+            sent = _int8_leaf(gf)
+        else:
+            raise ValueError(cfg.scheme)
+        new_e = gf - sent if cfg.error_feedback else None
+        return sent.astype(g.dtype), new_e
+
+    if err is None:
+        err = init_error_state(grads)
+    # map twice (param trees may legitimately contain tuples as interior
+    # nodes, so a tuple-is-leaf transpose would mis-fire); XLA CSEs the dup.
+    sent = jax.tree.map(lambda g, e: one(g, e)[0], grads, err)
+    new_err = jax.tree.map(lambda g, e: one(g, e)[1], grads, err)
+    return sent, new_err
+
+
+def compressed_bytes(grads: Params, cfg: CompressionConfig) -> float:
+    """Bytes that would cross the DP axis per step (for the perf ledger)."""
+    n = sum(int(x.size) for x in jax.tree.leaves(grads))
+    if cfg.scheme == "none":
+        return 2.0 * n                      # bf16
+    if cfg.scheme == "int8":
+        return 1.0 * n + 4.0 * len(jax.tree.leaves(grads))
+    if cfg.scheme == "topk":
+        k = max(int(n * cfg.topk_frac), 1)
+        return k * (4.0 + 4.0)              # value + index
+    raise ValueError(cfg.scheme)

@@ -1,0 +1,103 @@
+"""pjit-able train step: remat'd forward, grad-accum microbatching,
+optional gradient compression, AdamW.
+
+``make_train_step`` returns a pure function
+``(params, opt_state, batch) → (params, opt_state, metrics)`` suitable for
+``jax.jit(..., in_shardings=..., donate_argnums=(0, 1))`` — the dry-run
+lowers exactly this function on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.train import optimizer as O
+from repro.train import compression as GC
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1            # grad accumulation steps per update
+    remat: bool = True
+    remat_policy: str = "nothing"    # see transformer.REMAT_POLICIES
+    ce_chunks: int = 8
+    compression: GC.CompressionConfig = GC.CompressionConfig()
+
+
+def make_loss_fn(cfg: ArchConfig, train_cfg: "TrainConfig") -> Callable:
+    def loss(params, batch):
+        return T.loss_fn(params, cfg, batch, remat=train_cfg.remat,
+                         remat_policy=train_cfg.remat_policy,
+                         ce_chunks=train_cfg.ce_chunks)
+    return loss
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: O.OptConfig,
+                    train_cfg: TrainConfig = TrainConfig()) -> Callable:
+    loss_fn = make_loss_fn(cfg, train_cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params: Params, opt_state: Dict[str, Any],
+                   batch: Dict[str, jax.Array]
+                   ) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+        mb = train_cfg.microbatches
+        if mb <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # split the global batch into microbatches and accumulate
+            def resplit(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            micro = jax.tree.map(resplit, batch)
+
+            def acc_body(carry, mb_batch):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb_batch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), ms = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss_sum / mb
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        if train_cfg.compression.scheme != "none":
+            err = opt_state.get("err")
+            grads, err = GC.compress_grads(grads, err,
+                                           train_cfg.compression)
+        else:
+            err = None
+
+        new_params, new_opt, stats = O.apply_updates(
+            params, grads, {k: v for k, v in opt_state.items()
+                            if k != "err"}, opt_cfg)
+        if err is not None:
+            new_opt["err"] = err
+        metrics = dict(metrics)
+        metrics.update(stats)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ArchConfig, key: jax.Array,
+                     train_cfg: TrainConfig = TrainConfig()
+                     ) -> Tuple[Params, Dict[str, Any]]:
+    params = T.init_params(cfg, key)
+    opt_state = O.init_opt_state(params)
+    if train_cfg.compression.scheme != "none" \
+            and train_cfg.compression.error_feedback:
+        opt_state["err"] = GC.init_error_state(params)
+    return params, opt_state

@@ -1,0 +1,20 @@
+import os
+import sys
+
+# 8 host devices so the sharding/distribution tests can build a (4,2) mesh.
+# (The 512-device production mesh is only ever forced inside
+# repro.launch.dryrun, never globally — see the dry-run brief.)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def tiny_bundle():
+    """A minimal trained two-tier system shared across integration tests."""
+    from repro.core import pipeline as P
+    return P.build_system(scale="small", n_train=64, n_test=32,
+                          proxy_steps=60, conf_steps=80, seed=0,
+                          tasks=("vqa", "cls"))

@@ -1,0 +1,92 @@
+"""Integration tests for the SpaceVerse cascade (Algorithm 1)."""
+import numpy as np
+import pytest
+
+from repro.baselines import GSOnly, SatelliteOnly
+
+
+def test_cascade_runs_and_reports(tiny_bundle):
+    sv = tiny_bundle.spaceverse()
+    res = sv.evaluate("cls", tiny_bundle.datasets["cls"], batch_size=16)
+    assert 0.0 <= res["performance"] <= 1.0
+    assert res["latency_s"] > 0
+    assert 0.0 <= res["offload_rate"] <= 1.0
+
+
+def test_offload_decisions_respect_thresholds(tiny_bundle):
+    sv = tiny_bundle.spaceverse()
+    data = tiny_bundle.datasets["cls"]
+    out = sv.run_batch("cls", data["images"][:16], data["prompts"][:16])
+    scores = np.asarray(out["conf_scores"])          # (B, stages)
+    off = np.asarray(out["offload"])
+    stage = np.asarray(out["exit_stage"])
+    taus = sv.cc.taus
+    for i in range(16):
+        if stage[i] == 0:
+            assert scores[i, 0] < taus[0]
+        elif stage[i] > 0:
+            assert scores[i, 0] >= taus[0]
+            assert scores[i, stage[i]] < taus[min(stage[i], len(taus) - 1)]
+        else:
+            assert not off[i]
+            assert all(scores[i, j] >= taus[min(j, len(taus) - 1)]
+                       for j in range(scores.shape[1]))
+
+
+def test_tau_extremes_match_single_tier_routing(tiny_bundle):
+    data = tiny_bundle.datasets["cls"]
+    # τ = 1.0 at stage 1: every sample offloads before decode
+    sv_all = tiny_bundle.spaceverse(taus=(1.1, 1.1))
+    out = sv_all.run_batch("cls", data["images"][:8], data["prompts"][:8])
+    assert np.asarray(out["offload"]).all()
+    assert (np.asarray(out["exit_stage"]) == 0).all()
+    # τ = -1: nothing offloads → predictions equal satellite-only
+    sv_none = tiny_bundle.spaceverse(taus=(-1.0, -1.0))
+    out2 = sv_none.run_batch("cls", data["images"][:8], data["prompts"][:8])
+    assert not np.asarray(out2["offload"]).any()
+    sat = SatelliteOnly(tiny_bundle.sat, tiny_bundle.adapter_cfg,
+                        tiny_bundle.cascade_cfg, tiny_bundle.latency)
+    ref = sat.run_batch(data["images"][:8], data["prompts"][:8], "cls")
+    np.testing.assert_array_equal(np.asarray(out2["pred"]),
+                                  np.asarray(ref["pred"]))
+
+
+def test_offloaded_latency_includes_transmission(tiny_bundle):
+    data = tiny_bundle.datasets["cls"]
+    sv_all = tiny_bundle.spaceverse(taus=(1.1, 1.1))
+    sv_none = tiny_bundle.spaceverse(taus=(-1.0, -1.0))
+    o1 = sv_all.run_batch("cls", data["images"][:8], data["prompts"][:8])
+    o2 = sv_none.run_batch("cls", data["images"][:8], data["prompts"][:8])
+    # every offloaded sample must pay at least the link RTT more than a
+    # stage-1 exit would locally
+    assert (o1["latency_s"] > 0).all()
+    assert o1["tx_bytes"].min() >= 0
+    # offloaded samples carry bytes; onboard ones don't pay tx in the ledger
+    assert float(np.sum(o1["tx_bytes"])) > 0
+
+
+def test_preprocessing_reduces_transmitted_bytes(tiny_bundle):
+    data = tiny_bundle.datasets["cls"]
+    sv = tiny_bundle.spaceverse(taus=(1.1, 1.1))   # force offload for all
+    out = sv.run_batch("cls", data["images"][:16], data["prompts"][:16])
+    full = tiny_bundle.latency.full_bytes("cls")
+    assert (out["tx_bytes"] <= full + 1e-6).all()
+    assert (out["tx_bytes"] < full).any(), "Eq. 3 should drop something"
+
+
+def test_progressive_earlier_exit_is_cheaper(tiny_bundle):
+    """Stage-1 exits must cost less onboard latency than late exits."""
+    data = tiny_bundle.datasets["cls"]
+    sv = tiny_bundle.spaceverse(taus=(1.1, 1.1))    # all exit at stage 1
+    sv2 = tiny_bundle.spaceverse(taus=(-1.0, 1.1))  # all exit at final stage
+    o1 = sv.run_batch("cls", data["images"][:8], data["prompts"][:8])
+    o2 = sv2.run_batch("cls", data["images"][:8], data["prompts"][:8])
+    assert o1["latency_s"].mean() < o2["latency_s"].mean()
+
+
+def test_gs_only_baseline_consistency(tiny_bundle):
+    gs = GSOnly(tiny_bundle.gs, tiny_bundle.adapter_cfg,
+                tiny_bundle.cascade_cfg, tiny_bundle.latency)
+    r = gs.evaluate("vqa", tiny_bundle.datasets["vqa"], batch_size=16)
+    assert r["offload_rate"] == 1.0
+    assert r["latency_s"] > 0

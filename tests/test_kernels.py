@@ -1,0 +1,198 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ---------------------------------------------------------------------------
+# region_score (Eq. 2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,r,nv,ne,d", [
+    (1, 8, 4, 16, 32), (2, 16, 1, 8, 64), (3, 25, 2, 12, 128),
+    (2, 100, 1, 7, 48),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_region_score_sweep(b, r, nv, ne, d, dtype):
+    k1, k2 = jax.random.split(KEY)
+    v = _rand(k1, (b, r, nv, d), dtype)
+    e = _rand(k2, (b, ne, d), dtype)
+    got = ops.region_score(v, e, impl="pallas_interpret")
+    want = ops.region_score(v, e, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[dtype])
+
+
+def test_region_score_matches_manual_cosine():
+    v = _rand(KEY, (1, 3, 2, 16), jnp.float32)
+    e = _rand(jax.random.fold_in(KEY, 1), (1, 5, 16), jnp.float32)
+    manual = np.zeros((1, 3))
+    vn = np.asarray(v)
+    en = np.asarray(e)
+    for r in range(3):
+        for i in range(2):
+            for j in range(5):
+                a, b_ = vn[0, r, i], en[0, j]
+                manual[0, r] += (a @ b_) / (np.linalg.norm(a)
+                                            * np.linalg.norm(b_))
+    got = ops.region_score(v, e, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), manual, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,h,kh,hd", [
+    (128, 4, 4, 32), (256, 8, 2, 32), (128, 4, 1, 64), (256, 2, 2, 16),
+])
+@pytest.mark.parametrize("window,softcap", [(0, None), (64, None),
+                                            (0, 50.0), (96, 30.0)])
+def test_flash_attention_sweep(sq, h, kh, hd, window, softcap):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (2, sq, h, hd), jnp.float32)
+    k = _rand(k2, (2, sq, kh, hd), jnp.float32)
+    v = _rand(k3, (2, sq, kh, hd), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              softcap=softcap, impl="pallas_interpret")
+    want = ops.flash_attention(q, k, v, causal=True, window=window,
+                               softcap=softcap, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (1, 128, 4, 32), dtype)
+    k = _rand(k2, (1, 128, 2, 32), dtype)
+    v = _rand(k3, (1, 128, 2, 32), dtype)
+    got = ops.flash_attention(q, k, v, impl="pallas_interpret")
+    want = ops.flash_attention(q, k, v, impl="ref")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_structured_matches_ref_and_grads():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    for window, cap in [(0, None), (64, None), (48, 50.0)]:
+        q = _rand(k1, (2, 256, 4, 32), jnp.float32)
+        k = _rand(k2, (2, 256, 2, 32), jnp.float32)
+        v = _rand(k3, (2, 256, 2, 32), jnp.float32)
+        f1 = lambda q, k, v: (ref.flash_attention(
+            q, k, v, causal=True, window=window, softcap=cap) ** 2).sum()
+        f2 = lambda q, k, v: (ref.flash_structured(
+            q, k, v, True, window, cap) ** 2).sum()
+        np.testing.assert_allclose(f1(q, k, v), f2(q, k, v), rtol=1e-4)
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,kh,hd,clen,window", [
+    (256, 8, 2, 32, 256, 0), (256, 8, 2, 32, 100, 0),
+    (512, 4, 1, 64, 300, 128), (256, 4, 4, 16, 37, 0),
+])
+def test_decode_attention_sweep(s, h, kh, hd, clen, window):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (2, h, hd), jnp.float32)
+    k = _rand(k2, (2, s, kh, hd), jnp.float32)
+    v = _rand(k3, (2, s, kh, hd), jnp.float32)
+    got = ops.decode_attention(q, k, v, jnp.int32(clen), window=window,
+                               impl="pallas_interpret")
+    want = ref.decode_attention(q, k, v, jnp.int32(clen), window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_flash_last_row():
+    """Decode at position S-1 must equal the last row of full attention."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    s = 128
+    q = _rand(k1, (2, s, 4, 32), jnp.float32)
+    k = _rand(k2, (2, s, 2, 32), jnp.float32)
+    v = _rand(k3, (2, s, 2, 32), jnp.float32)
+    full = ops.flash_attention(q, k, v, causal=True, impl="ref")
+    dec = ops.decode_attention(q[:, -1], k, v, jnp.int32(s), impl="ref")
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan (chunked GLA)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,dk,dv,chunk", [
+    (128, 4, 16, 16, 32), (256, 2, 8, 24, 64), (64, 1, 32, 8, 16),
+])
+def test_ssm_scan_sweep(s, h, dk, dv, chunk):
+    ks = jax.random.split(KEY, 4)
+    q = _rand(ks[0], (2, s, h, dk), jnp.float32)
+    k = _rand(ks[1], (2, s, h, dk), jnp.float32) * 0.3
+    v = _rand(ks[2], (2, s, h, dv), jnp.float32)
+    g = -jax.nn.softplus(_rand(ks[3], (2, s, h), jnp.float32))
+    o1, f1 = ops.ssm_scan(q, k, v, g, impl="pallas_interpret", chunk=chunk)
+    o2, f2 = ops.ssm_scan(q, k, v, g, impl="ref", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ssm_chunked_equals_sequential():
+    ks = jax.random.split(KEY, 4)
+    s = 96
+    q = _rand(ks[0], (1, s, 2, 8), jnp.float32)
+    k = _rand(ks[1], (1, s, 2, 8), jnp.float32) * 0.3
+    v = _rand(ks[2], (1, s, 2, 12), jnp.float32)
+    g = -jax.nn.softplus(_rand(ks[3], (1, s, 2), jnp.float32))
+    o_chunk, f_chunk = ops.ssm_scan(q, k, v, g, impl="ref", chunk=32)
+    st = jnp.zeros((1, 2, 8, 12))
+    outs = []
+    for t in range(s):
+        o_t, st = ref.ssm_decode_step(q[:, t], k[:, t], v[:, t], g[:, t], st)
+        outs.append(o_t)
+    o_seq = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(o_chunk), np.asarray(o_seq),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(f_chunk), np.asarray(st),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssm_state_continuation():
+    """Splitting a sequence across two scans must match one scan."""
+    ks = jax.random.split(KEY, 4)
+    s = 128
+    q = _rand(ks[0], (1, s, 2, 8), jnp.float32)
+    k = _rand(ks[1], (1, s, 2, 8), jnp.float32) * 0.3
+    v = _rand(ks[2], (1, s, 2, 8), jnp.float32)
+    g = -jax.nn.softplus(_rand(ks[3], (1, s, 2), jnp.float32))
+    o_full, f_full = ops.ssm_scan(q, k, v, g, impl="ref", chunk=32)
+    o1, f1 = ops.ssm_scan(q[:, :64], k[:, :64], v[:, :64], g[:, :64],
+                          impl="ref", chunk=32)
+    o2, f2 = ops.ssm_scan(q[:, 64:], k[:, 64:], v[:, 64:], g[:, 64:],
+                          state=f1, impl="ref", chunk=32)
+    np.testing.assert_allclose(np.asarray(o_full[:, 64:]), np.asarray(o2),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(f_full), np.asarray(f2),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,52 @@
+"""Network simulation: orbit constants, link, scheduler behaviour."""
+import numpy as np
+import pytest
+
+from repro.network import (ContactPlan, LinkModel, TransmissionScheduler,
+                           contact_fraction, orbital_period_s)
+from repro.network.scheduler import fleet_expected_latency
+
+
+def test_orbit_constants_match_paper_regime():
+    # 570 km Starlink shell: ~95.6 min period, ~4–5 % contact fraction
+    p = orbital_period_s(570.0)
+    assert 5500 < p < 6000
+    f = contact_fraction(570.0, 25.0)
+    assert 0.03 < f < 0.06           # paper derives 4.33 % average
+
+
+def test_link_throughput_matches_measured_rate():
+    link = LinkModel(jitter_sigma=0.0)
+    # 110.67 Mb/s → 1 MB ≈ 72 ms + RTT
+    t = link.tx_seconds(1e6)
+    assert abs(t - (0.04 + 8e6 / 110.67e6)) < 1e-3
+
+
+def test_scheduler_waits_for_window():
+    plan = ContactPlan(alt_km=570.0, num_gs=1)
+    link = LinkModel(jitter_sigma=0.0)
+    sched = TransmissionScheduler(plan, link)
+    # submit in the middle of the dead zone
+    t_sub = plan.window_s + 10.0
+    tr = sched.submit(t_sub, 1e6, sample_jitter=False)
+    assert tr.wait_time > 0
+    ws, _ = plan.next_window(t_sub)
+    assert tr.t_done >= ws
+
+
+def test_scheduler_spans_windows_for_big_transfers():
+    plan = ContactPlan(alt_km=570.0, num_gs=1)
+    link = LinkModel(jitter_sigma=0.0)
+    sched = TransmissionScheduler(plan, link)
+    rate = link.bandwidth_mbps * 1e6 / 8
+    n_bytes = rate * plan.window_s * 2.5   # needs ≥3 windows
+    tr = sched.submit(0.0, n_bytes, sample_jitter=False)
+    assert tr.t_done > plan.period_s       # rolled into later windows
+    assert tr.air_time >= n_bytes / rate - 1.0
+
+
+def test_more_ground_stations_cut_latency():
+    link = LinkModel(jitter_sigma=0.0)
+    lat1 = fleet_expected_latency([ContactPlan(num_gs=1)], link, 1e6)
+    lat4 = fleet_expected_latency([ContactPlan(num_gs=4)], link, 1e6)
+    assert lat4 < lat1

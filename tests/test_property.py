@@ -1,0 +1,170 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import preprocess as PP
+from repro.network.orbit import ContactPlan, contact_fraction, orbital_period_s
+from repro.network.link import LinkModel
+from repro.network.scheduler import TransmissionScheduler
+from repro.train import compression as GC
+from repro.train import elastic
+from repro.train import optimizer as O
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3 preprocessing invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(0.0, 1.0), min_size=4, max_size=4),
+       st.integers(0, 10_000))
+def test_multiscale_invariants(scores, seed):
+    rng = np.random.default_rng(seed)
+    regions = jnp.asarray(rng.normal(size=(1, 4, 8, 8, 3)).astype(np.float32))
+    s = jnp.asarray([scores], jnp.float32)
+    out, tx, meta = PP.multiscale_filter(regions, s, alpha=0.35, beta=0.55)
+    full = float(meta["full_bytes"][0])
+    # transmitted bytes never exceed the full image, never negative
+    assert 0.0 <= float(tx[0]) <= full + 1e-6
+    # discarded regions are exactly the sub-α ones
+    np.testing.assert_array_equal(np.asarray(meta["discarded"][0]),
+                                  np.asarray(s[0] < 0.35))
+    # preserved regions bit-exact
+    for r in range(4):
+        if scores[r] >= 0.55:
+            np.testing.assert_allclose(np.asarray(out[0, r]),
+                                       np.asarray(regions[0, r]), rtol=1e-6)
+        if scores[r] < 0.35:
+            assert np.all(np.asarray(out[0, r]) == 0)
+
+
+@settings(**SETTINGS)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_multiscale_bytes_monotone_in_score(s1, s2):
+    """Higher relevance ⇒ no fewer transmitted bytes (per region)."""
+    regions = jnp.ones((1, 1, 8, 8, 3))
+    tx = []
+    for s in (s1, s2):
+        _, t, _ = PP.multiscale_filter(regions, jnp.asarray([[s]]),
+                                       alpha=0.35, beta=0.55)
+        tx.append(float(t[0]))
+    if s1 <= s2:
+        assert tx[0] <= tx[1] + 1e-6
+    else:
+        assert tx[1] <= tx[0] + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Orbit / link / scheduler invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.floats(300.0, 2000.0), st.floats(5.0, 60.0))
+def test_contact_fraction_bounds(alt, elev):
+    f = contact_fraction(alt, elev)
+    assert 0.0 <= f < 0.5
+    # higher minimum elevation ⇒ shorter contact
+    assert contact_fraction(alt, elev + 5.0) <= f + 1e-12
+    # higher altitude ⇒ longer contact (same elevation)
+    assert contact_fraction(alt + 100.0, elev) >= f - 1e-12
+
+
+@settings(**SETTINGS)
+@given(st.floats(400.0, 1200.0), st.integers(1, 8),
+       st.floats(0.0, 20_000.0))
+def test_next_window_consistency(alt, num_gs, t):
+    plan = ContactPlan(alt_km=alt, num_gs=num_gs)
+    ws, we = plan.next_window(t)
+    assert ws >= t - 1e-6 and we > ws
+    # the window must actually be open at ws
+    ws2, _ = plan.next_window(ws)
+    assert abs(ws2 - ws) < 1e-3
+    # more ground stations never increases the wait
+    plan1 = ContactPlan(alt_km=alt, num_gs=1)
+    assert plan.expected_wait_s() <= plan1.expected_wait_s() + 1e-9
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.floats(0.0, 100.0), st.floats(1.0, 5e7)),
+                min_size=1, max_size=10))
+def test_scheduler_fifo_and_completion(transfers):
+    plan = ContactPlan(alt_km=570.0, num_gs=4)
+    link = LinkModel(jitter_sigma=0.0)
+    sched = TransmissionScheduler(plan, link)
+    done_prev = 0.0
+    for t_sub, n_bytes in sorted(transfers):
+        tr = sched.submit(t_sub, n_bytes, sample_jitter=False)
+        assert tr.t_done >= t_sub          # no time travel
+        assert tr.t_done >= done_prev      # FIFO link occupancy
+        assert tr.air_time >= n_bytes / (link.bandwidth_mbps * 1e6 / 8) - 1e-6
+        done_prev = tr.t_done
+    med, n_strag = sched.straggler_report()
+    assert n_strag <= len(transfers)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression: error feedback conservation
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 1000), st.sampled_from(["topk", "int8"]))
+def test_compression_error_feedback_conservation(seed, scheme):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32)),
+         "b": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+    cfg = GC.CompressionConfig(scheme=scheme, topk_frac=0.1)
+    err0 = GC.init_error_state(g)
+    sent, err1 = GC.compress_grads(g, err0, cfg)
+    # conservation: sent + new_err == grad + old_err (per leaf)
+    for k in g:
+        lhs = np.asarray(sent[k], np.float32) + np.asarray(err1[k])
+        rhs = np.asarray(g[k]) + np.asarray(err0[k])
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+    # topk actually sparsifies
+    if scheme == "topk":
+        nz = sum(float((np.asarray(v) != 0).mean()) for v in sent.values())
+        assert nz / len(sent) <= 0.2
+
+
+# ---------------------------------------------------------------------------
+# Elastic fallback mesh
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(16, 512), st.sampled_from([4, 8, 16]))
+def test_fallback_mesh_fits(alive, model_degree):
+    if alive < model_degree:
+        return
+    shape = elastic.fallback_mesh_shape(alive, model_degree)
+    used = int(np.prod(shape))
+    assert used <= alive
+    assert shape[-1] == model_degree
+    # data degree is a power of two
+    d = shape[-2]
+    assert d & (d - 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# Optimizer invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 100))
+def test_clip_by_global_norm(seed):
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32) * 10)}
+    clipped, norm = O.clip_by_global_norm(g, 1.0)
+    new_norm = float(O.global_norm(clipped))
+    assert new_norm <= 1.0 + 1e-4
+
+
+def test_schedule_monotone_warmup_then_decay():
+    cfg = O.OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(O.schedule(cfg, jnp.asarray(s))) for s in range(0, 100, 5)]
+    assert lrs[1] > lrs[0] or lrs[0] == 0.0
+    assert max(lrs) <= cfg.lr * (1 + 1e-6)
+    assert lrs[-1] < max(lrs)

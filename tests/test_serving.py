@@ -1,0 +1,67 @@
+"""Serving runtime: engine batching + cascade server behaviour."""
+import numpy as np
+import pytest
+
+from repro.network.orbit import ContactPlan
+from repro.serving import CascadeServer, EngineConfig, InferenceEngine, Request
+
+
+def _requests(bundle, task, n):
+    data = bundle.datasets[task]
+    return [Request(task=task, image=data["images"][i],
+                    prompt=int(data["prompts"][i]), t_arrival=float(i))
+            for i in range(n)]
+
+
+def test_engine_serves_mixed_queue(tiny_bundle):
+    eng = InferenceEngine(tiny_bundle.sat.params, tiny_bundle.sat.cfg,
+                          tiny_bundle.adapter_cfg,
+                          EngineConfig(slots=4, answer_vocab=9))
+    reqs = _requests(tiny_bundle, "vqa", 5) + _requests(tiny_bundle, "cls", 4)
+    resps = eng.serve(reqs)
+    assert len(resps) == 9
+    assert {r.request_id for r in resps} == {q.request_id for q in reqs}
+
+
+def test_cascade_server_roundtrip(tiny_bundle):
+    server = CascadeServer(
+        tiny_bundle.sat, tiny_bundle.gs, tiny_bundle.adapter_cfg,
+        tiny_bundle.conf_params, tiny_bundle.cascade_cfg,
+        tiny_bundle.latency,
+        plan=ContactPlan(contact_fraction_override=1.0))
+    for req in _requests(tiny_bundle, "cls", 4):
+        resp = server.handle(req, now=req.t_arrival)
+        assert resp.tier in ("satellite", "ground")
+        assert resp.latency_s > 0
+        if resp.tier == "ground":
+            assert resp.tx_bytes > 0
+            assert "tx" in resp.timings
+        else:
+            assert resp.tx_bytes == 0
+
+
+def test_cascade_server_link_down_degrades_to_satellite(tiny_bundle):
+    server = CascadeServer(
+        tiny_bundle.sat, tiny_bundle.gs, tiny_bundle.adapter_cfg,
+        tiny_bundle.conf_params, tiny_bundle.cascade_cfg,
+        tiny_bundle.latency, link_up=False)
+    for req in _requests(tiny_bundle, "cls", 6):
+        resp = server.handle(req)
+        assert resp.tier == "satellite"
+        assert resp.tx_bytes == 0
+
+
+def test_cascade_server_contact_window_wait(tiny_bundle):
+    # a realistic contact plan: requests in the dead zone pay window wait
+    import dataclasses
+    server = CascadeServer(
+        tiny_bundle.sat, tiny_bundle.gs, tiny_bundle.adapter_cfg,
+        tiny_bundle.conf_params, tiny_bundle.cascade_cfg,
+        tiny_bundle.latency, plan=ContactPlan(alt_km=570.0, num_gs=1))
+    server.cc = dataclasses.replace(server.cc, taus=(1.1, 1.1))  # force offload
+    plan = server.plan
+    req = _requests(tiny_bundle, "cls", 1)[0]
+    t_dead = plan.window_s + 5.0
+    resp = server.handle(req, now=t_dead)
+    assert resp.tier == "ground"
+    assert resp.timings["tx"] > plan.next_window(t_dead)[0] - t_dead - 1.0

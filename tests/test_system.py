@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the SpaceVerse system."""
+import numpy as np
+import pytest
+
+from repro.core import confidence as C
+
+
+def test_end_to_end_pipeline_trains_and_evaluates(tiny_bundle):
+    """build_system → cascade evaluation, losses went down, outputs sane."""
+    h = tiny_bundle.history
+    assert np.mean(h["sat_losses"][-5:]) < h["sat_losses"][0]
+    assert np.mean(h["gs_losses"][-5:]) < h["gs_losses"][0]
+    assert h["conf_losses"][-1] < h["conf_losses"][0]
+    sv = tiny_bundle.spaceverse()
+    for task in tiny_bundle.datasets:
+        r = sv.evaluate(task, tiny_bundle.datasets[task], batch_size=16)
+        assert 0.0 <= r["performance"] <= 1.0
+        assert r["latency_s"] > 0.0
+
+
+def test_confidence_network_has_learned_signal(tiny_bundle):
+    """g̃ predictions should correlate positively with realized sat↔gs output
+    similarity on held-out data (the quantity Eq. 1 trains it to regress)."""
+    import jax.numpy as jnp
+    from repro.core import eo_adapter as EO
+    from repro.core.similarity import output_similarity
+
+    data = tiny_bundle.datasets["cls"]
+    images = jnp.asarray(data["images"][:32])
+    prompts = jnp.asarray(data["prompts"][:32])
+    rf = EO.encode_regions(tiny_bundle.sat.params, tiny_bundle.adapter_cfg,
+                           images)
+    vis = rf.astype(jnp.float32).mean(1)
+    pred = np.asarray(C.apply_stage(tiny_bundle.conf_params, 0, vis))
+    _, s_probs = EO.generate(tiny_bundle.sat.params, tiny_bundle.sat.cfg,
+                             tiny_bundle.adapter_cfg, "cls", images, prompts,
+                             tiny_bundle.cascade_cfg.answer_vocab)
+    _, g_probs = EO.generate(tiny_bundle.gs.params, tiny_bundle.gs.cfg,
+                             tiny_bundle.adapter_cfg, "cls", images, prompts,
+                             tiny_bundle.cascade_cfg.answer_vocab)
+    target = np.asarray(output_similarity(s_probs, g_probs))
+    if target.std() > 1e-3 and pred.std() > 1e-3:
+        corr = np.corrcoef(pred, target)[0, 1]
+        assert corr > -0.2, f"confidence net anti-correlated: {corr}"
+    # predictions live in [0, 1]
+    assert pred.min() >= 0.0 and pred.max() <= 1.0
+
+
+def test_cascade_beats_or_matches_satellite_only_quality(tiny_bundle):
+    """With GS assistance available, the cascade should never be much worse
+    than satellite-only on any task (it can only add the stronger tier)."""
+    from repro.baselines import SatelliteOnly
+    sv = tiny_bundle.spaceverse()
+    sat = SatelliteOnly(tiny_bundle.sat, tiny_bundle.adapter_cfg,
+                        tiny_bundle.cascade_cfg, tiny_bundle.latency)
+    for task in tiny_bundle.datasets:
+        r_sv = sv.evaluate(task, tiny_bundle.datasets[task], batch_size=16)
+        r_sat = sat.evaluate(task, tiny_bundle.datasets[task], batch_size=16)
+        assert r_sv["performance"] >= r_sat["performance"] - 0.1
+
+
+def test_latency_ledger_orders_systems_correctly(tiny_bundle):
+    """GS-only must pay transmission; satellite-only must not."""
+    from repro.baselines import GSOnly, SatelliteOnly
+    gs = GSOnly(tiny_bundle.gs, tiny_bundle.adapter_cfg,
+                tiny_bundle.cascade_cfg, tiny_bundle.latency)
+    sat = SatelliteOnly(tiny_bundle.sat, tiny_bundle.adapter_cfg,
+                        tiny_bundle.cascade_cfg, tiny_bundle.latency)
+    r_gs = gs.evaluate("cls", tiny_bundle.datasets["cls"], batch_size=16)
+    r_sat = sat.evaluate("cls", tiny_bundle.datasets["cls"], batch_size=16)
+    # at the calibrated constants, GS-only is slower than onboard for cls
+    assert r_gs["latency_s"] > r_sat["latency_s"]

@@ -1,0 +1,141 @@
+"""Training runtime: optimizer convergence, grad accumulation, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.train import checkpoint as CK
+from repro.train import compression as GC
+from repro.train import elastic
+from repro.train import optimizer as O
+from repro.train import trainer as TR
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_batch(cfg, b=4, s=16):
+    return {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+            "targets": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+            "loss_mask": jnp.ones((b, s))}
+
+
+def test_train_step_reduces_loss():
+    cfg = configs.get_config("glm4-9b", reduced=True)
+    opt_cfg = O.OptConfig(lr=5e-3, warmup_steps=2, total_steps=50)
+    step = jax.jit(TR.make_train_step(cfg, opt_cfg))
+    params, opt_state = TR.init_train_state(cfg, KEY)
+    batch = _tiny_batch(cfg)
+    losses = []
+    for _ in range(25):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, (losses[0], losses[-1])
+    assert int(opt_state["step"]) == 25
+
+
+def test_grad_accumulation_matches_single_batch():
+    cfg = configs.get_config("glm4-9b", reduced=True)
+    opt_cfg = O.OptConfig(lr=1e-3, warmup_steps=0, total_steps=10,
+                          weight_decay=0.0)
+    batch = _tiny_batch(cfg, b=8)
+    params, opt_state = TR.init_train_state(cfg, KEY)
+    step1 = TR.make_train_step(cfg, opt_cfg, TR.TrainConfig(microbatches=1))
+    step4 = TR.make_train_step(cfg, opt_cfg, TR.TrainConfig(microbatches=4))
+    p1, _, m1 = step1(params, opt_state, batch)
+    p4, _, m4 = step4(params, opt_state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-4, atol=5e-5)
+
+
+def test_train_step_with_compression_still_converges():
+    cfg = configs.get_config("glm4-9b", reduced=True)
+    opt_cfg = O.OptConfig(lr=5e-3, warmup_steps=2, total_steps=60)
+    tc = TR.TrainConfig(compression=GC.CompressionConfig(
+        scheme="topk", topk_frac=0.05))
+    step = jax.jit(TR.make_train_step(cfg, opt_cfg, tc))
+    params, opt_state = TR.init_train_state(cfg, KEY, tc)
+    assert "err" in opt_state
+    batch = _tiny_batch(cfg)
+    losses = []
+    for _ in range(30):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_compressed_bytes_accounting():
+    g = {"a": jnp.zeros((1000,)), "b": jnp.zeros((24, 24))}
+    none_b = GC.compressed_bytes(g, GC.CompressionConfig("none"))
+    int8_b = GC.compressed_bytes(g, GC.CompressionConfig("int8"))
+    topk_b = GC.compressed_bytes(g, GC.CompressionConfig("topk",
+                                                         topk_frac=0.01))
+    assert int8_b < none_b
+    assert topk_b < int8_b
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    cfg = configs.get_config("glm4-9b", reduced=True)
+    params, opt_state = TR.init_train_state(cfg, KEY)
+    state = {"params": params, "opt": opt_state}
+    ck = CK.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save_async(s, state, extra_meta={"note": "test"})
+    ck.wait()
+    assert CK.list_steps(str(tmp_path)) == [2, 3]  # retention
+    restored, step = CK.restore(str(tmp_path), state)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_restores_after_simulated_failure(tmp_path):
+    """checkpoint → train more → crash → restore == state at checkpoint."""
+    cfg = configs.get_config("glm4-9b", reduced=True)
+    opt_cfg = O.OptConfig(lr=1e-3, warmup_steps=0, total_steps=50)
+    step = jax.jit(TR.make_train_step(cfg, opt_cfg))
+    params, opt_state = TR.init_train_state(cfg, KEY)
+    batch = _tiny_batch(cfg)
+    for _ in range(3):
+        params, opt_state, _ = step(params, opt_state, batch)
+    CK.save(str(tmp_path), 3, {"params": params, "opt": opt_state})
+    p_ref = jax.tree.map(np.asarray, params)
+    # diverge (simulating lost work), then restore
+    for _ in range(2):
+        params, opt_state, _ = step(params, opt_state, batch)
+    restored, step_no = CK.restore(str(tmp_path),
+                                   {"params": params, "opt": opt_state})
+    assert step_no == 3
+    for a, b in zip(jax.tree.leaves(restored["params"]),
+                    jax.tree.leaves(p_ref)):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+def test_elastic_recovery_plan():
+    plan = elastic.recovery_plan(num_devices=256, failed=[3, 77, 130],
+                                 model_degree=16)
+    assert plan["alive"] == 253
+    assert plan["new_mesh_shape"] == (8, 16)
+    assert plan["devices_used"] <= plan["alive"]
+
+    mon = elastic.HeartbeatMonitor(4, timeout_s=10.0)
+    mon.heartbeat(0, now=0.0)
+    mon.heartbeat(1, now=0.0)
+    mon.heartbeat(2, now=0.0)
+    mon.heartbeat(3, now=0.0)
+    mon.heartbeat(0, now=100.0)
+    failed = mon.failed_devices(now=105.0)
+    assert failed == [1, 2, 3]
+    # straggler demotion
+    mon2 = elastic.HeartbeatMonitor(2, max_strikes=2)
+    for _ in range(2):
+        mon2.heartbeat(1, step_time_s=10.0, fleet_median_s=1.0, now=0.0)
+        mon2.heartbeat(0, step_time_s=1.0, fleet_median_s=1.0, now=0.0)
+    assert 1 in mon2.failed_devices(now=0.1)
