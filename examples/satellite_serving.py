@@ -66,7 +66,14 @@ def main():
     med, n_strag = server.scheduler.straggler_report()
     print(f"\nserved: {tiers}; mean latency {np.mean(lat):.3f}s; "
           f"downlinked {np.sum(tx)/1e6:.1f}MB; "
-          f"median transfer {med:.3f}s; stragglers {n_strag}")
+          f"median transfer {med:.3f}s; stragglers {n_strag}; "
+          f"re-replicated {server.scheduler.n_replicated}")
+    # the server and the batch evaluator share one executor (DESIGN.md
+    # §serving): the same bundle evaluated in counterfactual mode
+    res = bundle.spaceverse().evaluate("cls", bundle.datasets["cls"],
+                                       batch_size=16)
+    print(f"batch evaluator (same executor): performance "
+          f"{res['performance']:.3f}, offload rate {res['offload_rate']:.2f}")
 
 
 if __name__ == "__main__":

@@ -7,34 +7,38 @@ only ≈58.7 % of Tabi's onboard overhead) but its offloading policy is
 expected-free-energy style cost over latency/load beliefs, then selects the
 samples at random.  Hence its accuracy saturates at ~75 % of the GS model
 (Fig. 10).
+
+Expressed as an ``AIRGPolicy`` over the shared ``CascadeExecutor``: the
+free-energy fraction selection stays here (it is pure latency-belief
+arithmetic), the random realisation is the policy's stage-0 decision, and
+offloads take the full-image GS view.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import eo_adapter as EO
 from repro.core.cascade import TierModel, CascadeConfig
 from repro.core.latency import LatencyModel, DEFAULT_LINK
-from repro.baselines.static import _eval_loop
+from repro.baselines.static import _eval_loop, _executor
 from repro.network.link import LinkModel
+from repro.serving.policy import AIRGPolicy
 
 
 class AIRG:
     def __init__(self, sat: TierModel, gs: TierModel, adapter_cfg,
-                 cc: CascadeConfig = CascadeConfig(),
-                 latency: LatencyModel = LatencyModel(),
+                 cc: Optional[CascadeConfig] = None,
+                 latency: Optional[LatencyModel] = None,
                  link: LinkModel = DEFAULT_LINK,
                  latency_weight: float = 0.4, seed: int = 0,
                  offload_fraction: float | None = None):
-        self.sat, self.gs, self.ac, self.cc = sat, gs, adapter_cfg, cc
-        self.lat, self.link = latency, link
+        self.sat, self.gs, self.ac = sat, gs, adapter_cfg
+        self.cc = cc or CascadeConfig()
+        self.lat, self.link = latency or LatencyModel(), link
         self.latency_weight = latency_weight
-        self.key = jax.random.PRNGKey(seed)
         self._frac = offload_fraction   # None → choose by free-energy min.
+        self.policy = AIRGPolicy(self.plan_fraction, seed=seed)
 
     # -- expected-free-energy style fraction selection --------------------
     def plan_fraction(self, task: str) -> float:
@@ -61,28 +65,19 @@ class AIRG:
         return float(best)
 
     def run_batch(self, images, prompts, task: str):
-        b = images.shape[0]
         l_ans = self.ac.answer_len(task)
-        rho = self.plan_fraction(task)
-        self.key, sub = jax.random.split(self.key)
-        offload = np.asarray(jax.random.uniform(sub, (b,)) < rho)
-
-        sat_toks, _ = EO.generate(self.sat.params, self.sat.cfg, self.ac,
-                                  task, images, prompts, self.cc.answer_vocab)
-        gs_toks, _ = EO.generate(self.gs.params, self.gs.cfg, self.ac, task,
-                                 images, prompts, self.cc.answer_vocab)
-        sat_pred = EO.prediction_from_tokens(task, sat_toks)
-        gs_pred = EO.prediction_from_tokens(task, gs_toks)
-        off_j = jnp.asarray(offload)
-        pred = jnp.where(off_j[:, None] if task == "det" else off_j,
-                         gs_pred, sat_pred)
+        ex = _executor(self.sat, self.gs, self.ac, self.cc, self.lat,
+                       self.link)
+        res = ex.run_counterfactual(self.policy, task, images, prompts,
+                                    self.cc.answer_vocab)
+        offload = np.asarray(res.offload)
 
         t_onboard = (self.lat.sat_encode_s() + self.lat.sat_prefill_s()
                      + self.lat.sat_decode_s(l_ans))
         tx = self.lat.tx_s(self.link, self.lat.full_bytes(task))
         gs_s = self.lat.gs_infer_s(l_ans)
         lat = np.where(offload, tx + gs_s, t_onboard)
-        return {"pred": pred, "latency_s": lat, "offload": offload}
+        return {"pred": res.pred, "latency_s": lat, "offload": offload}
 
     def evaluate(self, task, data, batch_size=32):
         return _eval_loop(lambda im, pr: self.run_batch(im, pr, task),

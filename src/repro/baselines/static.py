@@ -1,23 +1,28 @@
 """Status-quo baselines (§4.1.5): satellite-only and GS-only.
 
-GS-only optionally applies the naive random-masking redundancy reduction used
-in the Fig. 3 / Fig. 12 studies.
+Both are thin adapters over the shared ``CascadeExecutor`` with static
+policies (``SatelliteOnlyPolicy`` / ``GroundOnlyPolicy``) — the same
+executor that runs SpaceVerse and the request server, so baseline numbers
+and cascade numbers always come from identical forward-pass code.  GS-only
+optionally applies the naive random-masking redundancy reduction used in the
+Fig. 3 / Fig. 12 studies.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import eo_adapter as EO
-from repro.core import preprocess as PP
 from repro.core.cascade import TierModel, CascadeConfig
 from repro.core.latency import LatencyModel, DEFAULT_LINK
 from repro.core.similarity import task_simi
-from repro.data import synthetic
 from repro.network.link import LinkModel
+from repro.serving.engine_core import shared_core
+from repro.serving.executor import CascadeExecutor
+from repro.serving.offload import OffloadPipeline
+from repro.serving.policy import GroundOnlyPolicy, SatelliteOnlyPolicy
 
 
 def _eval_loop(run_batch, task, data, batch_size=32):
@@ -39,22 +44,35 @@ def _eval_loop(run_batch, task, data, batch_size=32):
     return out
 
 
+def _executor(tier_a: TierModel, tier_b: TierModel,
+              adapter_cfg: EO.EOAdapterConfig, cc: CascadeConfig,
+              latency: LatencyModel, link: LinkModel) -> CascadeExecutor:
+    pipeline = OffloadPipeline(adapter_cfg, cc, latency, link=link)
+    return CascadeExecutor(shared_core(tier_a, adapter_cfg),
+                           shared_core(tier_b, adapter_cfg),
+                           adapter_cfg, pipeline)
+
+
 class SatelliteOnly:
     """Everything runs on the compact onboard model."""
 
     def __init__(self, sat: TierModel, adapter_cfg: EO.EOAdapterConfig,
-                 cc: CascadeConfig = CascadeConfig(),
-                 latency: LatencyModel = LatencyModel()):
-        self.sat, self.ac, self.cc, self.lat = sat, adapter_cfg, cc, latency
+                 cc: Optional[CascadeConfig] = None,
+                 latency: Optional[LatencyModel] = None):
+        self.sat, self.ac = sat, adapter_cfg
+        self.cc = cc or CascadeConfig()
+        self.lat = latency or LatencyModel()
+        self.policy = SatelliteOnlyPolicy()
 
     def run_batch(self, images, prompts, task: str):
-        toks, _ = EO.generate(self.sat.params, self.sat.cfg, self.ac, task,
-                              images, prompts, self.cc.answer_vocab)
-        pred = EO.prediction_from_tokens(task, toks)
+        ex = _executor(self.sat, self.sat, self.ac, self.cc, self.lat,
+                       DEFAULT_LINK)
+        res = ex.run_counterfactual(self.policy, task, images, prompts,
+                                    self.cc.answer_vocab)
         l_ans = self.ac.answer_len(task)
         lat = (self.lat.sat_encode_s() + self.lat.sat_prefill_s()
                + self.lat.sat_decode_s(l_ans))
-        return {"pred": pred,
+        return {"pred": res.pred,
                 "latency_s": np.full((images.shape[0],), lat)}
 
     def evaluate(self, task, data, batch_size=32):
@@ -67,35 +85,29 @@ class GSOnly:
     naive random-masking reduction at ``keep_frac``)."""
 
     def __init__(self, gs: TierModel, adapter_cfg: EO.EOAdapterConfig,
-                 cc: CascadeConfig = CascadeConfig(),
-                 latency: LatencyModel = LatencyModel(),
+                 cc: Optional[CascadeConfig] = None,
+                 latency: Optional[LatencyModel] = None,
                  link: LinkModel = DEFAULT_LINK,
                  keep_frac: Optional[float] = None, seed: int = 0):
-        self.gs, self.ac, self.cc = gs, adapter_cfg, cc
-        self.lat, self.link = latency, link
+        self.gs, self.ac = gs, adapter_cfg
+        self.cc = cc or CascadeConfig()
+        self.lat, self.link = latency or LatencyModel(), link
         self.keep_frac = keep_frac
-        self.key = jax.random.PRNGKey(seed)
+        self.policy = GroundOnlyPolicy(keep_frac=keep_frac, seed=seed)
 
     def run_batch(self, images, prompts, task: str):
         b = images.shape[0]
+        ex = _executor(self.gs, self.gs, self.ac, self.cc, self.lat,
+                       self.link)
+        res = ex.run_counterfactual(self.policy, task, images, prompts,
+                                    self.cc.answer_vocab)
+        frac = np.asarray(res.gs_view.bytes_frac)
         full_bytes = self.lat.full_bytes(task)
-        if self.keep_frac is not None and self.keep_frac < 1.0:
-            regions = synthetic.regions_of(images, self.ac.grid)
-            self.key, sub = jax.random.split(self.key)
-            filt, txb, meta = PP.random_mask_filter(regions, self.keep_frac,
-                                                    sub)
-            images = synthetic.assemble(filt, self.ac.grid)
-            frac = np.asarray(meta["kept"]).mean(-1)
-        else:
-            frac = np.ones((b,))
-        toks, _ = EO.generate(self.gs.params, self.gs.cfg, self.ac, task,
-                              images, prompts, self.cc.answer_vocab)
-        pred = EO.prediction_from_tokens(task, toks)
         l_ans = self.ac.answer_len(task)
         tx = np.array([self.lat.tx_s(self.link, full_bytes * f)
                        for f in frac])
-        gs_s = np.asarray(self.lat.gs_infer_s(l_ans, frac))
-        return {"pred": pred, "latency_s": tx + gs_s,
+        gs_s = np.asarray(self.lat.gs_infer_s(l_ans, res.gs_view.kept_frac))
+        return {"pred": res.pred, "latency_s": tx + gs_s,
                 "offload": np.ones((b,), bool)}
 
     def evaluate(self, task, data, batch_size=32):

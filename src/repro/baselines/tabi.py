@@ -7,52 +7,51 @@ the large model.  Its attention-based pruning applies to text tokens, so
 offloaded Earth-observation images transit the link at full size — both
 properties the paper identifies as Tabi's latency overhead (≈69.9 % extra
 onboard time, no transmission reduction).
+
+Expressed as a ``TabiPolicy`` over the shared ``CascadeExecutor``: a single
+full-answer decode chunk, one post-decode confidence decision, full-image
+GS view.  Only the latency accounting (text pruning on the GS prompt) stays
+here.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import eo_adapter as EO
 from repro.core.cascade import TierModel, CascadeConfig
 from repro.core.latency import LatencyModel, DEFAULT_LINK
-from repro.baselines.static import _eval_loop
+from repro.baselines.static import _eval_loop, _executor
 from repro.network.link import LinkModel
+from repro.serving.policy import TabiPolicy
 
 
 class Tabi:
     def __init__(self, sat: TierModel, gs: TierModel,
-                 adapter_cfg, cc: CascadeConfig = CascadeConfig(),
-                 latency: LatencyModel = LatencyModel(),
+                 adapter_cfg, cc: Optional[CascadeConfig] = None,
+                 latency: Optional[LatencyModel] = None,
                  link: LinkModel = DEFAULT_LINK,
                  threshold: float = 0.7, word_prune_frac: float = 0.3):
-        self.sat, self.gs, self.ac, self.cc = sat, gs, adapter_cfg, cc
-        self.lat, self.link = latency, link
+        self.sat, self.gs, self.ac = sat, gs, adapter_cfg
+        self.cc = cc or CascadeConfig()
+        self.lat, self.link = latency or LatencyModel(), link
         self.threshold = threshold
         # attention-based word pruning shortens the GS text prompt only
         self.word_prune_frac = word_prune_frac
+        self.policy = TabiPolicy(threshold)
 
     def confidence(self, probs: jnp.ndarray) -> jnp.ndarray:
         """Mean max answer-token probability (B, L, V) → (B,)."""
-        return probs.max(-1).mean(-1)
+        return self.policy.confidence(probs)
 
     def run_batch(self, images, prompts, task: str):
-        b = images.shape[0]
         l_ans = self.ac.answer_len(task)
-        sat_toks, sat_probs = EO.generate(self.sat.params, self.sat.cfg,
-                                          self.ac, task, images, prompts,
-                                          self.cc.answer_vocab)
-        conf = self.confidence(sat_probs)
-        offload = np.asarray(conf < self.threshold)
-        gs_toks, _ = EO.generate(self.gs.params, self.gs.cfg, self.ac, task,
-                                 images, prompts, self.cc.answer_vocab)
-        sat_pred = EO.prediction_from_tokens(task, sat_toks)
-        gs_pred = EO.prediction_from_tokens(task, gs_toks)
-        off_j = jnp.asarray(offload)
-        pred = jnp.where(off_j[:, None] if task == "det" else off_j,
-                         gs_pred, sat_pred)
+        ex = _executor(self.sat, self.gs, self.ac, self.cc, self.lat,
+                       self.link)
+        res = ex.run_counterfactual(self.policy, task, images, prompts,
+                                    self.cc.answer_vocab)
+        offload = np.asarray(res.offload)
         # latency: full onboard always; offloaded add full-image tx + GS
         onboard = (self.lat.sat_encode_s() + self.lat.sat_prefill_s()
                    + self.lat.sat_decode_s(l_ans))
@@ -62,7 +61,7 @@ class Tabi:
             self.lat.deploy_patches + self.lat.deploy_text * text_frac
             + l_ans) / self.lat.gs_flops
         lat = onboard + offload * (tx + gs_s)
-        return {"pred": pred, "latency_s": lat, "offload": offload}
+        return {"pred": res.pred, "latency_s": lat, "offload": offload}
 
     def evaluate(self, task, data, batch_size=32):
         return _eval_loop(lambda im, pr: self.run_batch(im, pr, task),

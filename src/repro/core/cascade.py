@@ -1,4 +1,4 @@
-"""SpaceVerse cascade orchestrator — Algorithm 1.
+"""SpaceVerse cascade orchestrator — Algorithm 1 (batch-evaluator adapter).
 
 Per input (x_k, T_k):
  1. encode regions V(x_k) and prompt E(T_k) with the onboard model W^s;
@@ -9,12 +9,18 @@ Per input (x_k, T_k):
     preprocessing, transit the simulated link, and are answered by W^g;
  4. surviving samples answer onboard.
 
-Accuracy comes from the really-executed proxy models; per-sample latency from
-``LatencyModel`` evaluated at the paper's deployment pair (DESIGN.md §7).
-The whole batch path is vectorised — decisions are boolean masks, so both
-branches are computed and the latency ledger charges each sample only for the
-branch it actually took (the physical system runs one branch; the simulator
-runs both to know the counterfactual).
+The model execution itself lives in ONE place — the shared
+``serving.executor.CascadeExecutor`` driven by a
+``ProgressiveConfidencePolicy`` — which the request-level
+``serving.cascade_server.CascadeServer`` also routes through, so the batch
+evaluator and the server can never drift (DESIGN.md §serving).  This class
+is the counterfactual-evaluation adapter: the whole batch path is
+vectorised, decisions are boolean masks, both branches are computed, and the
+latency ledger charges each sample only for the branch it actually took (the
+physical system runs one branch; the simulator runs both to know the
+counterfactual).  Accuracy comes from the really-executed proxy models;
+per-sample latency from ``LatencyModel`` evaluated at the paper's deployment
+pair (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -26,13 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import confidence as C
 from repro.core import eo_adapter as EO
-from repro.core import preprocess as PP
-from repro.core import region_attention as RA
 from repro.core.latency import LatencyModel, DEFAULT_LINK
 from repro.core.similarity import task_simi
-from repro.data import synthetic
 from repro.network.link import LinkModel
 
 Params = Dict[str, Any]
@@ -58,111 +60,60 @@ class SpaceVerse:
 
     def __init__(self, sat: TierModel, gs: TierModel,
                  adapter_cfg: EO.EOAdapterConfig, conf_params: Params,
-                 cascade_cfg: CascadeConfig = CascadeConfig(),
-                 latency: LatencyModel = LatencyModel(),
+                 cascade_cfg: Optional[CascadeConfig] = None,
+                 latency: Optional[LatencyModel] = None,
                  link: LinkModel = DEFAULT_LINK):
         self.sat = sat
         self.gs = gs
         self.adapter_cfg = adapter_cfg
         self.conf = conf_params
-        self.cc = cascade_cfg
-        self.lat = latency
+        self.cc = cascade_cfg or CascadeConfig()
+        self.lat = latency or LatencyModel()
         self.link = link
 
     # ------------------------------------------------------------------
+    def _pipeline(self):
+        from repro.serving.offload import OffloadPipeline
+        return OffloadPipeline(self.adapter_cfg, self.cc, self.lat,
+                               link=self.link)
+
+    def _executor(self, pipeline):
+        from repro.serving.engine_core import shared_core
+        from repro.serving.executor import CascadeExecutor
+        return CascadeExecutor(shared_core(self.sat, self.adapter_cfg),
+                               shared_core(self.gs, self.adapter_cfg),
+                               self.adapter_cfg, pipeline)
+
+    def _policy(self):
+        from repro.serving.policy import ProgressiveConfidencePolicy
+        return ProgressiveConfidencePolicy(self.conf, self.cc)
+
     def _stage_plan(self, task: str) -> Sequence[int]:
         """Token counts decoded before confidence stages 2..I (the last stage
         always sees the complete output)."""
-        l_ans = self.adapter_cfg.answer_len(task)
-        n_stages = C.num_stages(self.conf)
-        if n_stages <= 1:
-            return []
-        chunks = []
-        done = 0
-        for i in range(n_stages - 2):
-            c = min(self.cc.n_t, l_ans - done)
-            chunks.append(max(c, 0))
-            done += c
-        chunks.append(max(l_ans - done, 0))   # final stage: complete output
-        return chunks
+        return self._policy().stage_plan(task,
+                                         self.adapter_cfg.answer_len(task))
 
     # ------------------------------------------------------------------
     def run_batch(self, task: str, images: jax.Array, prompts: jax.Array
                   ) -> Dict[str, Any]:
-        ac, cc, lat = self.adapter_cfg, self.cc, self.lat
+        lat = self.lat
         b = images.shape[0]
-        l_ans = ac.answer_len(task)
+        l_ans = self.adapter_cfg.answer_len(task)
 
-        # --- onboard encoders (V, E) --------------------------------------
-        region_feats = EO.encode_regions(self.sat.params, ac, images)  # (B,R,d)
-        text_feats = EO.encode_text(self.sat.params, self.sat.cfg,
-                                    ac.prompt_token(task, prompts))    # (B,1,d)
-        visual_pooled = region_feats.astype(jnp.float32).mean(axis=1)
+        pipeline = self._pipeline()
+        res = self._executor(pipeline).run_counterfactual(
+            self._policy(), task, images, prompts, self.cc.answer_vocab)
 
-        # --- progressive confidence + chunked onboard decode ---------------
-        scores = [C.apply_stage(self.conf, 0, visual_pooled)]
-        offload = scores[0] < cc.taus[0]              # aborted before decode
-        exit_stage = jnp.where(offload, 0, -1)        # -1 = still running
+        view = res.gs_view
+        # modelled raw-image bytes scaled by the achieved Eq. 3 compression
+        tx_bytes = pipeline.payload_bytes(task, view.bytes_frac)    # (B,)
+        kept_frac = view.kept_frac
 
-        logits, cache, idx = EO.prefill_prompt(
-            self.sat.params, self.sat.cfg, ac, task, images, prompts, l_ans)
-        toks_all, probs_all = [], []
-        decoded = 0
-        for si, n_tok in enumerate(self._stage_plan(task)):
-            if n_tok > 0:
-                toks, probs, cache, logits, idx = EO.decode_chunk(
-                    self.sat.params, self.sat.cfg, cache, logits, idx, n_tok,
-                    cc.answer_vocab)
-                toks_all.append(toks)
-                probs_all.append(probs)
-                decoded += n_tok
-            gen = jnp.concatenate(toks_all, 1)
-            state = EO.token_features(self.sat.params, gen)
-            s = C.apply_stage(self.conf, si + 1, visual_pooled, state)
-            scores.append(s)
-            tau = cc.taus[min(si + 1, len(cc.taus) - 1)]
-            newly = (s < tau) & (exit_stage < 0)
-            exit_stage = jnp.where(newly, si + 1, exit_stage)
-            offload = offload | newly
-
-        sat_tokens = (jnp.concatenate(toks_all, 1) if toks_all
-                      else jnp.zeros((b, l_ans), jnp.int32))
-        sat_probs = (jnp.concatenate(probs_all, 1) if probs_all
-                     else jnp.zeros((b, l_ans, cc.answer_vocab)))
-        sat_pred = EO.prediction_from_tokens(task, sat_tokens)
-
-        # --- Eq. 2 + Eq. 3 preprocessing for offloaded samples -------------
-        regions_px = synthetic.regions_of(images, ac.grid)
-        _, norm_scores = RA.score_regions(region_feats[:, :, None, :],
-                                          text_feats)
-        filtered, tx_bytes_regions, meta = PP.multiscale_filter(
-            regions_px, norm_scores, alpha=cc.alpha, beta=cc.beta)
-        gs_images = synthetic.assemble(filtered, ac.grid)
-        kept_frac = 1.0 - meta["discarded"].mean(-1)
-
-        # scale modelled raw-image bytes by the achieved compression
-        full_bytes = lat.full_bytes(task)
-        comp = np.asarray(tx_bytes_regions) / np.maximum(
-            np.asarray(meta["full_bytes"]), 1.0)
-        tx_bytes = full_bytes * comp                              # (B,)
-
-        # --- GS inference on preprocessed images ---------------------------
-        gs_tokens, gs_probs = EO.generate(self.gs.params, self.gs.cfg, ac,
-                                          task, gs_images, prompts,
-                                          cc.answer_vocab)
-        gs_pred = EO.prediction_from_tokens(task, gs_tokens)
-
-        # --- merge ----------------------------------------------------------
-        off_np = np.asarray(offload)
-        if task == "det":
-            pred = jnp.where(offload[:, None], gs_pred, sat_pred)
-        else:
-            pred = jnp.where(offload, gs_pred, sat_pred)
-
-        # --- latency ledger --------------------------------------------------
-        plan = self._stage_plan(task)
+        # --- latency ledger ------------------------------------------------
+        plan = res.stage_plan
         lat_s = np.full((b,), lat.sat_encode_s() + lat.conf_stage_s())
-        exit_np = np.asarray(exit_stage)
+        exit_np = np.asarray(res.exit_stage)
         # onboard decode cost: tokens decoded before this sample's exit
         toks_before = np.zeros((b,))
         for si in range(len(plan)):
@@ -172,18 +123,20 @@ class SpaceVerse:
         lat_s += ran_prefill * lat.sat_prefill_s()
         lat_s += lat.sat_decode_s(toks_before)
         lat_s += np.maximum(exit_np, 0) * lat.conf_stage_s()
-        tx_s = np.array([lat.tx_s(self.link, byt) for byt in tx_bytes])
+        tx_s = np.array([pipeline.transmit_analytic(byt)
+                         for byt in tx_bytes])
         gs_s = np.asarray(lat.gs_infer_s(l_ans, np.asarray(kept_frac)))
-        lat_s += off_np * (tx_s + gs_s)
+        lat_s += np.asarray(res.offload) * (tx_s + gs_s)
 
         return {
-            "pred": pred, "offload": offload, "exit_stage": exit_stage,
-            "conf_scores": jnp.stack(scores, 1),
-            "sat_pred": sat_pred, "gs_pred": gs_pred,
-            "sat_probs": sat_probs, "gs_probs": gs_probs,
+            "pred": res.pred, "offload": res.offload,
+            "exit_stage": res.exit_stage,
+            "conf_scores": res.conf_scores,
+            "sat_pred": res.sat_pred, "gs_pred": res.gs_pred,
+            "sat_probs": res.sat_probs, "gs_probs": res.gs_probs,
             "tx_bytes": tx_bytes, "latency_s": lat_s,
             "kept_frac": np.asarray(kept_frac),
-            "region_scores": norm_scores,
+            "region_scores": view.region_scores,
         }
 
     # ------------------------------------------------------------------

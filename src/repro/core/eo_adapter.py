@@ -144,16 +144,25 @@ def answers_from_labels(adapter_cfg: EOAdapterConfig, task: str,
 # Inference: chunked greedy generation (the progressive-confidence substrate)
 # ---------------------------------------------------------------------------
 
+def prefill_tokens(params: Params, backbone_cfg: ArchConfig,
+                   adapter_cfg: EOAdapterConfig, images: jax.Array,
+                   prompt_tokens: jax.Array, max_len: int
+                   ) -> Tuple[jax.Array, Tuple, jax.Array]:
+    """Prefill [regions | prompt] from already-converted prompt token ids
+    (the jit-friendly primitive: no task-string branching inside)."""
+    patch_embeds = encode_regions(params, adapter_cfg, images)
+    inputs = {"tokens": prompt_tokens[:, None], "patch_embeds": patch_embeds}
+    return T.prefill(params["backbone"], backbone_cfg, inputs, max_len)
+
+
 def prefill_prompt(params: Params, backbone_cfg: ArchConfig,
                    adapter_cfg: EOAdapterConfig, task: str,
                    images: jax.Array, prompts: jax.Array,
                    extra_len: int) -> Tuple[jax.Array, Tuple, jax.Array]:
     """Prefill [regions | prompt]; cache sized for the answer."""
-    patch_embeds = encode_regions(params, adapter_cfg, images)
-    prompt = adapter_cfg.prompt_token(task, prompts)[:, None]
-    inputs = {"tokens": prompt, "patch_embeds": patch_embeds}
-    max_len = adapter_cfg.n_regions + 1 + extra_len
-    return T.prefill(params["backbone"], backbone_cfg, inputs, max_len)
+    return prefill_tokens(params, backbone_cfg, adapter_cfg, images,
+                          adapter_cfg.prompt_token(task, prompts),
+                          adapter_cfg.n_regions + 1 + extra_len)
 
 
 def decode_chunk(params: Params, backbone_cfg: ArchConfig, cache: Tuple,

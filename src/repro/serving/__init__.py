@@ -1,4 +1,22 @@
-"""Serving runtime: batched engine + two-tier cascade server."""
-from repro.serving.request import Request, Response  # noqa: F401
+"""Serving runtime: one executor for Algorithm 1 behind every entry point.
+
+- ``EngineCore``       — jitted fixed-shape step functions + slot table
+- ``CascadePolicy``    — pluggable exit/offload decisions (SpaceVerse
+  progressive confidence and every baseline strategy)
+- ``OffloadPipeline``  — shared Eq. 2 → Eq. 3 → link → GS stage
+- ``CascadeExecutor``  — the single Algorithm 1 implementation
+- ``InferenceEngine``  — single-tier continuous-batching server
+- ``CascadeServer``    — two-tier request server (thin executor adapter)
+"""
+from repro.serving.request import Request, Response, TIERS  # noqa: F401
+from repro.serving.engine_core import (EngineCore, EngineCoreConfig,  # noqa: F401
+                                       shared_core)
+from repro.serving.policy import (AIRGPolicy, CascadePolicy,  # noqa: F401
+                                  GroundOnlyPolicy,
+                                  ProgressiveConfidencePolicy,
+                                  SatelliteOnlyPolicy, TabiPolicy)
+from repro.serving.offload import GSView, OffloadPipeline  # noqa: F401
+from repro.serving.executor import (CascadeExecutor,  # noqa: F401
+                                    ExecutionResult)
 from repro.serving.engine import InferenceEngine, EngineConfig  # noqa: F401
 from repro.serving.cascade_server import CascadeServer  # noqa: F401

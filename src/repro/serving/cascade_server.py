@@ -6,119 +6,110 @@ satellite actually would — progressive confidence exits decide per request,
 offloaded requests go through Eq. 2/Eq. 3 preprocessing, a simulated link
 with contact windows, and the ground engine.  Link loss degrades gracefully
 to satellite-only answers (the system's failure mode).
+
+Since the serving unification both faces are thin adapters over the SAME
+``CascadeExecutor`` + ``CascadePolicy`` path (DESIGN.md §serving): this
+class only owns the stateful pieces a request stream needs — the
+transmission scheduler and the per-request latency ledger — while every
+model decision and forward pass happens in the shared executor, so the
+server can never drift from the evaluator.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import confidence as C
 from repro.core import eo_adapter as EO
-from repro.core import preprocess as PP
-from repro.core import region_attention as RA
 from repro.core.cascade import CascadeConfig, TierModel
 from repro.core.latency import LatencyModel, DEFAULT_LINK
-from repro.data import synthetic
 from repro.network.link import LinkModel
 from repro.network.orbit import ContactPlan
 from repro.network.scheduler import TransmissionScheduler
+from repro.serving.engine_core import shared_core
+from repro.serving.executor import CascadeExecutor
+from repro.serving.offload import OffloadPipeline
+from repro.serving.policy import ProgressiveConfidencePolicy
 from repro.serving.request import Request, Response
 
 
 class CascadeServer:
     def __init__(self, sat: TierModel, gs: TierModel,
                  adapter_cfg: EO.EOAdapterConfig, conf_params,
-                 cascade_cfg: CascadeConfig = CascadeConfig(),
-                 latency: LatencyModel = LatencyModel(),
+                 cascade_cfg: Optional[CascadeConfig] = None,
+                 latency: Optional[LatencyModel] = None,
                  link: LinkModel = DEFAULT_LINK,
                  plan: Optional[ContactPlan] = None,
-                 link_up: bool = True):
+                 link_up: bool = True, tx_jitter: bool = False):
         self.sat, self.gs = sat, gs
-        self.ac, self.conf, self.cc = adapter_cfg, conf_params, cascade_cfg
-        self.lat, self.link = latency, link
+        self.ac, self.conf = adapter_cfg, conf_params
+        self.cc = cascade_cfg or CascadeConfig()
+        self.lat = latency or LatencyModel()
+        self.link = link
         self.plan = plan or ContactPlan(contact_fraction_override=1.0)
         self.scheduler = TransmissionScheduler(self.plan, self.link)
         self.link_up = link_up
+        self.tx_jitter = tx_jitter
 
+    # ------------------------------------------------------------------
+    def _pipeline(self) -> OffloadPipeline:
+        # built per request so runtime config changes (self.cc) apply
+        return OffloadPipeline(self.ac, self.cc, self.lat,
+                               link=self.link, scheduler=self.scheduler)
+
+    def _executor(self, pipeline: OffloadPipeline) -> CascadeExecutor:
+        return CascadeExecutor(shared_core(self.sat, self.ac),
+                               shared_core(self.gs, self.ac),
+                               self.ac, pipeline)
+
+    def _policy(self) -> ProgressiveConfidencePolicy:
+        # built per request so runtime threshold changes (self.cc) apply
+        return ProgressiveConfidencePolicy(self.conf, self.cc)
+
+    # ------------------------------------------------------------------
     def handle(self, req: Request, now: float = 0.0) -> Response:
-        images = jnp.asarray(req.image[None])
+        images = jnp.asarray(np.asarray(req.image)[None])
         prompts = jnp.asarray(np.array([req.prompt], np.int32))
         l_ans = self.ac.answer_len(req.task)
-        timings: Dict[str, float] = {}
 
-        # V(x), E(T) + stage-1 confidence
-        rf = EO.encode_regions(self.sat.params, self.ac, images)
-        tf = EO.encode_text(self.sat.params, self.sat.cfg,
-                            self.ac.prompt_token(req.task, prompts))
-        vis = rf.astype(jnp.float32).mean(1)
-        timings["encode"] = self.lat.sat_encode_s()
-        score = float(C.apply_stage(self.conf, 0, vis)[0])
-        timings["confidence"] = self.lat.conf_stage_s()
-        exit_stage = 0 if score < self.cc.taus[0] else -1
+        pipeline = self._pipeline()
+        res = self._executor(pipeline).run_serve(
+            self._policy(), req.task, images, prompts, self.cc.answer_vocab,
+            allow_offload=self.link_up)
+        exit_stage = int(np.asarray(res.exit_stage)[0])
+        offload = bool(np.asarray(res.offload)[0])
 
-        sat_tokens = None
-        if exit_stage < 0:
-            # onboard decode with progressive re-checks
-            logits, cache, idx = EO.prefill_prompt(
-                self.sat.params, self.sat.cfg, self.ac, req.task, images,
-                prompts, l_ans)
+        # -- per-request latency ledger ------------------------------------
+        timings: Dict[str, float] = {
+            "encode": self.lat.sat_encode_s(),
+            "confidence": self.lat.conf_stage_s(),
+        }
+        if res.prefill_ran:
             timings["sat_prefill"] = self.lat.sat_prefill_s()
-            n_stages = C.num_stages(self.conf)
-            decoded = 0
-            toks_all = []
-            for si in range(1, n_stages):
-                n_tok = (l_ans - decoded) if si == n_stages - 1 else \
-                    min(self.cc.n_t, l_ans - decoded)
-                if n_tok > 0:
-                    toks, _, cache, logits, idx = EO.decode_chunk(
-                        self.sat.params, self.sat.cfg, cache, logits, idx,
-                        n_tok, self.cc.answer_vocab)
-                    toks_all.append(np.asarray(toks))
-                    decoded += n_tok
-                    timings[f"sat_decode_{si}"] = self.lat.sat_decode_s(n_tok)
-                gen = jnp.asarray(np.concatenate(toks_all, 1))
-                st = EO.token_features(self.sat.params, gen)
-                s = float(C.apply_stage(self.conf, si, vis, st)[0])
-                timings[f"confidence_{si}"] = self.lat.conf_stage_s()
-                tau = self.cc.taus[min(si, len(self.cc.taus) - 1)]
-                if s < tau:
-                    exit_stage = si
-                    break
-            sat_tokens = np.concatenate(toks_all, 1)[0] if toks_all else None
+        for stage, n_tok in res.ran_stages:
+            if n_tok > 0:
+                timings[f"sat_decode_{stage}"] = self.lat.sat_decode_s(n_tok)
+            timings[f"confidence_{stage}"] = self.lat.conf_stage_s()
 
-        offload = exit_stage >= 0 and self.link_up
         if offload:
-            regions = synthetic.regions_of(images, self.ac.grid)
-            _, norm = RA.score_regions(rf[:, :, None, :], tf)
-            filtered, txb, meta = PP.multiscale_filter(
-                regions, norm, alpha=self.cc.alpha, beta=self.cc.beta)
-            gs_img = synthetic.assemble(filtered, self.ac.grid)
-            comp = float(txb[0]) / max(float(meta["full_bytes"][0]), 1.0)
-            n_bytes = self.lat.full_bytes(req.task) * comp
-            tr = self.scheduler.submit(now, n_bytes, sample_jitter=False)
+            kept = float(res.gs_view.kept_frac[0])
+            n_bytes = float(pipeline.payload_bytes(
+                req.task, res.gs_view.bytes_frac[0]))
+            tr = pipeline.transmit_scheduled(now, n_bytes,
+                                             sample_jitter=self.tx_jitter)
             timings["tx"] = tr.t_done - tr.t_submit
-            kept = 1.0 - float(meta["discarded"][0].mean())
-            toks, _ = EO.generate(self.gs.params, self.gs.cfg, self.ac,
-                                  req.task, gs_img, prompts,
-                                  self.cc.answer_vocab)
             timings["gs_infer"] = self.lat.gs_infer_s(l_ans, kept)
-            tokens = np.asarray(toks)[0]
+            tokens = res.gs_tokens[0]
             tier = "ground"
         else:
-            if sat_tokens is None:  # offload wanted but link down: fall back
-                logits, cache, idx = EO.prefill_prompt(
-                    self.sat.params, self.sat.cfg, self.ac, req.task, images,
-                    prompts, l_ans)
-                toks, _, cache, logits, idx = EO.decode_chunk(
-                    self.sat.params, self.sat.cfg, cache, logits, idx, l_ans,
-                    self.cc.answer_vocab)
-                sat_tokens = np.asarray(toks)[0]
+            if res.fallback_full:
                 timings["sat_fallback"] = (self.lat.sat_prefill_s()
                                            + self.lat.sat_decode_s(l_ans))
-            tokens = sat_tokens
+            elif res.fallback_tokens:
+                timings["sat_fallback"] = self.lat.sat_decode_s(
+                    res.fallback_tokens)
+            tokens = res.sat_tokens
             n_bytes = 0.0
             tier = "satellite"
 

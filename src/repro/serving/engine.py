@@ -1,25 +1,29 @@
 """Batched inference engine: slot-based continuous batching over the
-prefill/decode step functions.
+``EngineCore`` slot table.
 
-The engine owns a fixed number of batch slots.  Arriving requests are padded
-into free slots; every ``step()`` advances all active slots by one decode
-token; finished slots free immediately (continuous batching à la vLLM/Orca,
-collapsed to the fixed-slot variant that pjit likes — stable shapes, no
-recompilation).  On the production mesh the same engine runs under
-``jax.jit`` with the decode-cell shardings from the dry-run.
+The engine owns a fixed number of batch slots.  Arriving requests prefill
+into free slots; every ``EngineCore.step()`` advances all active slots by
+one decode token with per-slot cache positions; finished slots free
+immediately and are refilled from the pending queue **mid-stream** — the
+batch never drains just to admit the next request (continuous batching à la
+vLLM/Orca, collapsed to the fixed-slot variant that pjit likes: stable
+shapes, one compile, no recompilation).  On the production mesh the same
+step functions run under ``jax.jit`` with the decode-cell shardings from the
+dry-run.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from collections import deque
+from typing import List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import eo_adapter as EO
-from repro.models import transformer as T
+from repro.core.cascade import TierModel
+from repro.serving.engine_core import EngineCore, EngineCoreConfig
 from repro.serving.request import Request, Response
 
 
@@ -35,43 +39,44 @@ class InferenceEngine:
 
     def __init__(self, params, cfg: ArchConfig,
                  adapter_cfg: EO.EOAdapterConfig,
-                 engine_cfg: EngineConfig = EngineConfig()):
+                 engine_cfg: Optional[EngineConfig] = None,
+                 tier: str = "satellite"):
         self.params = params
         self.cfg = cfg
         self.ac = adapter_cfg
-        self.ec = engine_cfg
-        self._decode = jax.jit(
-            lambda cache, tok, idx: T.decode_step(
-                self.params["backbone"], cfg, cache, {"tokens": tok}, idx))
+        self.ec = engine_cfg or EngineConfig()
+        self.tier = tier
+        self.core = EngineCore(
+            TierModel(params, cfg), adapter_cfg,
+            EngineCoreConfig(slots=self.ec.slots,
+                             answer_vocab=self.ec.answer_vocab))
 
     # -- batch-level API ---------------------------------------------------
     def generate_batch(self, task: str, images: jnp.ndarray,
                        prompts: jnp.ndarray
                        ) -> Tuple[np.ndarray, np.ndarray]:
-        toks, probs = EO.generate(self.params, self.cfg, self.ac, task,
-                                  images, prompts, self.ec.answer_vocab)
+        toks, probs = self.core.generate(task, images, prompts,
+                                         self.ec.answer_vocab)
         return np.asarray(toks), np.asarray(probs)
 
     # -- request-level API (slot-based continuous batching) ----------------
     def serve(self, requests: List[Request]) -> List[Response]:
-        """Serve a queue of requests through fixed batch slots."""
+        """Serve a queue of requests through fixed batch slots.
+
+        Requests are admitted whenever a slot is free — including slots that
+        finished on the *previous* decode step while the rest of the batch is
+        still mid-answer — so mixed-length traffic (1-token VQA/CLS answers
+        next to N_r-token detection answers) keeps every slot busy."""
         out: List[Response] = []
-        queue = list(requests)
-        while queue:
-            batch = queue[:self.ec.slots]
-            queue = queue[self.ec.slots:]
-            by_task: Dict[str, List[Request]] = {}
-            for r in batch:
-                by_task.setdefault(r.task, []).append(r)
-            for task, group in by_task.items():
-                images = jnp.asarray(np.stack([r.image for r in group]))
-                prompts = jnp.asarray(np.array([r.prompt for r in group],
-                                               np.int32))
-                toks, _ = self.generate_batch(task, images, prompts)
-                for r, t in zip(group, toks):
-                    pred = t[0] if task in ("vqa", "cls") else t
-                    out.append(Response(
-                        request_id=r.request_id, tokens=t, pred=pred,
-                        tier="single", exit_stage=-1, latency_s=0.0,
-                        tx_bytes=0.0))
+        queue = deque(requests)
+        core = self.core
+        while queue or core.active_count() > 0:
+            while queue and core.free_slots():
+                core.admit(queue.popleft())
+            for req, toks in core.step():
+                pred = toks[0] if req.task in ("vqa", "cls") else toks
+                out.append(Response(
+                    request_id=req.request_id, tokens=toks, pred=pred,
+                    tier=self.tier, exit_stage=-1, latency_s=0.0,
+                    tx_bytes=0.0))
         return out

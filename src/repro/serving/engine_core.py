@@ -1,0 +1,263 @@
+"""EngineCore — the single jitted execution substrate for Algorithm 1.
+
+One ``EngineCore`` wraps one tier (``TierModel``) of the satellite-ground
+cascade and owns every compiled entry point the serving layer needs:
+
+- **batch path** (``encode`` / ``prefill`` / ``decode_chunk`` / ``generate``
+  / ``token_features``): shape-stable ``jax.jit`` functions used by the
+  ``CascadeExecutor`` for both the vectorised counterfactual evaluator and
+  the per-request server.  Compilation is keyed only by (batch, chunk
+  length), so repeated traffic at the same shapes never recompiles.
+
+- **slot path** (``admit`` / ``step`` / ``release``): a fixed-capacity slot
+  table for true continuous batching.  Every slot holds one in-flight
+  request's KV cache slice, next-token logits and decode position; a single
+  jitted step function advances *all* slots one token per call with
+  **per-slot** cache indices (slots prefilled at different times sit at
+  different positions).  Finished slots free immediately and are refilled
+  from the pending queue mid-stream — the batch never drains to refill,
+  which is the vLLM/Orca property the old queue-chunking engine only
+  claimed.  All slot-path shapes are fixed at construction (slot count,
+  cache capacity = regions + prompt + longest answer), so the decode step
+  compiles exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eo_adapter as EO
+from repro.models import transformer as T
+from repro.serving.request import Request
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class EngineCoreConfig:
+    slots: int = 8
+    answer_vocab: int = 64
+    max_answer_len: Optional[int] = None   # default: N_r (longest task = det)
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    l_ans: int = 0
+    tokens: Optional[List[int]] = None
+    active: bool = False
+
+
+def shared_core(tier, adapter_cfg: EO.EOAdapterConfig) -> "EngineCore":
+    """Per-tier ``EngineCore`` cache keyed by adapter identity.
+
+    Adapters (SpaceVerse, CascadeServer, baselines) are constructed freely —
+    often many per test session over the same trained tiers — and each
+    ``EngineCore`` owns jit caches.  Sharing cores means the jitted step
+    functions compile once per tier, not once per adapter instance.  The
+    cache lives ON the ``TierModel`` instance, so cores (and their compiled
+    executables) are garbage-collected together with the tier they serve
+    instead of accumulating for the process lifetime."""
+    cache = getattr(tier, "_engine_cores", None)
+    if cache is None:
+        cache = {}
+        tier._engine_cores = cache
+    core = cache.get(id(adapter_cfg))
+    if core is None or core.ac is not adapter_cfg:
+        core = EngineCore(tier, adapter_cfg)
+        cache[id(adapter_cfg)] = core   # core references adapter_cfg → id stays valid
+    return core
+
+
+class EngineCore:
+    """Jitted fixed-shape executor + slot table over one tier model."""
+
+    def __init__(self, tier, adapter_cfg: EO.EOAdapterConfig,
+                 core_cfg: Optional[EngineCoreConfig] = None):
+        self.tier = tier
+        self.ac = adapter_cfg
+        self.cfg = core_cfg or EngineCoreConfig()
+        self.max_answer_len = (self.cfg.max_answer_len
+                               or adapter_cfg.n_regions)
+        # fixed slot-cache capacity: [regions | prompt | longest answer]
+        self._slot_max_len = adapter_cfg.n_regions + 1 + self.max_answer_len
+
+        params, cfg, ac = tier.params, tier.cfg, adapter_cfg
+
+        def _encode(images, ptok):
+            rf = EO.encode_regions(params, ac, images)
+            tf = EO.encode_text(params, cfg, ptok)
+            vis = rf.astype(jnp.float32).mean(axis=1)
+            return rf, tf, vis
+
+        def _prefill(images, ptok, *, max_len):
+            return EO.prefill_tokens(params, cfg, ac, images, ptok, max_len)
+
+        def _decode_chunk(cache, logits, idx, *, n_tokens, answer_vocab):
+            return EO.decode_chunk(params, cfg, cache, logits, idx,
+                                   n_tokens, answer_vocab)
+
+        self._encode_j = jax.jit(_encode)
+        self._prefill_j = jax.jit(_prefill, static_argnames=("max_len",))
+        self._decode_chunk_j = jax.jit(
+            _decode_chunk, static_argnames=("n_tokens", "answer_vocab"))
+        self._token_feats_j = jax.jit(
+            lambda toks: EO.token_features(params, toks))
+
+        # -- slot-path compiled functions (shapes fixed at construction) ----
+        def _one_step(tok, cache_s, idx):
+            """Advance ONE slot by one token (vmapped below).
+
+            ``cache_s``: this slot's cache slice (batch axis stripped)."""
+            c1 = jax.tree.map(lambda x: x[:, None], cache_s)
+            logits, new_c = T.decode_step(params["backbone"], cfg, c1,
+                                          {"tokens": tok[None, None]}, idx)
+            return logits[0], jax.tree.map(lambda x: x[:, 0], new_c)
+
+        def _slot_step(slot_logits, slot_cache, slot_index, active,
+                       *, answer_vocab):
+            """All-slot decode step with per-slot cache indices."""
+            a_logits = slot_logits[:, :answer_vocab]
+            toks = jnp.argmax(a_logits, axis=-1).astype(jnp.int32)
+            new_logits, new_cache = jax.vmap(
+                _one_step, in_axes=(0, 1, 0), out_axes=(0, 1))(
+                    toks, slot_cache, slot_index)
+            new_index = jnp.where(active, slot_index + 1, slot_index)
+            return toks, new_logits, new_cache, new_index
+
+        def _slot_scatter(slot_cache, slot_logits, slot_index,
+                          cache, logits, s, idx):
+            """Write one freshly-prefilled request into slot ``s``."""
+            sc = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new[:, 0], s, 1),
+                slot_cache, cache)
+            sl = jax.lax.dynamic_update_index_in_dim(slot_logits, logits[0],
+                                                     s, 0)
+            si = jax.lax.dynamic_update_index_in_dim(
+                slot_index, idx.astype(slot_index.dtype), s, 0)
+            return sc, sl, si
+
+        self._slot_step_j = jax.jit(_slot_step,
+                                    static_argnames=("answer_vocab",))
+        self._slot_scatter_j = jax.jit(_slot_scatter)
+
+        self._slots: List[_Slot] = [_Slot() for _ in range(self.cfg.slots)]
+        self._slot_cache = None
+        self._slot_logits = None
+        self._slot_index = None
+        self._step_no = 0
+        self.stats: Dict[str, Any] = {
+            "admitted": 0, "finished": 0, "mid_stream_refills": 0,
+            "occupancy_log": [],        # (step, active_slots_after_admit)
+        }
+        self._occupancy_cap = 4096      # keep the log bounded on long runs
+
+    # ------------------------------------------------------------------
+    # batch path (shared by CascadeExecutor)
+    # ------------------------------------------------------------------
+    def encode(self, task: str, images: jax.Array, prompts: jax.Array):
+        """V(x), E(T) and pooled visual features: (B,R,d), (B,1,d), (B,d)."""
+        return self._encode_j(images, self.ac.prompt_token(task, prompts))
+
+    def prefill(self, task: str, images: jax.Array, prompts: jax.Array,
+                extra_len: int):
+        max_len = self.ac.n_regions + 1 + extra_len
+        return self._prefill_j(images, self.ac.prompt_token(task, prompts),
+                               max_len=max_len)
+
+    def decode_chunk(self, cache, logits, idx, n_tokens: int,
+                     answer_vocab: int):
+        return self._decode_chunk_j(cache, logits, idx, n_tokens=n_tokens,
+                                    answer_vocab=answer_vocab)
+
+    def token_features(self, tokens: jax.Array) -> jax.Array:
+        return self._token_feats_j(tokens)
+
+    def generate(self, task: str, images: jax.Array, prompts: jax.Array,
+                 answer_vocab: int) -> Tuple[jax.Array, jax.Array]:
+        """Full greedy answer (prefill + one chunk), as ``EO.generate``."""
+        l_ans = self.ac.answer_len(task)
+        logits, cache, idx = self.prefill(task, images, prompts, l_ans)
+        toks, probs, *_ = self.decode_chunk(cache, logits, idx, l_ans,
+                                            answer_vocab)
+        return toks, probs
+
+    # ------------------------------------------------------------------
+    # slot path (continuous batching)
+    # ------------------------------------------------------------------
+    def _ensure_slot_tables(self):
+        if self._slot_cache is None:
+            cfg = self.tier.cfg
+            self._slot_cache = T.init_cache(cfg, self.cfg.slots,
+                                            self._slot_max_len)
+            self._slot_logits = jnp.zeros((self.cfg.slots, cfg.vocab_size),
+                                          jnp.float32)
+            self._slot_index = jnp.zeros((self.cfg.slots,), jnp.int32)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if not s.active]
+
+    def active_count(self) -> int:
+        return sum(s.active for s in self._slots)
+
+    def admit(self, request: Request) -> int:
+        """Prefill ``request`` into a free slot; returns the slot id."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slot")
+        self._ensure_slot_tables()
+        s = free[0]
+        images = jnp.asarray(np.asarray(request.image)[None])
+        prompts = jnp.asarray(np.array([request.prompt], np.int32))
+        ptok = self.ac.prompt_token(request.task, prompts)
+        # fixed max_len: every request uses the same cache capacity, so the
+        # prefill and decode step never see a new shape
+        logits, cache, idx = self._prefill_j(images, ptok,
+                                             max_len=self._slot_max_len)
+        self._slot_cache, self._slot_logits, self._slot_index = \
+            self._slot_scatter_j(self._slot_cache, self._slot_logits,
+                                 self._slot_index, cache, logits,
+                                 jnp.asarray(s, jnp.int32), idx)
+        others_active = self.active_count()
+        self._slots[s] = _Slot(request=request,
+                               l_ans=self.ac.answer_len(request.task),
+                               tokens=[], active=True)
+        self.stats["admitted"] += 1
+        if self._step_no > 0 and others_active > 0:
+            self.stats["mid_stream_refills"] += 1
+        log = self.stats["occupancy_log"]
+        log.append((self._step_no, self.active_count()))
+        if len(log) > self._occupancy_cap:
+            del log[:self._occupancy_cap // 2]
+        return s
+
+    def step(self) -> List[Tuple[Request, np.ndarray]]:
+        """Advance every active slot one token; return finished requests.
+
+        Finished slots free immediately — callers refill them from their
+        pending queue before the next ``step`` (continuous batching)."""
+        if self.active_count() == 0:
+            return []
+        active = jnp.asarray([s.active for s in self._slots])
+        toks, self._slot_logits, self._slot_cache, self._slot_index = \
+            self._slot_step_j(self._slot_logits, self._slot_cache,
+                              self._slot_index, active,
+                              answer_vocab=self.cfg.answer_vocab)
+        toks_np = np.asarray(toks)
+        self._step_no += 1
+        finished: List[Tuple[Request, np.ndarray]] = []
+        for i, slot in enumerate(self._slots):
+            if not slot.active:
+                continue
+            slot.tokens.append(int(toks_np[i]))
+            if len(slot.tokens) >= slot.l_ans:
+                finished.append((slot.request,
+                                 np.asarray(slot.tokens, np.int32)))
+                self._slots[i] = _Slot()
+                self.stats["finished"] += 1
+        return finished

@@ -1,0 +1,106 @@
+"""Shared offload pipeline: Eq. 2 region scoring → Eq. 3 multiscale filter →
+transmission → GS-tier inference.
+
+Both entry points of Algorithm 1 (the vectorised counterfactual evaluator
+and the request server) route offloaded samples through this one stage, so
+the preprocessing the GS model sees — and the bytes the link is charged —
+can never diverge between them.
+
+A ``GSView`` describes what the ground station receives:
+
+- ``images``      — the (possibly filtered) pixels the GS model runs on;
+- ``bytes_frac``  — per-sample fraction of the task's full raw-image bytes
+  actually transmitted (the modelled downlink payload is
+  ``LatencyModel.full_bytes(task) * bytes_frac``);
+- ``kept_frac``   — fraction of vision tokens surviving the filter (scales
+  the GS prefill cost);
+- ``region_scores`` — Eq. 2 normalised K(x^r) when computed.
+
+Transmission has two modes matching the two entry points: the analytic
+per-sample expectation (``transmit_analytic``, used by the batch evaluator's
+latency ledger) and the stateful window-aware scheduler
+(``transmit_scheduled``, used by the request server — FIFO queueing, contact
+windows and straggler re-replication all apply).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core import preprocess as PP
+from repro.core import region_attention as RA
+from repro.data import synthetic
+
+
+@dataclasses.dataclass
+class GSView:
+    images: jax.Array                   # (B, H, W, C) what the GS tier sees
+    bytes_frac: np.ndarray              # (B,) fraction of full task bytes
+    kept_frac: np.ndarray               # (B,) surviving vision-token fraction
+    region_scores: Optional[jax.Array]  # (B, R) Eq. 2 normalised scores
+    meta: Dict[str, Any]
+
+
+class OffloadPipeline:
+    """Eq. 2 + Eq. 3 preprocessing and link transmission for offloads."""
+
+    def __init__(self, adapter_cfg, cascade_cfg, latency, link=None,
+                 scheduler=None):
+        self.ac = adapter_cfg
+        self.cc = cascade_cfg
+        self.lat = latency
+        self.link = link
+        self.scheduler = scheduler
+
+    # -- views --------------------------------------------------------------
+    def multiscale_view(self, task: str, images: jax.Array,
+                        region_feats: jax.Array, text_feats: jax.Array
+                        ) -> GSView:
+        """Eq. 2 scoring + Eq. 3 attention-guided multiscale filtering."""
+        regions = synthetic.regions_of(images, self.ac.grid)
+        _, norm = RA.score_regions(region_feats[:, :, None, :], text_feats)
+        filtered, txb, meta = PP.multiscale_filter(
+            regions, norm, alpha=self.cc.alpha, beta=self.cc.beta)
+        gs_images = synthetic.assemble(filtered, self.ac.grid)
+        comp = np.asarray(txb) / np.maximum(np.asarray(meta["full_bytes"]),
+                                            1.0)
+        kept = 1.0 - np.asarray(meta["discarded"]).mean(-1)
+        return GSView(images=gs_images, bytes_frac=comp, kept_frac=kept,
+                      region_scores=norm, meta=meta)
+
+    def full_view(self, task: str, images: jax.Array) -> GSView:
+        b = images.shape[0]
+        return GSView(images=images, bytes_frac=np.ones((b,)),
+                      kept_frac=np.ones((b,)), region_scores=None, meta={})
+
+    def random_view(self, task: str, images: jax.Array, keep_frac: float,
+                    key: jax.Array) -> GSView:
+        """Naive random-masking reduction (GS-only ablation, Fig. 3/12)."""
+        regions = synthetic.regions_of(images, self.ac.grid)
+        filt, txb, meta = PP.random_mask_filter(regions, keep_frac, key)
+        gs_images = synthetic.assemble(filt, self.ac.grid)
+        frac = np.asarray(meta["kept"]).mean(-1)
+        return GSView(images=gs_images, bytes_frac=frac, kept_frac=frac,
+                      region_scores=None, meta=meta)
+
+    # -- transmission -------------------------------------------------------
+    def payload_bytes(self, task: str, bytes_frac) -> np.ndarray:
+        """Modelled raw-image downlink bytes scaled by achieved compression."""
+        return self.lat.full_bytes(task) * np.asarray(bytes_frac)
+
+    def transmit_analytic(self, n_bytes: float) -> float:
+        """Mean air time on the measured link (batch evaluator's ledger)."""
+        return self.lat.tx_s(self.link, n_bytes)
+
+    def transmit_scheduled(self, now: float, n_bytes: float,
+                           sample_jitter: bool = False):
+        """Window-aware scheduled transfer (request server); returns the
+        scheduler's completion record.  Jitter defaults off for a
+        deterministic per-request ledger; enable it (``CascadeServer``'s
+        ``tx_jitter``) to model rate variation — straggler re-replication
+        can only rescue a transfer when rates are actually sampled."""
+        return self.scheduler.submit(now, n_bytes,
+                                     sample_jitter=sample_jitter)

@@ -1,0 +1,194 @@
+"""CascadePolicy — pluggable per-chunk exit/offload decisions for Algorithm 1.
+
+The ``CascadeExecutor`` runs the mechanical part of the satellite-ground
+cascade (encode → chunked onboard decode → Eq. 2/Eq. 3 offload pipeline →
+GS inference); a ``CascadePolicy`` supplies every *decision*:
+
+- ``decide_initial``  — offload verdict right after encoding (stage 1 of the
+  paper's progressive confidence; before any token is decoded);
+- ``decide_stage``    — verdict after each decoded chunk (``None`` = this
+  policy takes no decision at that point);
+- ``gs_view``         — what pixels the ground station receives for the
+  offloaded samples (Eq. 3 multiscale, full image, or the naive random
+  masking of the Fig. 3/12 ablations);
+- ``stage_plan``      — how onboard decoding is chunked between decisions.
+
+The SpaceVerse progressive-confidence network and every §4.1.5 baseline
+(static satellite-only/GS-only, Tabi, AI-RG) are expressed as policies, so
+they all share one executor and can never drift from each other again.
+
+Decision masks are returned as (B,) bool arrays (jnp or np) together with
+optional (B,) scores; the executor accumulates them into ``offload`` /
+``exit_stage`` exactly as Algorithm 1 specifies.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import confidence as C
+
+Decision = Tuple[Any, Optional[Any]]          # ((B,) bool mask, (B,) scores)
+
+
+class CascadePolicy:
+    """Base policy: run the full answer onboard, never offload.
+
+    Class attributes declare what the executor must compute:
+
+    - ``needs_encode``: policy decisions (or its GS view) need V(x)/E(T)
+      features, so the executor runs the encoders up front;
+    - ``run_onboard``/``run_gs``: which branches execute at all (in
+      counterfactual mode both usually run; static tiers skip one);
+    - ``collects_scores``: every decision point yields a score, so the
+      executor can stack them into ``conf_scores``.
+    """
+
+    name = "never-offload"
+    needs_encode = False
+    run_onboard = True
+    run_gs = False
+    collects_scores = False
+
+    # -- decode chunking ----------------------------------------------------
+    def stage_plan(self, task: str, l_ans: int) -> List[int]:
+        """Token counts decoded between decision points (single chunk by
+        default — decide nothing mid-decode)."""
+        return [l_ans] if l_ans > 0 else []
+
+    # -- decisions ----------------------------------------------------------
+    def decide_initial(self, task: str, batch: int,
+                       visual: Optional[jax.Array]) -> Decision:
+        return jnp.zeros((batch,), bool), None
+
+    def decide_stage(self, stage: int, task: str, tokens: jax.Array,
+                     probs: jax.Array, visual: Optional[jax.Array],
+                     token_feats_fn: Callable[[], jax.Array]
+                     ) -> Optional[Decision]:
+        return None
+
+    # -- offload view -------------------------------------------------------
+    def gs_view(self, pipeline, task: str, images: jax.Array,
+                region_feats: Optional[jax.Array],
+                text_feats: Optional[jax.Array]):
+        return pipeline.full_view(task, images)
+
+
+class ProgressiveConfidencePolicy(CascadePolicy):
+    """SpaceVerse §3.1: progressive confidence network g̃ with per-stage
+    thresholds τ_i; offloads transit the Eq. 2/Eq. 3 multiscale pipeline."""
+
+    name = "progressive-confidence"
+    needs_encode = True
+    run_onboard = True
+    run_gs = True
+    collects_scores = True
+
+    def __init__(self, conf_params, cascade_cfg):
+        self.conf = conf_params
+        self.cc = cascade_cfg
+
+    @property
+    def num_stages(self) -> int:
+        return C.num_stages(self.conf)
+
+    def stage_plan(self, task: str, l_ans: int) -> List[int]:
+        """Chunks before confidence stages 2..I; the last stage always sees
+        the complete output (identical to the pre-refactor ``_stage_plan``)."""
+        n_stages = self.num_stages
+        if n_stages <= 1:
+            return []
+        chunks, done = [], 0
+        for _ in range(n_stages - 2):
+            c = min(self.cc.n_t, l_ans - done)
+            chunks.append(max(c, 0))
+            done += c
+        chunks.append(max(l_ans - done, 0))
+        return chunks
+
+    def _tau(self, stage: int) -> float:
+        return self.cc.taus[min(stage, len(self.cc.taus) - 1)]
+
+    def decide_initial(self, task, batch, visual) -> Decision:
+        s = C.apply_stage(self.conf, 0, visual)
+        return s < self._tau(0), s
+
+    def decide_stage(self, stage, task, tokens, probs, visual,
+                     token_feats_fn) -> Decision:
+        s = C.apply_stage(self.conf, stage, visual, token_feats_fn())
+        return s < self._tau(stage), s
+
+    def gs_view(self, pipeline, task, images, region_feats, text_feats):
+        return pipeline.multiscale_view(task, images, region_feats,
+                                        text_feats)
+
+
+class SatelliteOnlyPolicy(CascadePolicy):
+    """Everything answers onboard (status-quo baseline, §4.1.5)."""
+    name = "satellite-only"
+
+
+class GroundOnlyPolicy(CascadePolicy):
+    """Everything offloads at stage 0; raw images transit the link, with the
+    optional naive random-masking reduction (Fig. 3/12)."""
+
+    name = "ground-only"
+    run_onboard = False
+    run_gs = True
+
+    def __init__(self, keep_frac: Optional[float] = None, seed: int = 0):
+        self.keep_frac = keep_frac
+        self.key = jax.random.PRNGKey(seed)
+
+    def stage_plan(self, task, l_ans):
+        return []
+
+    def decide_initial(self, task, batch, visual) -> Decision:
+        return jnp.ones((batch,), bool), None
+
+    def gs_view(self, pipeline, task, images, region_feats, text_feats):
+        if self.keep_frac is not None and self.keep_frac < 1.0:
+            self.key, sub = jax.random.split(self.key)
+            return pipeline.random_view(task, images, self.keep_frac, sub)
+        return pipeline.full_view(task, images)
+
+
+class TabiPolicy(CascadePolicy):
+    """Tabi (EuroSys'23): full onboard decode, then one confidence value from
+    the answer-token probabilities; offloads transit at full image size."""
+
+    name = "tabi"
+    run_onboard = True
+    run_gs = True
+
+    def __init__(self, threshold: float = 0.7):
+        self.threshold = threshold
+
+    def confidence(self, probs: jax.Array) -> jax.Array:
+        """Mean max answer-token probability (B, L, V) → (B,)."""
+        return probs.max(-1).mean(-1)
+
+    def decide_stage(self, stage, task, tokens, probs, visual,
+                     token_feats_fn) -> Decision:
+        conf = self.confidence(probs)
+        return conf < self.threshold, conf
+
+
+class AIRGPolicy(CascadePolicy):
+    """AI-RG (TMC'24): difficulty-agnostic — a pre-computed offload fraction
+    realised by random selection before any decoding."""
+
+    name = "airg"
+    run_onboard = True
+    run_gs = True
+
+    def __init__(self, fraction_fn: Callable[[str], float], seed: int = 0):
+        self.fraction_fn = fraction_fn
+        self.key = jax.random.PRNGKey(seed)
+
+    def decide_initial(self, task, batch, visual) -> Decision:
+        rho = self.fraction_fn(task)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.uniform(sub, (batch,)) < rho, None

@@ -9,6 +9,13 @@ import numpy as np
 
 _ids = itertools.count()
 
+#: The unified tier vocabulary: every ``Response.tier`` is one of these.
+#: ``"satellite"`` — answered by the onboard model W^s (including the
+#: single-tier ``InferenceEngine``, which runs the satellite tier, and the
+#: link-down graceful-degradation path); ``"ground"`` — offloaded through
+#: the Eq. 2/Eq. 3 pipeline and answered by the GS model W^g.
+TIERS = ("satellite", "ground")
+
 
 @dataclasses.dataclass
 class Request:
@@ -25,7 +32,7 @@ class Response:
     request_id: int
     tokens: np.ndarray              # (L_ans,)
     pred: Any
-    tier: str                       # "satellite" | "ground"
+    tier: str                       # one of TIERS
     exit_stage: int                 # −1 = answered onboard
     latency_s: float
     tx_bytes: float

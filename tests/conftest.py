@@ -11,6 +11,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import pytest  # noqa: E402
 
 
+def pytest_collection_modifyitems(items):
+    """Mark every test that needs the trained ``tiny_bundle`` as ``slow`` so
+    CI-style runs can skip proxy training with ``pytest -m "not slow"``."""
+    for item in items:
+        if "tiny_bundle" in getattr(item, "fixturenames", ()):
+            item.add_marker(pytest.mark.slow)
+
+
 @pytest.fixture(scope="session")
 def tiny_bundle():
     """A minimal trained two-tier system shared across integration tests."""

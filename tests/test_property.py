@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed in the seed environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import preprocess as PP
 from repro.network.orbit import ContactPlan, contact_fraction, orbital_period_s
