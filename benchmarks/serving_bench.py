@@ -1,0 +1,225 @@
+"""Serving-throughput benchmark for the EngineCore slot path.
+
+Drives one satellite-tier ``EngineCore`` at **full slot occupancy** — every
+finished slot is refilled from a synthetic request stream before the next
+decode step — and measures the continuous-batching hot loop for each step
+implementation:
+
+- ``batched``: one ``T.decode_step`` over the whole slot table per step with
+  a (slots,) ragged index vector, refilled through one bucketed
+  ``admit_many`` prefill per step (this PR),
+- ``vmap``:    the pre-PR engine — ``jax.vmap`` of a batch-1 step over the
+  stacked table (kept in ``EngineCore`` as the baseline oracle) **and** one
+  batch-1 prefill + scatter per admitted request.
+
+Metrics (per impl): decode tokens/s, steps/s, admissions/s, plus the
+batched/vmap speedups.  Results land in ``BENCH_serving.json`` so CI can
+smoke the harness and future PRs can diff the numbers.  Model weights are
+randomly initialised — throughput does not depend on training, so the bench
+needs no proxy-training warmup.
+
+Usage:
+    PYTHONPATH=src python benchmarks/serving_bench.py            # full run
+    PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.spaceverse_pair import proxy_pair
+from repro.core import eo_adapter as EO
+from repro.core.cascade import TierModel
+from repro.data import synthetic
+from repro.serving.engine_core import EngineCore, EngineCoreConfig
+from repro.serving.request import Request
+
+
+def _request_stream(ac: EO.EOAdapterConfig, n: int, det_frac: float,
+                    seed: int) -> List[Request]:
+    """Mixed-length traffic: ``det`` answers take N_r tokens, vqa/cls take 1
+    — the ragged-length regime the slot table exists for."""
+    eo_cfg = synthetic.EOTaskConfig(image_size=ac.image_size, grid=ac.grid,
+                                    num_classes=ac.num_classes)
+    data = synthetic.make_dataset("cls", max(n, 2), seed=seed, cfg=eo_cfg)
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        task = "det" if rng.rand() < det_frac else "vqa"
+        reqs.append(Request(task=task, image=data["images"][i % len(
+            data["images"])], prompt=int(data["prompts"][i % len(
+                data["prompts"])]) % 2))
+    return reqs
+
+
+def _legacy_admit(core: EngineCore, request: Request) -> int:
+    """The pre-PR ``EngineCore.admit``, verbatim: one batch-1 prefill + one
+    per-leaf ``dynamic_update_index_in_dim`` scatter + one ``prompt_token``
+    device roundtrip per admitted request.  Kept here (not in the engine) so
+    the benchmark baseline stays the pre-PR engine even as the real
+    admission path improves."""
+    import jax.numpy as jnp
+    from repro.serving.engine_core import _Slot
+
+    free = core.free_slots()
+    if not free:
+        raise RuntimeError("no free slot")
+    core._ensure_slot_tables()
+    scatter = getattr(core, "_legacy_scatter_j", None)
+    if scatter is None:
+        def _slot_scatter(slot_cache, slot_logits, slot_index,
+                          cache, logits, s, idx):
+            sc = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new[:, 0], s, 1),
+                slot_cache, cache)
+            sl = jax.lax.dynamic_update_index_in_dim(slot_logits, logits[0],
+                                                     s, 0)
+            si = jax.lax.dynamic_update_index_in_dim(
+                slot_index, idx.astype(slot_index.dtype), s, 0)
+            return sc, sl, si
+        scatter = core._legacy_scatter_j = jax.jit(_slot_scatter)
+    s = free[0]
+    images = jnp.asarray(np.asarray(request.image)[None])
+    prompts = jnp.asarray(np.array([request.prompt], np.int32))
+    ptok = core.ac.prompt_token(request.task, prompts)
+    logits, cache, idx = core._prefill_j(images, ptok,
+                                         max_len=core._slot_max_len)
+    core._slot_cache, core._slot_logits, core._slot_index = scatter(
+        core._slot_cache, core._slot_logits, core._slot_index, cache, logits,
+        jnp.asarray(s, jnp.int32), idx)
+    core._slots[s] = _Slot(request=request,
+                           l_ans=core.ac.answer_len(request.task),
+                           tokens=[], active=True)
+    core._active_dev = None
+    core.stats["admitted"] += 1
+    if core._step_no > 0 and core.active_count() > 1:
+        core.stats["mid_stream_refills"] += 1
+    return s
+
+
+def bench_impl(impl: str, *, slots: int, steps: int, warmup: int,
+               det_frac: float, seed: int) -> Dict[str, float]:
+    sat_cfg, _ = proxy_pair("small")
+    ac = EO.EOAdapterConfig()
+    params = EO.init_adapter(jax.random.PRNGKey(seed), sat_cfg, ac)
+    core = EngineCore(TierModel(params, sat_cfg), ac,
+                      EngineCoreConfig(slots=slots, answer_vocab=9,
+                                       step_impl=impl))
+    # enough pending work that the table never starves (det pins slots for
+    # N_r steps; 1-token requests churn through the rest)
+    stream = _request_stream(ac, n=slots * (steps + warmup + 4) + 8,
+                             det_frac=det_frac, seed=seed)
+    queue = list(reversed(stream))
+
+    per_request_admission = impl == "vmap"   # the pre-PR refill path
+
+    def refill():
+        free = core.free_slots()
+        n = min(len(free), len(queue))
+        if per_request_admission:
+            for _ in range(n):
+                _legacy_admit(core, queue.pop())
+        elif n:
+            core.admit_many([queue.pop() for _ in range(n)])
+        return n
+
+    def step():
+        if per_request_admission:
+            # pre-PR step() rebuilt + re-uploaded the active mask
+            # host→device every call; reproduce that cost for the baseline
+            core._active_dev = None
+        return core.step()
+
+    # -- warmup: compile every admission bucket + the decode step -----------
+    core.warmup()
+    refill()
+    for _ in range(warmup):
+        step()
+        refill()
+
+    # -- timed: full occupancy, refilled every step -------------------------
+    tokens = 0
+    admissions = 0
+    n_admit_calls = 0
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        step()
+        tokens += core.cfg.slots          # full occupancy: slots tokens/step
+        n = refill()
+        admissions += n
+        n_admit_calls += 1 if n else 0
+    jax.block_until_ready(core._slot_logits)
+    dt = time.perf_counter() - t0
+
+    return {
+        "impl": impl,
+        "slots": slots,
+        "steps": steps,
+        "wall_s": round(dt, 4),
+        "decode_tokens_per_s": round(tokens / dt, 2),
+        "steps_per_s": round(steps / dt, 2),
+        "admissions_per_s": round(admissions / dt, 2),
+        "admissions": admissions,
+        "admit_calls": n_admit_calls,
+        "mid_stream_refills": core.stats["mid_stream_refills"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--warmup", type=int, default=8)
+    ap.add_argument("--det-frac", type=float, default=0.25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--impl", choices=["batched", "vmap", "both"],
+                    default="both")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: prove the harness executes end-to-end")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.slots, args.steps, args.warmup = 4, 8, 2
+
+    impls = ["batched", "vmap"] if args.impl == "both" else [args.impl]
+    results = {}
+    for impl in impls:
+        r = bench_impl(impl, slots=args.slots, steps=args.steps,
+                       warmup=args.warmup, det_frac=args.det_frac,
+                       seed=args.seed)
+        results[impl] = r
+        print(f"[{impl:7s}] {r['decode_tokens_per_s']:9.1f} tok/s  "
+              f"{r['steps_per_s']:7.2f} steps/s  "
+              f"{r['admissions_per_s']:6.2f} admits/s  "
+              f"({r['wall_s']}s wall)", flush=True)
+
+    rec = {
+        "config": {"slots": args.slots, "steps": args.steps,
+                   "warmup": args.warmup, "det_frac": args.det_frac,
+                   "backend": jax.default_backend(), "smoke": args.smoke},
+        "results": results,
+    }
+    if "batched" in results and "vmap" in results:
+        rec["speedup_tokens_per_s"] = round(
+            results["batched"]["decode_tokens_per_s"]
+            / results["vmap"]["decode_tokens_per_s"], 3)
+        print(f"speedup (batched/vmap): {rec['speedup_tokens_per_s']}×")
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

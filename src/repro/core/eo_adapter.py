@@ -62,6 +62,19 @@ class EOAdapterConfig:
             return c + 1 + p
         raise ValueError(task)
 
+    def prompt_id(self, task: str, prompt: int) -> int:
+        """Scalar host-side ``prompt_token`` for the admission hot path —
+        same vocabulary layout, no device roundtrip (a test pins the two
+        against each other)."""
+        c = self.num_classes
+        if task == "vqa":
+            return int(prompt)
+        if task == "cls":
+            return c
+        if task == "det":
+            return c + 1 + int(prompt)
+        raise ValueError(task)
+
 
 def init_adapter(key: jax.Array, backbone_cfg: ArchConfig,
                  adapter_cfg: EOAdapterConfig) -> Params:

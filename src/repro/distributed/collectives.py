@@ -16,12 +16,14 @@ from typing import Any, List
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import compat
+
 Params = Any
 
 
 def reduce_scatter_grads(grads: Params, axis: str) -> Params:
     """psum_scatter each leaf over ``axis`` (leading dim must divide)."""
-    size = jax.lax.axis_size(axis)
+    size = compat.axis_size(axis)
 
     def one(g):
         if g.ndim == 0 or g.shape[0] % size != 0:

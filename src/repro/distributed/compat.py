@@ -1,0 +1,68 @@
+"""jax version-compatibility shims for the distribution layer.
+
+The sharding/pipeline code targets the modern jax API (``jax.set_mesh``,
+``jax.shard_map`` with ``check_vma``, bare ``PartitionSpec`` trees passed to
+``jax.jit``); this container pins jax 0.4.37, where those spellings don't
+exist yet (``jax.experimental.shard_map`` with ``check_rep``; ``jit`` only
+accepts ``Sharding`` objects).  Everything version-dependent funnels through
+here so the call sites read like current jax and keep working when the pin
+moves.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def set_mesh(mesh: Mesh):
+    """``jax.set_mesh(mesh)`` where available; otherwise the legacy mesh
+    context manager (sufficient for 0.4.x, where sharding trees are passed
+    explicitly as ``NamedSharding`` — see :func:`shardings`)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shardings(mesh: Mesh, tree: Any) -> Any:
+    """Resolve a ``PartitionSpec`` tree against ``mesh``.
+
+    Modern jax resolves bare specs in ``jit`` via the ambient mesh, so the
+    tree passes through; 0.4.x requires concrete ``NamedSharding`` leaves.
+    ``None`` leaves (unconstrained) survive either way."""
+    if hasattr(jax, "set_mesh"):
+        return tree
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, PartitionSpec)
+        else s,
+        tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def axis_size(axis: str) -> int:
+    """``jax.lax.axis_size`` where it exists; the 0.4.x spelling otherwise.
+    Call only inside a collective context (shard_map/pmap body)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalise ``Compiled.cost_analysis()`` to a flat dict (0.4.x returned
+    a one-element list of dicts, one per executable)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` (check_vma) or the 0.4.x experimental spelling
+    (check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed import compat
+
 
 def pipeline_apply(stage_fn: Callable, stage_params, x_micro: jax.Array,
                    mesh: Mesh, axis: str = "model") -> jax.Array:
@@ -70,9 +72,8 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_micro: jax.Array,
         return last
 
     spec_p = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(per_stage, mesh=mesh,
-                       in_specs=(spec_p, P()), out_specs=P(),
-                       check_vma=False)
+    fn = compat.shard_map(per_stage, mesh=mesh,
+                          in_specs=(spec_p, P()), out_specs=P())
     return fn(stage_params, x_micro)
 
 

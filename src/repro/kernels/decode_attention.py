@@ -8,7 +8,12 @@ what lets the sequence axis also be sharded across devices for ``long_500k``
 wrapper in ``ops.py`` when run under shard_map).
 
 ``cache_len`` (#valid slots) arrives via scalar prefetch so block masks can
-be computed without touching HBM.
+be computed without touching HBM.  It is a **per-sequence** ``(B,)`` vector:
+continuous-batching slot tables hold sequences admitted at different times,
+so each batch row sits at its own cache position and the kernel skips KV
+blocks row-by-row (rows with short caches read O(cache_len) blocks, not
+O(S)).  A scalar length broadcasts — batch-uniform decode is the special
+case.  Rows with ``cache_len == 0`` attend to nothing and output zeros.
 """
 from __future__ import annotations
 
@@ -26,8 +31,9 @@ NEG_INF = -1e30
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
                    l_ref, *, scale: float, window: int,
                    softcap: Optional[float], kv_blk: int, n_kv: int):
+    ib = pl.program_id(0)
     ikv = pl.program_id(2)
-    cache_len = len_ref[0]
+    cache_len = len_ref[ib]
 
     @pl.when(ikv == 0)
     def _init():
@@ -75,8 +81,8 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             scale: Optional[float] = None,
                             kv_blk: int = 256,
                             interpret: bool = False) -> jax.Array:
-    """q: (B, KH, group, hd); k, v: (B, KH, S, hd); cache_len: () int32
-    → (B, KH, group, hd)."""
+    """q: (B, KH, group, hd); k, v: (B, KH, S, hd); cache_len: () or (B,)
+    int32 (per-sequence valid-slot counts) → (B, KH, group, hd)."""
     b, kh, group, hd = q.shape
     s = k.shape[2]
     scale = scale if scale is not None else hd ** -0.5
@@ -105,7 +111,7 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
     )
 
-    cache_len = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

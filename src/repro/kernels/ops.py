@@ -101,16 +101,25 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      softcap: Optional[float] = None,
                      scale: Optional[float] = None,
                      impl: Impl = None) -> jax.Array:
-    """q: (B, H, hd); k, v: (B, S, K, hd); cache_len: () int32 → (B, H, hd)."""
+    """q: (B, H, hd); k, v: (B, S, K, hd); cache_len: () or (B,) int32
+    (per-sequence valid-slot counts — ragged slot-table decode) → (B, H, hd)."""
     kind, interp = _resolve(impl)
     s = k.shape[1]
+    cache_len = jnp.asarray(cache_len, jnp.int32)
     if window > 0 and s > window:
         # static-size band slice around the current position: windowed decode
         # touches O(window) cache instead of O(S) — same trick the Pallas
         # kernel plays with block skipping, here at the HLO level.
         start = jnp.clip(cache_len - window, 0, s - window)
-        k = jax.lax.dynamic_slice_in_dim(k, start, window, axis=1)
-        v = jax.lax.dynamic_slice_in_dim(v, start, window, axis=1)
+        if start.ndim == 0:
+            k = jax.lax.dynamic_slice_in_dim(k, start, window, axis=1)
+            v = jax.lax.dynamic_slice_in_dim(v, start, window, axis=1)
+        else:
+            # ragged lengths: each row slices its own band — a static-shape
+            # (B, window) gather instead of B dynamic slices.
+            rows = start[:, None] + jnp.arange(window)[None, :]
+            k = jnp.take_along_axis(k, rows[:, :, None, None], axis=1)
+            v = jnp.take_along_axis(v, rows[:, :, None, None], axis=1)
         cache_len = cache_len - start
     if kind in ("ref", "flash_structured"):
         with jax.named_scope("KERNELREGION_decode"):

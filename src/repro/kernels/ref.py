@@ -317,7 +317,13 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      softcap: Optional[float] = None,
                      scale: Optional[float] = None) -> jax.Array:
     """q: (B, H, hd); k, v: (B, S, K, hd); cache_len: () or (B,) int32
-    (number of valid cache slots incl. the current token) → (B, H, hd)."""
+    (number of valid cache slots incl. the current token) → (B, H, hd).
+
+    Masked softmax with an explicit zero for masked columns: rows with
+    ``cache_len == 0`` attend to nothing and output zeros, matching the
+    Pallas kernel's finalize (which divides an all-zero accumulator by a
+    clamped denominator).  For rows with at least one valid column this is
+    numerically identical to ``softmax`` over the NEG_INF-masked scores."""
     b, h, hd = q.shape
     s, kh = k.shape[1], k.shape[2]
     group = h // kh
@@ -331,8 +337,11 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     valid = pos < cache_len[:, None]
     if window > 0:
         valid &= pos > (cache_len[:, None] - 1 - window)
-    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
-    p = jax.nn.softmax(scores, axis=-1)
+    vmask = valid[:, None, None]
+    scores = jnp.where(vmask, scores, NEG_INF)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m) * vmask
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
     o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
     return o.reshape(b, h, hd).astype(q.dtype)
 

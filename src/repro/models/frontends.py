@@ -87,7 +87,11 @@ def embed_inputs(p: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array]
 
 def embed_decode(p: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array],
                  index: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """One-token embedding for decode. index: () int32 absolute cache slot."""
+    """One-token embedding for decode.
+
+    ``index``: () or (B,) int32 absolute cache slot — a vector gives each
+    batch row its own RoPE position (ragged slot-table decode where
+    sequences were admitted at different times)."""
     if cfg.frontend == "audio":
         codes = inputs["codes"]                        # (B, 1, K)
         b = codes.shape[0]
@@ -98,12 +102,15 @@ def embed_decode(p: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array],
         tokens = inputs["tokens"]                      # (B, 1)
         b = tokens.shape[0]
         x = jnp.take(p["tok"], tokens, axis=0)
+    index = jnp.asarray(index)
     if cfg.frontend == "vision" and cfg.use_mrope:
         side = max(int(math.isqrt(max(cfg.num_patches, 1))), 1)
         t = side + (index - cfg.num_patches)
+        t = t[None, :, None] if t.ndim == 1 else t
         positions = jnp.broadcast_to(t, (3, b, 1))
     else:
-        positions = jnp.broadcast_to(index, (b, 1))
+        per_row = index[:, None] if index.ndim == 1 else index
+        positions = jnp.broadcast_to(per_row, (b, 1))
     return x, positions
 
 

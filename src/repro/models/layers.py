@@ -139,9 +139,16 @@ def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
             }
     else:  # decode: s == 1
         assert cache is not None and cache_index is not None
-        idx = cache_index
-        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        idx = jnp.asarray(cache_index)
+        if idx.ndim == 0:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        else:
+            # ragged slot-table decode: each batch row writes its own cache
+            # position (one scatter, no per-row dynamic slices)
+            rows = jnp.arange(b)
+            ck = cache["k"].at[rows, idx].set(k[:, 0])
+            cv = cache["v"].at[rows, idx].set(v[:, 0])
         new_cache = {"k": ck, "v": cv}
         o = ops.decode_attention(q[:, 0], ck, cv, idx + 1, window=window,
                                  softcap=cfg.attn_softcap)

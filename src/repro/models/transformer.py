@@ -274,7 +274,10 @@ def prefill(params: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array],
 def decode_step(params: Params, cfg: ArchConfig, cache: Tuple,
                 inputs: Dict[str, jax.Array], index: jax.Array
                 ) -> Tuple[jax.Array, Tuple]:
-    """One decode step at cache slot ``index`` (() int32).
+    """One decode step at cache slot ``index`` — () int32 for batch-uniform
+    decode, or (B,) int32 for ragged slot-table decode where every batch row
+    sits at its own cache position (per-row RoPE, KV scatter and attention
+    mask; the whole slot table advances in ONE call).
 
     Returns (logits (B, V), new_cache)."""
     x, positions = frontends.embed_decode(params["embed"], cfg, inputs, index)

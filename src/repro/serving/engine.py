@@ -2,14 +2,15 @@
 ``EngineCore`` slot table.
 
 The engine owns a fixed number of batch slots.  Arriving requests prefill
-into free slots; every ``EngineCore.step()`` advances all active slots by
-one decode token with per-slot cache positions; finished slots free
-immediately and are refilled from the pending queue **mid-stream** — the
-batch never drains just to admit the next request (continuous batching à la
-vLLM/Orca, collapsed to the fixed-slot variant that pjit likes: stable
-shapes, one compile, no recompilation).  On the production mesh the same
-step functions run under ``jax.jit`` with the decode-cell shardings from the
-dry-run.
+into free slots in ONE batched ``admit_many`` call per refill; every
+``EngineCore.step()`` advances all active slots by one decode token through
+one batched ragged decode call with per-slot cache positions; finished
+slots free immediately and are refilled from the pending queue
+**mid-stream** — the batch never drains just to admit the next request
+(continuous batching à la vLLM/Orca, collapsed to the fixed-slot variant
+that pjit likes: stable shapes, one compile, no recompilation).  On the
+production mesh the same step functions run under ``jax.jit`` with the
+decode-cell shardings from the dry-run.
 """
 from __future__ import annotations
 
@@ -32,6 +33,7 @@ class EngineConfig:
     slots: int = 8
     max_new_tokens: int = 64
     answer_vocab: int = 64
+    step_impl: str = "batched"          # "batched" | "vmap" (legacy oracle)
 
 
 class InferenceEngine:
@@ -49,7 +51,16 @@ class InferenceEngine:
         self.core = EngineCore(
             TierModel(params, cfg), adapter_cfg,
             EngineCoreConfig(slots=self.ec.slots,
-                             answer_vocab=self.ec.answer_vocab))
+                             answer_vocab=self.ec.answer_vocab,
+                             step_impl=self.ec.step_impl))
+
+    def warmup(self) -> None:
+        """Pre-compile the slot path (decode step + every admission bucket)
+        so no compile stalls the serving loop — call before the first
+        ``serve`` when latency matters (e.g. ahead of a contact window).
+        ``serve`` itself stays lazy: short-lived engines only pay for the
+        bucket shapes their traffic actually hits."""
+        self.core.warmup()
 
     # -- batch-level API ---------------------------------------------------
     def generate_batch(self, task: str, images: jnp.ndarray,
@@ -71,8 +82,9 @@ class InferenceEngine:
         queue = deque(requests)
         core = self.core
         while queue or core.active_count() > 0:
-            while queue and core.free_slots():
-                core.admit(queue.popleft())
+            n = min(len(queue), len(core.free_slots()))
+            if n:
+                core.admit_many([queue.popleft() for _ in range(n)])
             for req, toks in core.step():
                 pred = toks[0] if req.task in ("vqa", "cls") else toks
                 out.append(Response(

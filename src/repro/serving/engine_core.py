@@ -9,17 +9,25 @@ cascade and owns every compiled entry point the serving layer needs:
   the per-request server.  Compilation is keyed only by (batch, chunk
   length), so repeated traffic at the same shapes never recompiles.
 
-- **slot path** (``admit`` / ``step`` / ``release``): a fixed-capacity slot
-  table for true continuous batching.  Every slot holds one in-flight
-  request's KV cache slice, next-token logits and decode position; a single
-  jitted step function advances *all* slots one token per call with
-  **per-slot** cache indices (slots prefilled at different times sit at
-  different positions).  Finished slots free immediately and are refilled
-  from the pending queue mid-stream — the batch never drains to refill,
-  which is the vLLM/Orca property the old queue-chunking engine only
-  claimed.  All slot-path shapes are fixed at construction (slot count,
-  cache capacity = regions + prompt + longest answer), so the decode step
-  compiles exactly once.
+- **slot path** (``admit`` / ``admit_many`` / ``step``): a fixed-capacity
+  slot table for true continuous batching.  Every slot holds one in-flight
+  request's KV cache slice, next-token logits and decode position; ``step``
+  advances *all* slots one token through **one** batched ``T.decode_step``
+  call over the whole table with a ``(B,)`` per-slot index vector — per-row
+  RoPE positions, per-row KV scatter and per-row ragged attention masks all
+  the way down to the flash-decoding kernel (slots prefilled at different
+  times sit at different positions).  ``admit_many`` prefills up to K
+  pending requests in one fixed-shape batched call (K padded to a power of
+  two, ≤ slot count) and scatters them into free slots in one jitted
+  update, so refill costs O(1) compile-units instead of one launch per
+  request.  Finished slots free immediately and are refilled from the
+  pending queue mid-stream — the batch never drains to refill, which is
+  the vLLM/Orca property the old queue-chunking engine only claimed.  All
+  slot-path shapes are fixed at construction (slot count, cache capacity =
+  regions + prompt + longest answer), so the decode step compiles exactly
+  once.  The pre-batching per-slot path (``jax.vmap`` of a batch-1 step
+  over the stacked table) is kept behind ``EngineCoreConfig(step_impl=
+  "vmap")`` as the equivalence oracle and the benchmark baseline.
 """
 from __future__ import annotations
 
@@ -42,6 +50,7 @@ class EngineCoreConfig:
     slots: int = 8
     answer_vocab: int = 64
     max_answer_len: Optional[int] = None   # default: N_r (longest task = det)
+    step_impl: str = "batched"             # "batched" | "vmap" (legacy oracle)
 
 
 @dataclasses.dataclass
@@ -109,8 +118,23 @@ class EngineCore:
             lambda toks: EO.token_features(params, toks))
 
         # -- slot-path compiled functions (shapes fixed at construction) ----
+        def _slot_step(slot_logits, slot_cache, slot_index, active,
+                       *, answer_vocab):
+            """All-slot decode step: ONE batched ``T.decode_step`` over the
+            whole slot table with a (slots,) ragged index vector.  Per-row
+            RoPE / KV scatter / attention masks happen inside the model;
+            inactive slots compute garbage that the next admission's full
+            cache-row overwrite discards (their index never advances)."""
+            a_logits = slot_logits[:, :answer_vocab]
+            toks = jnp.argmax(a_logits, axis=-1).astype(jnp.int32)
+            new_logits, new_cache = T.decode_step(
+                params["backbone"], cfg, slot_cache, {"tokens": toks[:, None]},
+                slot_index)
+            new_index = jnp.where(active, slot_index + 1, slot_index)
+            return toks, new_logits, new_cache, new_index
+
         def _one_step(tok, cache_s, idx):
-            """Advance ONE slot by one token (vmapped below).
+            """Advance ONE slot by one token (legacy vmap oracle).
 
             ``cache_s``: this slot's cache slice (batch axis stripped)."""
             c1 = jax.tree.map(lambda x: x[:, None], cache_s)
@@ -118,9 +142,11 @@ class EngineCore:
                                           {"tokens": tok[None, None]}, idx)
             return logits[0], jax.tree.map(lambda x: x[:, 0], new_c)
 
-        def _slot_step(slot_logits, slot_cache, slot_index, active,
-                       *, answer_vocab):
-            """All-slot decode step with per-slot cache indices."""
+        def _slot_step_vmap(slot_logits, slot_cache, slot_index, active,
+                            *, answer_vocab):
+            """Pre-batching per-slot step: vmap of a batch-1 decode over the
+            stacked table.  Kept as the token-for-token equivalence oracle
+            for tests and the before/after benchmark baseline."""
             a_logits = slot_logits[:, :answer_vocab]
             toks = jnp.argmax(a_logits, axis=-1).astype(jnp.int32)
             new_logits, new_cache = jax.vmap(
@@ -129,27 +155,47 @@ class EngineCore:
             new_index = jnp.where(active, slot_index + 1, slot_index)
             return toks, new_logits, new_cache, new_index
 
-        def _slot_scatter(slot_cache, slot_logits, slot_index,
-                          cache, logits, s, idx):
-            """Write one freshly-prefilled request into slot ``s``."""
-            sc = jax.tree.map(
-                lambda full, new: jax.lax.dynamic_update_index_in_dim(
-                    full, new[:, 0], s, 1),
-                slot_cache, cache)
-            sl = jax.lax.dynamic_update_index_in_dim(slot_logits, logits[0],
-                                                     s, 0)
-            si = jax.lax.dynamic_update_index_in_dim(
-                slot_index, idx.astype(slot_index.dtype), s, 0)
+        n_slots = self.cfg.slots
+
+        def _slot_scatter_many(slot_cache, slot_logits, slot_index,
+                               cache, logits, slots, idx):
+            """Write K freshly-prefilled requests into slots ``slots`` in one
+            jitted update.  Formulated as gather + select rather than
+            scatter (XLA:CPU lowers scatters an order of magnitude slower
+            than the equivalent gather): each slot row looks up which
+            prefill row targets it, if any.  Padding rows carry an
+            out-of-range slot id and simply never match."""
+            sel = slots[None, :] == jnp.arange(n_slots)[:, None]  # (S, K)
+            hit = sel.any(axis=1)                                 # (S,)
+            src = jnp.argmax(sel, axis=1)                         # (S,)
+
+            def put(full, new):
+                # full: (n_super, S, ...); new: (n_super, K, ...)
+                gathered = jnp.take(new, src, axis=1)
+                m = hit.reshape((1, -1) + (1,) * (full.ndim - 2))
+                return jnp.where(m, gathered, full)
+
+            sc = jax.tree.map(put, slot_cache, cache)
+            sl = jnp.where(hit[:, None], jnp.take(logits, src, axis=0),
+                           slot_logits)
+            si = jnp.where(hit, idx.astype(slot_index.dtype), slot_index)
             return sc, sl, si
 
-        self._slot_step_j = jax.jit(_slot_step,
-                                    static_argnames=("answer_vocab",))
-        self._slot_scatter_j = jax.jit(_slot_scatter)
+        if self.cfg.step_impl not in ("batched", "vmap"):
+            raise ValueError(f"unknown step_impl {self.cfg.step_impl!r}")
+        self._slot_step_j = jax.jit(
+            _slot_step if self.cfg.step_impl == "batched" else _slot_step_vmap,
+            static_argnames=("answer_vocab",))
+        self._slot_scatter_many_j = jax.jit(_slot_scatter_many)
 
         self._slots: List[_Slot] = [_Slot() for _ in range(self.cfg.slots)]
         self._slot_cache = None
         self._slot_logits = None
         self._slot_index = None
+        # active mask lives on device, derived from _slots (the single
+        # source of truth) and only re-uploaded when admission or release
+        # actually changes it — not rebuilt host→device every step
+        self._active_dev = None
         self._step_no = 0
         self.stats: Dict[str, Any] = {
             "admitted": 0, "finished": 0, "mid_stream_refills": 0,
@@ -205,36 +251,98 @@ class EngineCore:
     def active_count(self) -> int:
         return sum(s.active for s in self._slots)
 
+    def warmup(self) -> None:
+        """Pre-compile every slot-path executable: the decode step and the
+        prefill + scatter pair for every power-of-two admission bucket.
+
+        Traffic decides when each bucket size first occurs, so without this
+        a compile can land mid-serve — exactly the stall the fixed-shape
+        slot design exists to avoid (a satellite pays it inside a contact
+        window).  Idempotent; slot state is untouched (warmup scatters
+        target out-of-range slot ids, which the scatter drops)."""
+        self._ensure_slot_tables()
+        shape = (self.ac.image_size, self.ac.image_size, self.ac.channels)
+        sizes, b = set(), 1
+        while b <= self.cfg.slots:
+            sizes.add(b)
+            b *= 2
+        sizes.add(self.cfg.slots)
+        for k in sorted(sizes):
+            images = jnp.zeros((k,) + shape, jnp.float32)
+            ptok = jnp.zeros((k,), jnp.int32)
+            logits, cache, idx = self._prefill_j(images, ptok,
+                                                 max_len=self._slot_max_len)
+            drop = jnp.full((k,), self.cfg.slots, jnp.int32)
+            self._slot_scatter_many_j(self._slot_cache, self._slot_logits,
+                                      self._slot_index, cache, logits, drop,
+                                      idx)
+        self._slot_step_j(self._slot_logits, self._slot_cache,
+                          self._slot_index, jnp.zeros((self.cfg.slots,), bool),
+                          answer_vocab=self.cfg.answer_vocab)
+
     def admit(self, request: Request) -> int:
         """Prefill ``request`` into a free slot; returns the slot id."""
+        return self.admit_many([request])[0]
+
+    @staticmethod
+    def _admit_pad(k: int, cap: int) -> int:
+        """Fixed-shape admission buckets: next power of two, capped at the
+        slot count — at most log2(slots)+1 prefill shapes ever compile."""
+        p = 1
+        while p < k:
+            p *= 2
+        return min(p, cap)
+
+    def admit_many(self, requests: List[Request]) -> List[int]:
+        """Prefill up to ``slots`` pending requests in ONE batched call and
+        scatter them into free slots in one jitted update.
+
+        The prefill batch is padded to a power-of-two bucket (≤ slot count)
+        so refilling K slots costs one fixed-shape launch, not K; padding
+        rows replicate the last request and scatter to an out-of-range slot
+        id, which the scatter drops.  Returns the slot id per request."""
+        if not requests:
+            return []
         free = self.free_slots()
-        if not free:
+        if len(requests) > len(free):
             raise RuntimeError("no free slot")
         self._ensure_slot_tables()
-        s = free[0]
-        images = jnp.asarray(np.asarray(request.image)[None])
-        prompts = jnp.asarray(np.array([request.prompt], np.int32))
-        ptok = self.ac.prompt_token(request.task, prompts)
+        k = len(requests)
+        kpad = self._admit_pad(k, self.cfg.slots)
+        assert kpad >= k, "more requests than slots"
+        target = free[:k] + [self.cfg.slots] * (kpad - k)   # pad ids: dropped
+        pad = [requests[-1]] * (kpad - k)
+        images = jnp.asarray(np.stack(
+            [np.asarray(r.image) for r in requests] +
+            [np.asarray(r.image) for r in pad]))
+        # prompt ids computed host-side (scalar mirror of prompt_token):
+        # no device roundtrip per distinct task on the admission hot path
+        ptok = np.empty((kpad,), np.int32)
+        for i, r in enumerate(requests):
+            ptok[i] = self.ac.prompt_id(r.task, r.prompt)
+        ptok[k:] = ptok[k - 1]
         # fixed max_len: every request uses the same cache capacity, so the
-        # prefill and decode step never see a new shape
-        logits, cache, idx = self._prefill_j(images, ptok,
+        # prefill and decode step never see a new sequence length
+        logits, cache, idx = self._prefill_j(images, jnp.asarray(ptok),
                                              max_len=self._slot_max_len)
         self._slot_cache, self._slot_logits, self._slot_index = \
-            self._slot_scatter_j(self._slot_cache, self._slot_logits,
-                                 self._slot_index, cache, logits,
-                                 jnp.asarray(s, jnp.int32), idx)
-        others_active = self.active_count()
-        self._slots[s] = _Slot(request=request,
-                               l_ans=self.ac.answer_len(request.task),
-                               tokens=[], active=True)
-        self.stats["admitted"] += 1
-        if self._step_no > 0 and others_active > 0:
-            self.stats["mid_stream_refills"] += 1
+            self._slot_scatter_many_j(self._slot_cache, self._slot_logits,
+                                      self._slot_index, cache, logits,
+                                      jnp.asarray(target, jnp.int32), idx)
         log = self.stats["occupancy_log"]
-        log.append((self._step_no, self.active_count()))
+        for s, request in zip(target, requests):
+            others_active = self.active_count()
+            self._slots[s] = _Slot(request=request,
+                                   l_ans=self.ac.answer_len(request.task),
+                                   tokens=[], active=True)
+            self.stats["admitted"] += 1
+            if self._step_no > 0 and others_active > 0:
+                self.stats["mid_stream_refills"] += 1
+            log.append((self._step_no, self.active_count()))
+        self._active_dev = None
         if len(log) > self._occupancy_cap:
             del log[:self._occupancy_cap // 2]
-        return s
+        return target[:k]
 
     def step(self) -> List[Tuple[Request, np.ndarray]]:
         """Advance every active slot one token; return finished requests.
@@ -243,10 +351,11 @@ class EngineCore:
         pending queue before the next ``step`` (continuous batching)."""
         if self.active_count() == 0:
             return []
-        active = jnp.asarray([s.active for s in self._slots])
+        if self._active_dev is None:
+            self._active_dev = jnp.asarray([s.active for s in self._slots])
         toks, self._slot_logits, self._slot_cache, self._slot_index = \
             self._slot_step_j(self._slot_logits, self._slot_cache,
-                              self._slot_index, active,
+                              self._slot_index, self._active_dev,
                               answer_vocab=self.cfg.answer_vocab)
         toks_np = np.asarray(toks)
         self._step_no += 1
@@ -259,5 +368,6 @@ class EngineCore:
                 finished.append((slot.request,
                                  np.asarray(slot.tokens, np.int32)))
                 self._slots[i] = _Slot()
+                self._active_dev = None
                 self.stats["finished"] += 1
         return finished

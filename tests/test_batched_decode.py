@@ -1,0 +1,217 @@
+"""Batched ragged decode: the slot table advances in ONE decode call.
+
+These tests pin the tentpole invariants of the batched serving path without
+needing trained weights (throughput/equivalence don't depend on training, so
+no ``tiny_bundle`` / proxy-training dependency — they run in the fast set):
+
+- model level: ``T.decode_step`` with a (B,) index vector is exactly B
+  independent per-row decodes (the old vmap-of-batch-1 construction),
+- engine level: the batched ``_slot_step`` + ``admit_many`` engine serves a
+  mixed-length queue token-for-token identically to the legacy per-slot
+  vmap engine, and admission really is one fixed-shape batched call,
+- the active mask is a cached device array, re-uploaded only when admission
+  or release changes it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.spaceverse_pair import proxy_pair
+from repro.core import eo_adapter as EO
+from repro.data import synthetic
+from repro.models import transformer as T
+from repro.serving import EngineConfig, InferenceEngine, Request
+
+
+@pytest.fixture(scope="module")
+def sat_system():
+    """Init-only satellite tier + synthetic datasets (no training)."""
+    sat_cfg, _ = proxy_pair("small")
+    ac = EO.EOAdapterConfig()
+    params = EO.init_adapter(jax.random.PRNGKey(0), sat_cfg, ac)
+    eo_cfg = synthetic.EOTaskConfig(image_size=ac.image_size, grid=ac.grid,
+                                    num_classes=ac.num_classes)
+    data = synthetic.make_dataset("cls", 16, seed=0, cfg=eo_cfg)
+    return params, sat_cfg, ac, data
+
+
+# ---------------------------------------------------------------------------
+# model level: vector cache indices
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "hymba-1.5b"])
+def test_decode_step_vector_index_matches_vmapped_rows(arch):
+    """(B,) index decode == vmap of batch-1 scalar-index decodes, for both a
+    pure-attention stack and the hybrid (attention ‖ mamba) stack."""
+    cfg = configs.get_config(arch, reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    b, max_len = 4, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, 8), 0,
+                              cfg.vocab_size)
+    logits, cache, _ = T.prefill(params, cfg, {"tokens": toks}, max_len)
+    vec_idx = jnp.asarray([8, 12, 9, 8], jnp.int32)   # ragged positions
+    nxt = jnp.argmax(logits[:, :64], -1).astype(jnp.int32)
+    lg_vec, cache_vec = T.decode_step(params, cfg, cache,
+                                      {"tokens": nxt[:, None]}, vec_idx)
+
+    def one(tok, cache_s, i):
+        c1 = jax.tree.map(lambda x: x[:, None], cache_s)
+        lg, nc = T.decode_step(params, cfg, c1, {"tokens": tok[None, None]},
+                               i)
+        return lg[0], jax.tree.map(lambda x: x[:, 0], nc)
+
+    lg_ref, cache_ref = jax.vmap(one, in_axes=(0, 1, 0),
+                                 out_axes=(0, 1))(nxt, cache, vec_idx)
+    np.testing.assert_allclose(np.asarray(lg_vec), np.asarray(lg_ref),
+                               rtol=1e-5, atol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(cache_vec), jax.tree.leaves(cache_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_embed_decode_vector_index_positions():
+    from repro.models import frontends
+    cfg = configs.get_config("gemma3-1b", reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.zeros((3, 1), jnp.int32)
+    idx = jnp.asarray([5, 9, 2], jnp.int32)
+    _, pos = frontends.embed_decode(params["embed"], cfg, {"tokens": toks},
+                                    idx)
+    np.testing.assert_array_equal(np.asarray(pos), [[5], [9], [2]])
+    _, pos_s = frontends.embed_decode(params["embed"], cfg,
+                                      {"tokens": toks}, jnp.int32(7))
+    np.testing.assert_array_equal(np.asarray(pos_s), [[7], [7], [7]])
+
+
+# ---------------------------------------------------------------------------
+# engine level: batched slot step + batched admission
+# ---------------------------------------------------------------------------
+
+def _mixed_queue(data, ac, n_vqa=5):
+    reqs = [Request(task="det", image=data["images"][0], prompt=0)]
+    reqs += [Request(task="vqa", image=data["images"][i],
+                     prompt=int(data["prompts"][i]) % 2)
+             for i in range(n_vqa)]
+    return reqs
+
+
+def _serve_tokens(params, cfg, ac, data, impl, slots=2):
+    eng = InferenceEngine(params, cfg, ac,
+                          EngineConfig(slots=slots, answer_vocab=9,
+                                       step_impl=impl))
+    resps = eng.serve(_mixed_queue(data, ac))
+    toks = sorted((np.asarray(r.tokens).tolist() for r in resps),
+                  key=lambda t: (len(t), t))
+    return toks, eng.core
+
+
+def test_batched_slot_step_matches_vmap_token_for_token(sat_system):
+    """The tentpole equivalence: one batched ragged decode over the slot
+    table reproduces the per-slot vmap engine token-for-token on mixed
+    1-token / N_r-token traffic with mid-stream refills."""
+    params, cfg, ac, data = sat_system
+    toks_b, core_b = _serve_tokens(params, cfg, ac, data, "batched")
+    toks_v, core_v = _serve_tokens(params, cfg, ac, data, "vmap")
+    assert toks_b == toks_v
+    assert core_b.stats["finished"] == core_v.stats["finished"] == 6
+    assert core_b.stats["mid_stream_refills"] >= 4
+
+
+def test_admit_many_is_one_batched_prefill(sat_system):
+    """K requests admit in ONE fixed-shape prefill + scatter, land in K
+    distinct free slots, and then decode exactly like K sequential admits."""
+    params, cfg, ac, data = sat_system
+    from repro.core.cascade import TierModel
+    from repro.serving.engine_core import EngineCore, EngineCoreConfig
+
+    core = EngineCore(TierModel(params, cfg), ac,
+                      EngineCoreConfig(slots=4, answer_vocab=9))
+    reqs = [Request(task="vqa", image=data["images"][i],
+                    prompt=int(data["prompts"][i]) % 2) for i in range(3)]
+    calls = {"n": 0}
+    orig = core._prefill_j
+
+    def counting_prefill(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    core._prefill_j = counting_prefill
+    slot_ids = core.admit_many(reqs)
+    assert calls["n"] == 1                      # ONE prefill for all three
+    assert sorted(slot_ids) == slot_ids and len(set(slot_ids)) == 3
+    assert core.active_count() == 3
+    out = {}
+    while core.active_count():
+        for req, toks in core.step():
+            out[req.request_id] = toks.tolist()
+
+    seq = EngineCore(TierModel(params, cfg), ac,
+                     EngineCoreConfig(slots=4, answer_vocab=9))
+    reqs2 = [Request(task="vqa", image=data["images"][i],
+                     prompt=int(data["prompts"][i]) % 2) for i in range(3)]
+    for r in reqs2:
+        seq.admit(r)
+    out2 = {}
+    while seq.active_count():
+        for req, toks in seq.step():
+            out2[req.request_id] = toks.tolist()
+    assert sorted(out.values()) == sorted(out2.values())
+
+
+def test_admit_many_overflow_raises(sat_system):
+    params, cfg, ac, data = sat_system
+    from repro.core.cascade import TierModel
+    from repro.serving.engine_core import EngineCore, EngineCoreConfig
+    core = EngineCore(TierModel(params, cfg), ac,
+                      EngineCoreConfig(slots=2, answer_vocab=9))
+    reqs = [Request(task="vqa", image=data["images"][i], prompt=0)
+            for i in range(3)]
+    with pytest.raises(RuntimeError):
+        core.admit_many(reqs)
+    assert core.admit_many([]) == []
+
+
+def test_active_mask_is_cached_on_device(sat_system):
+    """The (slots,) active mask uploads once per admission/release, not once
+    per step."""
+    params, cfg, ac, data = sat_system
+    from repro.core.cascade import TierModel
+    from repro.serving.engine_core import EngineCore, EngineCoreConfig
+    core = EngineCore(TierModel(params, cfg), ac,
+                      EngineCoreConfig(slots=2, answer_vocab=9))
+    core.admit(Request(task="det", image=data["images"][0], prompt=0))
+    core.step()
+    dev = core._active_dev
+    assert dev is not None
+    core.step()
+    assert core._active_dev is dev              # same buffer: no re-upload
+    core.admit(Request(task="vqa", image=data["images"][1], prompt=0))
+    assert core._active_dev is None             # invalidated by admission
+
+
+def test_prompt_id_matches_prompt_token():
+    """The host-side scalar prompt id (admission hot path) and the jittable
+    prompt_token must agree on the whole vocabulary layout."""
+    ac = EO.EOAdapterConfig()
+    for task in ("vqa", "cls", "det"):
+        pr = jnp.arange(ac.num_classes, dtype=jnp.int32)
+        want = np.asarray(ac.prompt_token(task, pr))
+        got = np.array([ac.prompt_id(task, int(p))
+                        for p in range(ac.num_classes)])
+        np.testing.assert_array_equal(want, got)
+
+
+def test_engine_warmup_precompiles_and_is_inert(sat_system):
+    """warmup() compiles every admission bucket without touching state."""
+    params, cfg, ac, data = sat_system
+    from repro.core.cascade import TierModel
+    from repro.serving.engine_core import EngineCore, EngineCoreConfig
+    core = EngineCore(TierModel(params, cfg), ac,
+                      EngineCoreConfig(slots=4, answer_vocab=9))
+    core.warmup()
+    assert core.active_count() == 0
+    # serving after warmup behaves identically
+    sid = core.admit(Request(task="vqa", image=data["images"][0], prompt=0))
+    assert sid == 0 and core.active_count() == 1

@@ -125,6 +125,67 @@ def test_decode_attention_sweep(s, h, kh, hd, clen, window):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("s,h,kh,hd,window", [
+    (256, 8, 2, 32, 0),          # plain ragged decode
+    (512, 4, 1, 64, 128),        # ragged + sliding window (band slice path)
+    (256, 4, 4, 16, 0),          # MHA (group = 1)
+    (128, 4, 2, 32, 96),         # window wider than some rows' caches
+])
+def test_decode_attention_ragged_lengths(s, h, kh, hd, window):
+    """Per-sequence (B,) cache lengths — the continuous-batching slot-table
+    regime: every row sits at its own position, including the empty (0),
+    singleton (1) and completely-full (S) extremes."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    clen = jnp.asarray([0, 1, 37, s // 2, s], jnp.int32)
+    b = clen.shape[0]
+    q = _rand(k1, (b, h, hd), jnp.float32)
+    k = _rand(k2, (b, s, kh, hd), jnp.float32)
+    v = _rand(k3, (b, s, kh, hd), jnp.float32)
+    got = ops.decode_attention(q, k, v, clen, window=window,
+                               impl="pallas_interpret")
+    want = ops.decode_attention(q, k, v, clen, window=window, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    # row-0 (empty cache) attends to nothing → exact zeros in both impls
+    assert np.all(np.asarray(got)[0] == 0)
+    assert np.all(np.asarray(want)[0] == 0)
+
+
+def test_decode_attention_ragged_matches_per_row_scalar():
+    """Each row of a ragged batch must equal a batch-1 scalar-length call —
+    the (B,) path is exactly B independent decodes."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    s, h, kh, hd = 256, 4, 2, 32
+    clen = jnp.asarray([3, 100, 256, 57], jnp.int32)
+    q = _rand(k1, (4, h, hd), jnp.float32)
+    k = _rand(k2, (4, s, kh, hd), jnp.float32)
+    v = _rand(k3, (4, s, kh, hd), jnp.float32)
+    for window in (0, 64):
+        batched = ops.decode_attention(q, k, v, clen, window=window,
+                                       impl="pallas_interpret")
+        for i in range(4):
+            one = ops.decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                       clen[i], window=window,
+                                       impl="pallas_interpret")
+            np.testing.assert_allclose(np.asarray(batched[i]),
+                                       np.asarray(one[0]),
+                                       rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_scalar_broadcasts_to_ragged():
+    """A scalar cache_len is the batch-uniform special case of (B,)."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (3, 4, 32), jnp.float32)
+    k = _rand(k2, (3, 128, 2, 32), jnp.float32)
+    v = _rand(k3, (3, 128, 2, 32), jnp.float32)
+    for impl in ("ref", "pallas_interpret"):
+        a = ops.decode_attention(q, k, v, jnp.int32(77), impl=impl)
+        bvec = ops.decode_attention(q, k, v, jnp.full((3,), 77, jnp.int32),
+                                    impl=impl)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bvec),
+                                   rtol=1e-6, atol=1e-6)
+
+
 def test_decode_matches_flash_last_row():
     """Decode at position S-1 must equal the last row of full attention."""
     k1, k2, k3 = jax.random.split(KEY, 3)

@@ -5,6 +5,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import compat
+
 pytestmark = pytest.mark.skipif(
     len(jax.devices()) < 8, reason="needs 8 host devices")
 
@@ -35,7 +37,7 @@ def test_gpipe_matches_sequential():
 
     mesh = _mesh((2, 4), ("data", "model"))
     staged = split_stages(params, 4)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = pipeline_apply(layers_fn, staged, x, mesh, axis="model")
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
@@ -50,9 +52,9 @@ def test_reduce_scatter_gather_roundtrip():
         shards = C.reduce_scatter_grads(grads, "data")
         return C.all_gather_params(shards, grads, "data")
 
-    with jax.set_mesh(mesh):
-        out = jax.shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(),
-                            check_vma=False)(g)
+    with compat.set_mesh(mesh):
+        out = compat.shard_map(f, mesh=mesh, in_specs=(P(),),
+                               out_specs=P())(g)
     # mean over an identical-replica axis is identity
     np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(g["a"]),
                                rtol=1e-6)
@@ -69,9 +71,9 @@ def test_chunked_psum_equals_psum():
     def f(grads):
         return C.chunked_psum(grads, "data", n_buckets=2)
 
-    with jax.set_mesh(mesh):
-        out = jax.shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(),
-                            check_vma=False)(g)
+    with compat.set_mesh(mesh):
+        out = compat.shard_map(f, mesh=mesh, in_specs=(P(),),
+                               out_specs=P())(g)
     for k in g:
         np.testing.assert_allclose(np.asarray(out[k]),
                                    np.asarray(g[k]) * 8, rtol=1e-6)
