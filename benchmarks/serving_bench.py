@@ -7,16 +7,24 @@ implementation:
 
 - ``batched``: one ``T.decode_step`` over the whole slot table per step with
   a (slots,) ragged index vector, refilled through one bucketed
-  ``admit_many`` prefill per step (this PR),
-- ``vmap``:    the pre-PR engine — ``jax.vmap`` of a batch-1 step over the
+  ``admit_many`` prefill per step (PR 2),
+- ``vmap``:    the pre-PR-2 engine — ``jax.vmap`` of a batch-1 step over the
   stacked table (kept in ``EngineCore`` as the baseline oracle) **and** one
   batch-1 prefill + scatter per admitted request.
 
-Metrics (per impl): decode tokens/s, steps/s, admissions/s, plus the
-batched/vmap speedups.  Results land in ``BENCH_serving.json`` so CI can
-smoke the harness and future PRs can diff the numbers.  Model weights are
-randomly initialised — throughput does not depend on training, so the bench
-needs no proxy-training warmup.
+A second workload benchmarks the paged KV cache at **scene fan-out** —
+several queries per captured scene, the paper's dominant traffic shape —
+for ``cache_impl`` paged vs dense: end-to-end tokens/s, prefilled tokens
+(paged prefills the N_r region tokens once per scene + a 1-token prompt
+suffix per request; dense re-prefills the full prefix per request), prefix
+hit rate and amortised KV bytes per slot, with the output token streams
+checked equal.
+
+Metrics land in ``BENCH_serving.json`` so CI can smoke the harness and
+future PRs can diff the numbers; each run folds the previous record into a
+bounded ``history`` list so the perf trajectory across PRs is preserved.
+Model weights are randomly initialised — throughput does not depend on
+training, so the bench needs no proxy-training warmup.
 
 Usage:
     PYTHONPATH=src python benchmarks/serving_bench.py            # full run
@@ -175,6 +183,96 @@ def bench_impl(impl: str, *, slots: int, steps: int, warmup: int,
     }
 
 
+def _fanout_stream(ac: EO.EOAdapterConfig, scenes: int, fanout: int,
+                   seed: int) -> List[Request]:
+    """Scene fan-out: ``fanout`` mixed-task queries over each of ``scenes``
+    captured scenes (1 det + 1 cls + vqa rest), scene-grouped as a capture's
+    query burst arrives."""
+    eo_cfg = synthetic.EOTaskConfig(image_size=ac.image_size, grid=ac.grid,
+                                    num_classes=ac.num_classes)
+    data = synthetic.make_dataset("cls", max(scenes, 2), seed=seed,
+                                  cfg=eo_cfg)
+    reqs = []
+    for s in range(scenes):
+        img = data["images"][s % len(data["images"])]
+        reqs.append(Request(task="det", image=img, prompt=0, scene_id=s))
+        reqs.append(Request(task="cls", image=img, prompt=0, scene_id=s))
+        reqs += [Request(task="vqa", image=img, prompt=q % 2, scene_id=s)
+                 for q in range(max(fanout - 2, 0))]
+    return reqs
+
+
+def bench_fanout(cache_impl: str, *, slots: int, scenes: int, fanout: int,
+                 seed: int) -> Dict[str, object]:
+    sat_cfg, _ = proxy_pair("small")
+    ac = EO.EOAdapterConfig()
+    params = EO.init_adapter(jax.random.PRNGKey(seed), sat_cfg, ac)
+    core = EngineCore(TierModel(params, sat_cfg), ac,
+                      EngineCoreConfig(slots=slots, answer_vocab=9,
+                                       cache_impl=cache_impl))
+    queue = list(reversed(_fanout_stream(ac, scenes, fanout, seed)))
+    n_req = len(queue)
+    core.warmup()
+
+    tokens = 0
+    outputs = {}
+    kv_sample = None
+    t0 = time.perf_counter()
+    while queue or core.active_count() > 0:
+        n = min(len(queue), len(core.free_slots()))
+        if n:
+            core.admit_many([queue.pop() for _ in range(n)])
+        if kv_sample is None and core.active_count() == slots:
+            kv_sample = core.kv_stats()          # footprint at full occupancy
+        for req, toks in core.step():
+            tokens += len(toks)
+            outputs[req.request_id] = toks.tolist()
+    jax.block_until_ready(core._slot_logits)
+    dt = time.perf_counter() - t0
+    kv = kv_sample or core.kv_stats()
+
+    return {
+        "cache_impl": cache_impl,
+        "slots": slots,
+        "scenes": scenes,
+        "fanout": fanout,
+        "requests": n_req,
+        "wall_s": round(dt, 4),
+        "answer_tokens_per_s": round(tokens / dt, 2),
+        "prefill_tokens": core.stats["prefill_tokens"],
+        "prefix_hits": core.stats["prefix_hits"],
+        "prefix_misses": core.stats["prefix_misses"],
+        "prefix_hit_rate": round(
+            core.stats["prefix_hits"]
+            / max(core.stats["prefix_hits"]
+                  + core.stats["prefix_misses"], 1), 4),
+        "kv_bytes_per_slot": kv["kv_bytes_per_slot"],
+        # token streams in request-creation order (ids are monotonic per
+        # run): compared across impls, then dropped from the JSON record
+        "outputs": [outputs[i] for i in sorted(outputs)],
+    }
+
+
+HISTORY_CAP = 12
+
+
+def _fold_history(out_path: str, rec: Dict) -> Dict:
+    """Append the previous record (its own history stripped) to a bounded
+    ``history`` list so the perf trajectory across PRs survives reruns; the
+    top-level summary fields stay exactly as CI smoke expects."""
+    history: List[Dict] = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                prev = json.load(f)
+            history = prev.pop("history", [])
+            history.append(prev)
+        except (OSError, ValueError):
+            pass
+    rec["history"] = history[-HISTORY_CAP:]
+    return rec
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=32)
@@ -184,6 +282,11 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--impl", choices=["batched", "vmap", "both"],
                     default="both")
+    ap.add_argument("--scenes", type=int, default=12,
+                    help="fan-out workload: distinct captured scenes")
+    ap.add_argument("--fanout", type=int, default=8,
+                    help="queries per scene in the fan-out workload")
+    ap.add_argument("--fanout-slots", type=int, default=16)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: prove the harness executes end-to-end")
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -191,6 +294,7 @@ def main(argv=None) -> int:
 
     if args.smoke:
         args.slots, args.steps, args.warmup = 4, 8, 2
+        args.scenes, args.fanout, args.fanout_slots = 2, 3, 4
 
     impls = ["batched", "vmap"] if args.impl == "both" else [args.impl]
     results = {}
@@ -204,21 +308,47 @@ def main(argv=None) -> int:
               f"{r['admissions_per_s']:6.2f} admits/s  "
               f"({r['wall_s']}s wall)", flush=True)
 
+    # -- scene fan-out: paged prefix sharing vs dense ----------------------
+    fanout = {}
+    for cache_impl in ("paged", "dense"):
+        r = bench_fanout(cache_impl, slots=args.fanout_slots,
+                         scenes=args.scenes, fanout=args.fanout,
+                         seed=args.seed)
+        fanout[cache_impl] = r
+        print(f"[fanout {cache_impl:5s}] {r['answer_tokens_per_s']:9.1f} "
+              f"tok/s  prefill {r['prefill_tokens']:6d} tok  "
+              f"hit-rate {r['prefix_hit_rate']:.2f}  "
+              f"kv/slot {r['kv_bytes_per_slot']} B  ({r['wall_s']}s wall)",
+              flush=True)
+    outputs_match = (fanout["paged"].pop("outputs")
+                     == fanout["dense"].pop("outputs"))
+    print(f"fan-out outputs paged == dense: {outputs_match}")
+
     rec = {
         "config": {"slots": args.slots, "steps": args.steps,
                    "warmup": args.warmup, "det_frac": args.det_frac,
+                   "scenes": args.scenes, "fanout": args.fanout,
+                   "fanout_slots": args.fanout_slots,
                    "backend": jax.default_backend(), "smoke": args.smoke},
         "results": results,
+        "fanout": fanout,
+        "fanout_outputs_match": outputs_match,
+        "fanout_prefill_token_ratio": round(
+            fanout["dense"]["prefill_tokens"]
+            / max(fanout["paged"]["prefill_tokens"], 1), 3),
     }
     if "batched" in results and "vmap" in results:
         rec["speedup_tokens_per_s"] = round(
             results["batched"]["decode_tokens_per_s"]
             / results["vmap"]["decode_tokens_per_s"], 3)
         print(f"speedup (batched/vmap): {rec['speedup_tokens_per_s']}×")
+    print(f"fan-out prefill-token ratio (dense/paged): "
+          f"{rec['fanout_prefill_token_ratio']}×")
+    rec = _fold_history(args.out, rec)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
-    print(f"wrote {args.out}")
-    return 0
+    print(f"wrote {args.out} (history: {len(rec['history'])} prior runs)")
+    return 0 if outputs_match else 1
 
 
 if __name__ == "__main__":

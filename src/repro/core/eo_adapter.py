@@ -168,6 +168,22 @@ def prefill_tokens(params: Params, backbone_cfg: ArchConfig,
     return T.prefill(params["backbone"], backbone_cfg, inputs, max_len)
 
 
+def prefill_regions(params: Params, backbone_cfg: ArchConfig,
+                    adapter_cfg: EOAdapterConfig, images: jax.Array,
+                    max_len: int) -> Tuple[jax.Array, Tuple, jax.Array]:
+    """Prefill the **scene prefix** only — the R region tokens, no prompt.
+
+    The region tokens are the prompt-independent prefix of every request
+    over the same captured scene (causal attention: their KV and the
+    recurrent state after them cannot depend on the later prompt token), so
+    the paged engine prefills them once per scene and shares the resulting
+    KV pages read-only across all queries that fan out over the scene."""
+    patch_embeds = encode_regions(params, adapter_cfg, images)
+    inputs = {"tokens": jnp.zeros((images.shape[0], 0), jnp.int32),
+              "patch_embeds": patch_embeds}
+    return T.prefill(params["backbone"], backbone_cfg, inputs, max_len)
+
+
 def prefill_prompt(params: Params, backbone_cfg: ArchConfig,
                    adapter_cfg: EOAdapterConfig, task: str,
                    images: jax.Array, prompts: jax.Array,

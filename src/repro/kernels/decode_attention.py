@@ -14,6 +14,16 @@ so each batch row sits at its own cache position and the kernel skips KV
 blocks row-by-row (rows with short caches read O(cache_len) blocks, not
 O(S)).  A scalar length broadcasts — batch-uniform decode is the special
 case.  Rows with ``cache_len == 0`` attend to nothing and output zeros.
+
+``paged_decode_attention_pallas`` is the page-indirect variant for the paged
+KV cache (``serving/kv_pool.py``): K/V live in a pool of fixed-size pages
+``(n_pages, KH, page, hd)`` and each row's logical KV blocks are resolved
+through a per-row ``(B, pages)`` **block table**, scalar-prefetched next to
+the length vector so the page indirection happens in the BlockSpec index map
+(the DMA engine fetches the right physical page; the kernel body is the
+dense kernel unchanged — logical column indices, masks and block skipping
+are identical).  Shared prefix pages can therefore appear in many rows'
+tables at zero extra cost.
 """
 from __future__ import annotations
 
@@ -118,3 +128,66 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b, kh, group, hd), q.dtype),
         interpret=interpret,
     )(cache_len, q, k, v)
+
+
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, **kw):
+    """The dense kernel body, page-indirected: the block table only steers
+    the BlockSpec index maps (which physical page each logical block DMAs
+    from); the in-kernel math sees logical columns exactly as dense."""
+    del tbl_ref
+    _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, **kw)
+
+
+def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array, block_table: jax.Array,
+                                  cache_len: jax.Array, *, window: int = 0,
+                                  softcap: Optional[float] = None,
+                                  scale: Optional[float] = None,
+                                  interpret: bool = False) -> jax.Array:
+    """q: (B, KH, group, hd); k_pool, v_pool: (n_pages, KH, page, hd);
+    block_table: (B, P) int32 physical page per logical block; cache_len:
+    () or (B,) int32 → (B, KH, group, hd).
+
+    Logical KV position ``s`` of row ``b`` lives at
+    ``pool[block_table[b, s // page], :, s % page]``; masks/skipping use the
+    logical position, so the result equals dense decode over the gathered
+    cache."""
+    b, kh, group, hd = q.shape
+    page = k_pool.shape[2]
+    n_blocks = block_table.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, window=window, softcap=softcap,
+        kv_blk=page, n_kv=n_blocks)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd),
+                         lambda b_, h_, ip, tbl, lens: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b_, h_, ip, tbl, lens: (tbl[b_, ip], h_, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b_, h_, ip, tbl, lens: (tbl[b_, ip], h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda b_, h_, ip, tbl, lens: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+        ],
+    )
+
+    block_table = jnp.asarray(block_table, jnp.int32)
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, group, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, cache_len, q, k_pool, v_pool)

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (decode_attention_pallas,
+                                            paged_decode_attention_pallas)
 from repro.kernels.ssm_scan import ssm_scan_pallas
 from repro.kernels.region_score import region_score_pallas
 
@@ -133,6 +134,42 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     vt = v.transpose(0, 2, 1, 3)
     o = decode_attention_pallas(qg, kt, vt, cache_len, window=window,
                                 softcap=softcap, scale=scale, interpret=interp)
+    return o.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (page-pool layout; per-row block tables)
+# ---------------------------------------------------------------------------
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_table: jax.Array,
+                           cache_len: jax.Array, *, window: int = 0,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           impl: Impl = None) -> jax.Array:
+    """q: (B, H, hd); k_pool, v_pool: (n_pages, page, K, hd); block_table:
+    (B, P) int32 (physical page per logical block); cache_len: () or (B,)
+    int32 → (B, H, hd).
+
+    The paged analogue of ``decode_attention``: each row reads its KV
+    through its block table, so shared prefix pages are fetched once per
+    page, not once per sequence."""
+    kind, interp = _resolve(impl)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if kind in ("ref", "flash_structured"):
+        with jax.named_scope("KERNELREGION_decode"):
+            return ref.paged_decode_attention(q, k_pool, v_pool, block_table,
+                                              cache_len, window=window,
+                                              softcap=softcap, scale=scale)
+    b, h, hd = q.shape
+    kh = k_pool.shape[2]
+    group = h // kh
+    qg = q.reshape(b, kh, group, hd)
+    kp = k_pool.transpose(0, 2, 1, 3)     # (n_pages, KH, page, hd)
+    vp = v_pool.transpose(0, 2, 1, 3)
+    o = paged_decode_attention_pallas(qg, kp, vp, block_table, cache_len,
+                                      window=window, softcap=softcap,
+                                      scale=scale, interpret=interp)
     return o.reshape(b, h, hd)
 
 

@@ -346,6 +346,31 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return o.reshape(b, h, hd).astype(q.dtype)
 
 
+def gather_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """pool: (n_pages, page, ...) ; block_table: (B, P) int32 →
+    (B, P·page, ...) dense per-row cache (logical position ``s`` of row ``b``
+    is ``pool[block_table[b, s // page], s % page]``)."""
+    pages = jnp.take(pool, block_table, axis=0)      # (B, P, page, ...)
+    b, p, page = pages.shape[:3]
+    return pages.reshape((b, p * page) + pool.shape[2:])
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_table: jax.Array,
+                           cache_len: jax.Array, *, window: int = 0,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None) -> jax.Array:
+    """Oracle for the page-indirect decode kernel: gather every row's pages
+    into a dense (B, P·page, KH, hd) cache, then dense ragged decode.
+
+    q: (B, H, hd); k_pool, v_pool: (n_pages, page, KH, hd); block_table:
+    (B, P) int32; cache_len: () or (B,) int32 → (B, H, hd)."""
+    k = gather_pages(k_pool, block_table)
+    v = gather_pages(v_pool, block_table)
+    return decode_attention(q, k, v, cache_len, window=window,
+                            softcap=softcap, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # ssm_scan — chunked gated linear attention (Mamba-2 SSD / mLSTM core)
 # ---------------------------------------------------------------------------

@@ -111,10 +111,21 @@ def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_paged_attn_cache(cfg: ArchConfig, n_pages: int, page_size: int,
+                          dtype) -> Params:
+    """Paged KV layout: a pool of fixed-size pages shared by all sequences;
+    per-row block tables (passed to ``attention`` at decode) resolve logical
+    positions to (page, offset)."""
+    hd = cfg.resolved_head_dim
+    shape = (n_pages, page_size, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
               cos: jax.Array, sin: jax.Array,
               cache: Optional[Params] = None,
               cache_index: Optional[jax.Array] = None,
+              block_table: Optional[jax.Array] = None,
               mode: str = "train") -> Tuple[jax.Array, Optional[Params]]:
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
@@ -140,18 +151,39 @@ def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
     else:  # decode: s == 1
         assert cache is not None and cache_index is not None
         idx = jnp.asarray(cache_index)
-        if idx.ndim == 0:
-            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        if block_table is not None:
+            # paged decode: cache is a page pool (n_pages, page, KH, hd);
+            # each row writes its token at (block_table[row, idx // page],
+            # idx % page) and reads through its block table.  Rows never
+            # share a writable (page, offset): private pages are uniquely
+            # owned and shared prefix pages only cover positions the decode
+            # index never revisits (engine invariant, see serving/kv_pool).
+            idx = jnp.broadcast_to(idx, (b,))
+            page = cache["k"].shape[1]
+            rows_page = jnp.take_along_axis(
+                block_table, (idx // page)[:, None], axis=1)[:, 0]
+            off = idx % page
+            ck = cache["k"].at[rows_page, off].set(k[:, 0])
+            cv = cache["v"].at[rows_page, off].set(v[:, 0])
+            new_cache = {"k": ck, "v": cv}
+            o = ops.paged_decode_attention(q[:, 0], ck, cv, block_table,
+                                           idx + 1, window=window,
+                                           softcap=cfg.attn_softcap)
         else:
-            # ragged slot-table decode: each batch row writes its own cache
-            # position (one scatter, no per-row dynamic slices)
-            rows = jnp.arange(b)
-            ck = cache["k"].at[rows, idx].set(k[:, 0])
-            cv = cache["v"].at[rows, idx].set(v[:, 0])
-        new_cache = {"k": ck, "v": cv}
-        o = ops.decode_attention(q[:, 0], ck, cv, idx + 1, window=window,
-                                 softcap=cfg.attn_softcap)
+            if idx.ndim == 0:
+                ck = jax.lax.dynamic_update_slice(cache["k"], k,
+                                                  (0, idx, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                                  (0, idx, 0, 0))
+            else:
+                # ragged slot-table decode: each batch row writes its own
+                # cache position (one scatter, no per-row dynamic slices)
+                rows = jnp.arange(b)
+                ck = cache["k"].at[rows, idx].set(k[:, 0])
+                cv = cache["v"].at[rows, idx].set(v[:, 0])
+            new_cache = {"k": ck, "v": cv}
+            o = ops.decode_attention(q[:, 0], ck, cv, idx + 1, window=window,
+                                     softcap=cfg.attn_softcap)
         o = o[:, None]
     o = o.reshape(b, s, cfg.num_heads * hd)
     return o @ p["wo"], new_cache
@@ -436,12 +468,13 @@ def init_hybrid_cache(cfg: ArchConfig, batch: int, max_len: int,
 
 def hybrid(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
            cos: jax.Array, sin: jax.Array, cache: Optional[Params] = None,
-           cache_index: Optional[jax.Array] = None, mode: str = "train"
+           cache_index: Optional[jax.Array] = None,
+           block_table: Optional[jax.Array] = None, mode: str = "train"
            ) -> Tuple[jax.Array, Optional[Params]]:
     a_out, a_cache = attention(
         p["attn"], x, cfg=cfg, window=window, cos=cos, sin=sin,
         cache=None if cache is None else cache["attn"],
-        cache_index=cache_index, mode=mode)
+        cache_index=cache_index, block_table=block_table, mode=mode)
     m_out, m_cache = mamba(
         p["mamba"], x, cfg=cfg,
         cache=None if cache is None else cache["mamba"], mode=mode)

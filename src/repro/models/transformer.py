@@ -99,18 +99,74 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Tuple:
     return tuple(out)
 
 
+def init_paged_cache(cfg: ArchConfig, batch: int, n_pages: int,
+                     page_size: int) -> Tuple:
+    """Paged variant of ``init_cache``: attention KV leaves become page
+    pools ``(n_super, n_pages, page, KH, hd)`` shared by every sequence and
+    addressed through the ``block_table`` argument of ``decode_step``;
+    recurrent-state leaves (O(1) per token — nothing to page) stay per-slot
+    ``(n_super, batch, ...)`` exactly as in the dense cache."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def single(spec: BlockSpec):
+        if spec.kind == ATTN:
+            return L.init_paged_attn_cache(cfg, n_pages, page_size, dt)
+        if spec.kind == MAMBA:
+            return L.init_mamba_cache(cfg, batch)
+        if spec.kind == MLSTM:
+            return L.init_mlstm_cache(cfg, batch)
+        if spec.kind == SLSTM:
+            return L.init_slstm_cache(cfg, batch)
+        if spec.kind == HYBRID:
+            return {"attn": L.init_paged_attn_cache(cfg, n_pages, page_size,
+                                                    dt),
+                    "mamba": L.init_mamba_cache(cfg, batch)}
+        raise ValueError(spec.kind)
+
+    out = []
+    for spec in cfg.block_pattern:
+        one = single(spec)
+        out.append(jax.tree.map(
+            lambda x: jnp.zeros((cfg.n_super,) + x.shape, x.dtype), one))
+    return tuple(out)
+
+
+def map_cache_kinds(cfg: ArchConfig, caches, *, kv, state) -> Tuple:
+    """Apply ``kv`` to every attention-KV subtree and ``state`` to every
+    recurrent-state subtree of one or more structurally-identical caches.
+
+    ``caches`` is a sequence of cache tuples (as returned by ``init_cache``
+    / ``init_paged_cache``); ``kv`` / ``state`` receive the corresponding
+    subtrees from each cache positionally and return the new subtree.  This
+    is the one place that knows which cache leaves are pageable KV versus
+    per-slot recurrent state — engine-side paging logic (prefix-state
+    scatter, pool merges) goes through it instead of guessing from shapes.
+    """
+    def one(spec: BlockSpec, parts):
+        if spec.kind == ATTN:
+            return kv(*parts)
+        if spec.kind == HYBRID:
+            return {"attn": kv(*[p["attn"] for p in parts]),
+                    "mamba": state(*[p["mamba"] for p in parts])}
+        return state(*parts)
+
+    return tuple(one(spec, [c[i] for c in caches])
+                 for i, spec in enumerate(cfg.block_pattern))
+
+
 # ---------------------------------------------------------------------------
 # Block application
 # ---------------------------------------------------------------------------
 
 def _apply_block(p: Params, x: jax.Array, *, cfg: ArchConfig,
-                 spec: BlockSpec, cos, sin, cache, cache_index, mode: str
-                 ) -> Tuple[jax.Array, Any, jax.Array]:
+                 spec: BlockSpec, cos, sin, cache, cache_index, mode: str,
+                 block_table=None) -> Tuple[jax.Array, Any, jax.Array]:
     h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
     if spec.kind == ATTN:
         h, new_cache = L.attention(p["mixer"], h, cfg=cfg, window=spec.window,
                                    cos=cos, sin=sin, cache=cache,
-                                   cache_index=cache_index, mode=mode)
+                                   cache_index=cache_index,
+                                   block_table=block_table, mode=mode)
     elif spec.kind == MAMBA:
         h, new_cache = L.mamba(p["mixer"], h, cfg=cfg, cache=cache, mode=mode)
     elif spec.kind == MLSTM:
@@ -120,7 +176,8 @@ def _apply_block(p: Params, x: jax.Array, *, cfg: ArchConfig,
     elif spec.kind == HYBRID:
         h, new_cache = L.hybrid(p["mixer"], h, cfg=cfg, window=spec.window,
                                 cos=cos, sin=sin, cache=cache,
-                                cache_index=cache_index, mode=mode)
+                                cache_index=cache_index,
+                                block_table=block_table, mode=mode)
     else:
         raise ValueError(spec.kind)
     x = x + h
@@ -144,7 +201,7 @@ REMAT_POLICIES = {
 
 def _run_stack(params: Params, cfg: ArchConfig, x: jax.Array,
                positions: jax.Array, *, mode: str, cache=None,
-               cache_index=None, remat: bool = False,
+               cache_index=None, block_table=None, remat: bool = False,
                remat_policy: str = "nothing"):
     hd = cfg.resolved_head_dim
     cos, sin = L.rope_angles(
@@ -156,7 +213,8 @@ def _run_stack(params: Params, cfg: ArchConfig, x: jax.Array,
     def block_fn(spec):
         def fn(p, x, c):
             return _apply_block(p, x, cfg=cfg, spec=spec, cos=cos, sin=sin,
-                                cache=c, cache_index=cache_index, mode=mode)
+                                cache=c, cache_index=cache_index, mode=mode,
+                                block_table=block_table)
         if remat:
             # checkpoint at BLOCK granularity: backward recomputes one layer
             # at a time, so the live recompute working set is O(1 layer), not
@@ -272,17 +330,24 @@ def prefill(params: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array],
 
 
 def decode_step(params: Params, cfg: ArchConfig, cache: Tuple,
-                inputs: Dict[str, jax.Array], index: jax.Array
+                inputs: Dict[str, jax.Array], index: jax.Array,
+                block_table: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Tuple]:
     """One decode step at cache slot ``index`` — () int32 for batch-uniform
     decode, or (B,) int32 for ragged slot-table decode where every batch row
     sits at its own cache position (per-row RoPE, KV scatter and attention
     mask; the whole slot table advances in ONE call).
 
+    With ``block_table`` (B, P) int32, ``cache`` must be a paged cache
+    (``init_paged_cache``): attention layers resolve position ``index``
+    through the table to (page, offset) for the KV write and read the whole
+    row page-indirectly — sequences can then share read-only prefix pages.
+
     Returns (logits (B, V), new_cache)."""
     x, positions = frontends.embed_decode(params["embed"], cfg, inputs, index)
     x, _, new_cache = _run_stack(params, cfg, x, positions, mode="decode",
-                                 cache=cache, cache_index=index)
+                                 cache=cache, cache_index=index,
+                                 block_table=block_table)
     logits = frontends.logits_from_hidden(params["embed"], cfg, x[:, -1])
     return logits, new_cache
 

@@ -1,6 +1,8 @@
 """Serving runtime: one executor for Algorithm 1 behind every entry point.
 
 - ``EngineCore``       — jitted fixed-shape step functions + slot table
+                         (paged KV cache with shared scene-prefix pages)
+- ``KVPagePool``       — ref-counted page allocator + scene prefix cache
 - ``CascadePolicy``    — pluggable exit/offload decisions (SpaceVerse
   progressive confidence and every baseline strategy)
 - ``OffloadPipeline``  — shared Eq. 2 → Eq. 3 → link → GS stage
@@ -8,7 +10,10 @@
 - ``InferenceEngine``  — single-tier continuous-batching server
 - ``CascadeServer``    — two-tier request server (thin executor adapter)
 """
-from repro.serving.request import Request, Response, TIERS  # noqa: F401
+from repro.serving.request import (Request, Response, TIERS,  # noqa: F401
+                                   scene_key)
+from repro.serving.kv_pool import (KVPagePool, PrefixCache,  # noqa: F401
+                                   TRASH_PAGE)
 from repro.serving.engine_core import (EngineCore, EngineCoreConfig,  # noqa: F401
                                        shared_core)
 from repro.serving.policy import (AIRGPolicy, CascadePolicy,  # noqa: F401

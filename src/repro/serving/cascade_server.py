@@ -31,7 +31,7 @@ from repro.serving.engine_core import shared_core
 from repro.serving.executor import CascadeExecutor
 from repro.serving.offload import OffloadPipeline
 from repro.serving.policy import ProgressiveConfidencePolicy
-from repro.serving.request import Request, Response
+from repro.serving.request import Request, Response, scene_key
 
 
 class CascadeServer:
@@ -74,9 +74,12 @@ class CascadeServer:
         l_ans = self.ac.answer_len(req.task)
 
         pipeline = self._pipeline()
+        # scene key → per-scene encode reuse on the shared core (queries
+        # fanning out over one capture re-use V(x)/E(T); deterministic, so
+        # decisions — and the golden test — are unchanged)
         res = self._executor(pipeline).run_serve(
             self._policy(), req.task, images, prompts, self.cc.answer_vocab,
-            allow_offload=self.link_up)
+            allow_offload=self.link_up, scene=scene_key(req))
         exit_stage = int(np.asarray(res.exit_stage)[0])
         offload = bool(np.asarray(res.offload)[0])
 

@@ -8,9 +8,12 @@ one batched ragged decode call with per-slot cache positions; finished
 slots free immediately and are refilled from the pending queue
 **mid-stream** — the batch never drains just to admit the next request
 (continuous batching à la vLLM/Orca, collapsed to the fixed-slot variant
-that pjit likes: stable shapes, one compile, no recompilation).  On the
-production mesh the same step functions run under ``jax.jit`` with the
-decode-cell shardings from the dry-run.
+that pjit likes: stable shapes, one compile, no recompilation).  The KV
+cache behind the slots is paged by default (``EngineConfig(cache_impl=
+"paged")``): queries fanning out over one captured scene share the
+image-region prefix pages read-only and only prefill their prompt suffix —
+see DESIGN.md §serving.  On the production mesh the same step functions
+run under ``jax.jit`` with the decode-cell shardings from the dry-run.
 """
 from __future__ import annotations
 
@@ -34,6 +37,9 @@ class EngineConfig:
     max_new_tokens: int = 64
     answer_vocab: int = 64
     step_impl: str = "batched"          # "batched" | "vmap" (legacy oracle)
+    cache_impl: str = "paged"           # "paged" | "dense" (oracle)
+    page_size: int = 8                  # KV tokens per page (paged only)
+    prefix_cache_scenes: Optional[int] = None   # resident scenes (→ slots)
 
 
 class InferenceEngine:
@@ -52,7 +58,10 @@ class InferenceEngine:
             TierModel(params, cfg), adapter_cfg,
             EngineCoreConfig(slots=self.ec.slots,
                              answer_vocab=self.ec.answer_vocab,
-                             step_impl=self.ec.step_impl))
+                             step_impl=self.ec.step_impl,
+                             cache_impl=self.ec.cache_impl,
+                             page_size=self.ec.page_size,
+                             prefix_cache_scenes=self.ec.prefix_cache_scenes))
 
     def warmup(self) -> None:
         """Pre-compile the slot path (decode step + every admission bucket)

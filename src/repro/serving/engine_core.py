@@ -8,30 +8,44 @@ cascade and owns every compiled entry point the serving layer needs:
   ``CascadeExecutor`` for both the vectorised counterfactual evaluator and
   the per-request server.  Compilation is keyed only by (batch, chunk
   length), so repeated traffic at the same shapes never recompiles.
+  ``encode_cached`` additionally memoises per-scene encodes for the serve
+  path's scene fan-out traffic.
 
 - **slot path** (``admit`` / ``admit_many`` / ``step``): a fixed-capacity
   slot table for true continuous batching.  Every slot holds one in-flight
-  request's KV cache slice, next-token logits and decode position; ``step``
-  advances *all* slots one token through **one** batched ``T.decode_step``
-  call over the whole table with a ``(B,)`` per-slot index vector — per-row
-  RoPE positions, per-row KV scatter and per-row ragged attention masks all
-  the way down to the flash-decoding kernel (slots prefilled at different
-  times sit at different positions).  ``admit_many`` prefills up to K
-  pending requests in one fixed-shape batched call (K padded to a power of
-  two, ≤ slot count) and scatters them into free slots in one jitted
-  update, so refill costs O(1) compile-units instead of one launch per
-  request.  Finished slots free immediately and are refilled from the
-  pending queue mid-stream — the batch never drains to refill, which is
-  the vLLM/Orca property the old queue-chunking engine only claimed.  All
-  slot-path shapes are fixed at construction (slot count, cache capacity =
-  regions + prompt + longest answer), so the decode step compiles exactly
-  once.  The pre-batching per-slot path (``jax.vmap`` of a batch-1 step
-  over the stacked table) is kept behind ``EngineCoreConfig(step_impl=
-  "vmap")`` as the equivalence oracle and the benchmark baseline.
+  request's next-token logits and decode position; ``step`` advances *all*
+  slots one token through **one** batched ``T.decode_step`` call over the
+  whole table with a ``(B,)`` per-slot index vector — per-row RoPE
+  positions, per-row KV scatter and per-row ragged attention masks all the
+  way down to the flash-decoding kernel.  Finished slots free immediately
+  and are refilled from the pending queue mid-stream.
+
+The KV cache behind the slot table comes in two implementations
+(``EngineCoreConfig.cache_impl``):
+
+- ``"paged"`` (default): KV lives in a pool of fixed-size pages
+  (``serving/kv_pool.py``) addressed through a per-slot block table that
+  the decode step resolves page-indirectly (``kernels/decode_attention.py``
+  scalar-prefetches the ``(B, pages)`` table next to the ``(B,)`` length
+  vector).  ``admit_many`` keys the image-region prefill on a **scene
+  hash**: the R region tokens are the prompt-independent prefix of every
+  query over one captured scene, so their KV pages are prefilled once per
+  scene, cached (LRU, ref-counted), and mapped **read-only** into each new
+  request's block table — admission then only runs the 1-token prompt
+  suffix through the decode step.  K queries over one scene prefill the
+  ``N_r`` vision tokens once instead of K times, and a slot's KV footprint
+  is its private pages plus an amortised share of the prefix.
+
+- ``"dense"``: the pre-paging layout — one worst-case
+  ``(slots, N_r + 1 + max_answer_len)`` cache slice per slot, whole-row
+  prefill + scatter admission.  Kept as the token-for-token equivalence
+  oracle (``tests/test_kv_pool.py``) exactly like the ``step_impl="vmap"``
+  oracle of the batched-decode PR (which implies ``dense``).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -40,7 +54,8 @@ import numpy as np
 
 from repro.core import eo_adapter as EO
 from repro.models import transformer as T
-from repro.serving.request import Request
+from repro.serving.kv_pool import KVPagePool, PrefixCache, TRASH_PAGE
+from repro.serving.request import Request, scene_key
 
 Params = Dict[str, Any]
 
@@ -51,6 +66,12 @@ class EngineCoreConfig:
     answer_vocab: int = 64
     max_answer_len: Optional[int] = None   # default: N_r (longest task = det)
     step_impl: str = "batched"             # "batched" | "vmap" (legacy oracle)
+    cache_impl: str = "paged"              # "paged" | "dense" (oracle)
+    page_size: int = 8                     # tokens per KV page (paged only)
+    #: scenes the prefix cache keeps resident beyond the active slots'
+    #: (None → slots); bounds the pool at
+    #: slots·pages_per_slot + scenes·shared_pages_per_scene
+    prefix_cache_scenes: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -59,26 +80,33 @@ class _Slot:
     l_ans: int = 0
     tokens: Optional[List[int]] = None
     active: bool = False
+    scene: Optional[Any] = None         # paged: resident prefix this slot maps
+    private_pages: Optional[List[int]] = None
 
 
 def shared_core(tier, adapter_cfg: EO.EOAdapterConfig) -> "EngineCore":
-    """Per-tier ``EngineCore`` cache keyed by adapter identity.
+    """Per-tier ``EngineCore`` cache keyed by adapter-config **value**.
 
     Adapters (SpaceVerse, CascadeServer, baselines) are constructed freely —
     often many per test session over the same trained tiers — and each
     ``EngineCore`` owns jit caches.  Sharing cores means the jitted step
     functions compile once per tier, not once per adapter instance.  The
     cache lives ON the ``TierModel`` instance, so cores (and their compiled
-    executables) are garbage-collected together with the tier they serve
-    instead of accumulating for the process lifetime."""
+    executables) are garbage-collected together with the tier they serve.
+
+    The key is the frozen ``EOAdapterConfig`` itself (hashable, compared by
+    value) — keying on ``id(adapter_cfg)`` was unsound: after an
+    unreferenced config is garbage-collected its id can be reused by a
+    *different* config object, silently serving it a core built for the old
+    one."""
     cache = getattr(tier, "_engine_cores", None)
     if cache is None:
         cache = {}
         tier._engine_cores = cache
-    core = cache.get(id(adapter_cfg))
-    if core is None or core.ac is not adapter_cfg:
+    core = cache.get(adapter_cfg)
+    if core is None:
         core = EngineCore(tier, adapter_cfg)
-        cache[id(adapter_cfg)] = core   # core references adapter_cfg → id stays valid
+        cache[adapter_cfg] = core
     return core
 
 
@@ -94,6 +122,14 @@ class EngineCore:
                                or adapter_cfg.n_regions)
         # fixed slot-cache capacity: [regions | prompt | longest answer]
         self._slot_max_len = adapter_cfg.n_regions + 1 + self.max_answer_len
+
+        if self.cfg.step_impl not in ("batched", "vmap"):
+            raise ValueError(f"unknown step_impl {self.cfg.step_impl!r}")
+        if self.cfg.cache_impl not in ("paged", "dense"):
+            raise ValueError(f"unknown cache_impl {self.cfg.cache_impl!r}")
+        # the vmap oracle predates paging and steps the dense layout
+        self.cache_impl = ("dense" if self.cfg.step_impl == "vmap"
+                           else self.cfg.cache_impl)
 
         params, cfg, ac = tier.params, tier.cfg, adapter_cfg
 
@@ -116,6 +152,9 @@ class EngineCore:
             _decode_chunk, static_argnames=("n_tokens", "answer_vocab"))
         self._token_feats_j = jax.jit(
             lambda toks: EO.token_features(params, toks))
+        # scene-keyed encode memo for the serve path (bounded LRU)
+        self._encode_cache: "OrderedDict[Any, Tuple]" = OrderedDict()
+        self._encode_cache_cap = 32
 
         # -- slot-path compiled functions (shapes fixed at construction) ----
         def _slot_step(slot_logits, slot_cache, slot_index, active,
@@ -130,6 +169,20 @@ class EngineCore:
             new_logits, new_cache = T.decode_step(
                 params["backbone"], cfg, slot_cache, {"tokens": toks[:, None]},
                 slot_index)
+            new_index = jnp.where(active, slot_index + 1, slot_index)
+            return toks, new_logits, new_cache, new_index
+
+        def _slot_step_paged(slot_logits, slot_cache, slot_index, active,
+                             block_table, *, answer_vocab):
+            """Paged all-slot step: identical to ``_slot_step`` except the
+            KV write/read resolve through the block table.  Inactive slots'
+            block-table rows point at the trash page, so their garbage write
+            can never land in a page another sequence owns."""
+            a_logits = slot_logits[:, :answer_vocab]
+            toks = jnp.argmax(a_logits, axis=-1).astype(jnp.int32)
+            new_logits, new_cache = T.decode_step(
+                params["backbone"], cfg, slot_cache, {"tokens": toks[:, None]},
+                slot_index, block_table=block_table)
             new_index = jnp.where(active, slot_index + 1, slot_index)
             return toks, new_logits, new_cache, new_index
 
@@ -181,12 +234,123 @@ class EngineCore:
             si = jnp.where(hit, idx.astype(slot_index.dtype), slot_index)
             return sc, sl, si
 
-        if self.cfg.step_impl not in ("batched", "vmap"):
-            raise ValueError(f"unknown step_impl {self.cfg.step_impl!r}")
-        self._slot_step_j = jax.jit(
-            _slot_step if self.cfg.step_impl == "batched" else _slot_step_vmap,
-            static_argnames=("answer_vocab",))
+        if self.cfg.step_impl == "vmap":
+            step_fn = _slot_step_vmap
+        elif self.cache_impl == "paged":
+            step_fn = _slot_step_paged
+        else:
+            step_fn = _slot_step
+        self._slot_step_j = jax.jit(step_fn,
+                                    static_argnames=("answer_vocab",))
         self._slot_scatter_many_j = jax.jit(_slot_scatter_many)
+
+        # -- paged-cache machinery ------------------------------------------
+        if self.cache_impl == "paged":
+            import math
+            ps = self.cfg.page_size
+            n_regions = ac.n_regions
+            if ps < 1:
+                raise ValueError(f"page_size must be positive, got {ps}")
+            if n_regions % ps != 0:
+                # the shared scene prefix must occupy whole pages; clamp to
+                # the largest divisor ≤ the requested size (shared_core
+                # builds default configs over arbitrary adapters)
+                ps = math.gcd(ps, n_regions)
+            self._page_size = ps
+            self._n_shared_pages = n_regions // ps
+            self._pages_per_slot = -(-self._slot_max_len // ps)
+            self._private_per_slot = (self._pages_per_slot
+                                      - self._n_shared_pages)
+            scenes = (self.cfg.prefix_cache_scenes
+                      if self.cfg.prefix_cache_scenes is not None
+                      else n_slots)
+            # worst case: every slot holds a distinct scene (its prefix pages
+            # refcounted by slot + cache) + `scenes` cache-only prefixes
+            self._n_pages = (1 + n_slots * self._pages_per_slot
+                             + scenes * self._n_shared_pages)
+            self._pool = KVPagePool(self._n_pages, ps)
+            self._prefix = PrefixCache(self._pool,
+                                       capacity=n_slots + scenes)
+            self._bt_np = np.full((n_slots, self._pages_per_slot),
+                                  TRASH_PAGE, np.int32)
+            self._bt_dev = None
+
+            def _prefill_prefix(images):
+                """Regions-only prefill: the shared prefix of every query
+                over one scene (KV capacity exactly N_r → reshapes straight
+                into whole pages; final recurrent state = the snapshot a
+                prompt-suffix admission resumes from)."""
+                _, cache, _ = EO.prefill_regions(params, cfg, ac, images,
+                                                 n_regions)
+                return cache
+
+            n_shared = self._n_shared_pages
+
+            def _prefix_scatter(slot_cache, prefix_cache, pages):
+                """Write K scenes' region KV into their shared pages.
+                ``pages``: (K·n_shared,) flat physical page ids (padding
+                rows target the trash page)."""
+                def kv(pool, pref):
+                    def leaf(pool_leaf, pref_leaf):
+                        ns, kb = pref_leaf.shape[:2]
+                        resh = pref_leaf.reshape(
+                            (ns, kb * n_shared, ps) + pref_leaf.shape[3:])
+                        return pool_leaf.at[:, pages].set(resh)
+                    return jax.tree.map(leaf, pool, pref)
+                return T.map_cache_kinds(cfg, [slot_cache, prefix_cache],
+                                         kv=kv, state=lambda sl, pr: sl)
+
+            def _paged_admit(slot_logits, slot_cache, slot_index, block_table,
+                             admit_slots, ptoks, prefix_state):
+                """Admit K requests whose prefixes are already page-resident:
+                scatter each scene's recurrent-state snapshot into its slot
+                row, then run ONE decode step over the whole table that
+                processes only the 1-token prompt suffix of the admitted
+                rows (everyone else is steered to the trash page and merged
+                back unchanged).  This *is* the paged prefill: the region
+                tokens were never re-computed."""
+                sel = admit_slots[None, :] == jnp.arange(n_slots)[:, None]
+                hit = sel.any(axis=1)                             # (S,)
+                src = jnp.argmax(sel, axis=1)                     # (S,)
+
+                def put_state(full, new):
+                    def leaf(f, n):
+                        g = jnp.take(n, src, axis=1)
+                        m = hit.reshape((1, -1) + (1,) * (f.ndim - 2))
+                        return jnp.where(m, g, f)
+                    return jax.tree.map(leaf, full, new)
+
+                cache1 = T.map_cache_kinds(
+                    cfg, [slot_cache, prefix_state],
+                    kv=lambda full, _new: full, state=put_state)
+
+                # non-admitted rows write to the trash page and keep their
+                # state; admitted rows decode the prompt at position N_r
+                bt_call = jnp.where(hit[:, None], block_table, TRASH_PAGE)
+                idx_in = jnp.where(hit, jnp.int32(n_regions), 0)
+                ptok_row = jnp.where(hit, jnp.take(ptoks, src), 0)
+                logits, cache2 = T.decode_step(
+                    params["backbone"], cfg, cache1,
+                    {"tokens": ptok_row[:, None]}, idx_in,
+                    block_table=bt_call)
+
+                def sel_state(old, new):
+                    def leaf(o, n):
+                        m = hit.reshape((1, -1) + (1,) * (o.ndim - 2))
+                        return jnp.where(m, n, o)
+                    return jax.tree.map(leaf, old, new)
+
+                cache3 = T.map_cache_kinds(
+                    cfg, [cache1, cache2],
+                    kv=lambda _old, new: new, state=sel_state)
+                sl = jnp.where(hit[:, None], logits, slot_logits)
+                si = jnp.where(hit, jnp.int32(n_regions + 1),
+                               slot_index).astype(slot_index.dtype)
+                return sl, cache3, si
+
+            self._prefill_prefix_j = jax.jit(_prefill_prefix)
+            self._prefix_scatter_j = jax.jit(_prefix_scatter)
+            self._paged_admit_j = jax.jit(_paged_admit)
 
         self._slots: List[_Slot] = [_Slot() for _ in range(self.cfg.slots)]
         self._slot_cache = None
@@ -199,6 +363,9 @@ class EngineCore:
         self._step_no = 0
         self.stats: Dict[str, Any] = {
             "admitted": 0, "finished": 0, "mid_stream_refills": 0,
+            "prefix_hits": 0, "prefix_misses": 0,
+            "prefill_tokens": 0,        # tokens actually run through prefill
+            "encode_reuse": 0,          # serve-path scene-encode cache hits
             "occupancy_log": [],        # (step, active_slots_after_admit)
         }
         self._occupancy_cap = 4096      # keep the log bounded on long runs
@@ -209,6 +376,26 @@ class EngineCore:
     def encode(self, task: str, images: jax.Array, prompts: jax.Array):
         """V(x), E(T) and pooled visual features: (B,R,d), (B,1,d), (B,d)."""
         return self._encode_j(images, self.ac.prompt_token(task, prompts))
+
+    def encode_cached(self, task: str, images: jax.Array, prompts: jax.Array,
+                      scene: Optional[Any] = None):
+        """``encode`` with a scene-keyed memo for the batch-of-one serve
+        path: queries fanning out over one captured scene reuse V(x)/E(T)
+        instead of re-encoding per request.  Falls back to ``encode`` when
+        no scene key is given or the batch isn't a single request."""
+        if scene is None or int(images.shape[0]) != 1:
+            return self.encode(task, images, prompts)
+        key = (scene, task, int(np.asarray(prompts)[0]))
+        hit = self._encode_cache.get(key)
+        if hit is not None:
+            self._encode_cache.move_to_end(key)
+            self.stats["encode_reuse"] += 1
+            return hit
+        out = self.encode(task, images, prompts)
+        self._encode_cache[key] = out
+        while len(self._encode_cache) > self._encode_cache_cap:
+            self._encode_cache.popitem(last=False)
+        return out
 
     def prefill(self, task: str, images: jax.Array, prompts: jax.Array,
                 extra_len: int):
@@ -239,11 +426,20 @@ class EngineCore:
     def _ensure_slot_tables(self):
         if self._slot_cache is None:
             cfg = self.tier.cfg
-            self._slot_cache = T.init_cache(cfg, self.cfg.slots,
-                                            self._slot_max_len)
+            if self.cache_impl == "paged":
+                self._slot_cache = T.init_paged_cache(
+                    cfg, self.cfg.slots, self._n_pages, self._page_size)
+            else:
+                self._slot_cache = T.init_cache(cfg, self.cfg.slots,
+                                                self._slot_max_len)
             self._slot_logits = jnp.zeros((self.cfg.slots, cfg.vocab_size),
                                           jnp.float32)
             self._slot_index = jnp.zeros((self.cfg.slots,), jnp.int32)
+
+    def _block_table_dev(self) -> jax.Array:
+        if self._bt_dev is None:
+            self._bt_dev = jnp.asarray(self._bt_np)
+        return self._bt_dev
 
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if not s.active]
@@ -252,14 +448,17 @@ class EngineCore:
         return sum(s.active for s in self._slots)
 
     def warmup(self) -> None:
-        """Pre-compile every slot-path executable: the decode step and the
-        prefill + scatter pair for every power-of-two admission bucket.
+        """Pre-compile every slot-path executable: the decode step plus, per
+        power-of-two admission bucket, the dense prefill + scatter pair or
+        the paged prefix-prefill + page-scatter + prompt-suffix admit trio.
 
         Traffic decides when each bucket size first occurs, so without this
         a compile can land mid-serve — exactly the stall the fixed-shape
         slot design exists to avoid (a satellite pays it inside a contact
-        window).  Idempotent; slot state is untouched (warmup scatters
-        target out-of-range slot ids, which the scatter drops)."""
+        window).  Idempotent; slot state is untouched (dense warmup scatters
+        target out-of-range slot ids; paged warmup admissions match no slot
+        and write only the trash page, and the functional outputs are
+        discarded)."""
         self._ensure_slot_tables()
         shape = (self.ac.image_size, self.ac.image_size, self.ac.channels)
         sizes, b = set(), 1
@@ -269,15 +468,39 @@ class EngineCore:
         sizes.add(self.cfg.slots)
         for k in sorted(sizes):
             images = jnp.zeros((k,) + shape, jnp.float32)
-            ptok = jnp.zeros((k,), jnp.int32)
-            logits, cache, idx = self._prefill_j(images, ptok,
-                                                 max_len=self._slot_max_len)
-            drop = jnp.full((k,), self.cfg.slots, jnp.int32)
-            self._slot_scatter_many_j(self._slot_cache, self._slot_logits,
-                                      self._slot_index, cache, logits, drop,
-                                      idx)
+            if self.cache_impl == "paged":
+                cache = self._prefill_prefix_j(images)
+                trash = jnp.zeros((k * self._n_shared_pages,), jnp.int32)
+                self._prefix_scatter_j(self._slot_cache, cache, trash)
+                state = T.map_cache_kinds(
+                    self.tier.cfg, [cache],
+                    kv=lambda _t: None, state=lambda t: t)
+                self._paged_admit_j(
+                    self._slot_logits, self._slot_cache, self._slot_index,
+                    self._block_table_dev(),
+                    jnp.full((k,), self.cfg.slots, jnp.int32),
+                    jnp.zeros((k,), jnp.int32), state)
+            else:
+                ptok = jnp.zeros((k,), jnp.int32)
+                logits, cache, idx = self._prefill_j(
+                    images, ptok, max_len=self._slot_max_len)
+                drop = jnp.full((k,), self.cfg.slots, jnp.int32)
+                self._slot_scatter_many_j(self._slot_cache, self._slot_logits,
+                                          self._slot_index, cache, logits,
+                                          drop, idx)
+        self._step_once_compiled()
+
+    def _step_args(self) -> Tuple:
+        """Positional tail of a ``_slot_step_j`` call: the paged step takes
+        the block table after the active mask; dense/vmap take nothing."""
+        if self.cache_impl == "paged":
+            return (self._block_table_dev(),)
+        return ()
+
+    def _step_once_compiled(self):
+        inactive = jnp.zeros((self.cfg.slots,), bool)
         self._slot_step_j(self._slot_logits, self._slot_cache,
-                          self._slot_index, jnp.zeros((self.cfg.slots,), bool),
+                          self._slot_index, inactive, *self._step_args(),
                           answer_vocab=self.cfg.answer_vocab)
 
     def admit(self, request: Request) -> int:
@@ -297,16 +520,21 @@ class EngineCore:
         """Prefill up to ``slots`` pending requests in ONE batched call and
         scatter them into free slots in one jitted update.
 
-        The prefill batch is padded to a power-of-two bucket (≤ slot count)
-        so refilling K slots costs one fixed-shape launch, not K; padding
-        rows replicate the last request and scatter to an out-of-range slot
-        id, which the scatter drops.  Returns the slot id per request."""
+        Dense cache: the full [regions | prompt] prefix prefills per
+        request (padded to a power-of-two bucket ≤ slot count, so refilling
+        K slots costs one fixed-shape launch).  Paged cache: the
+        region prefix prefills once per **unique scene not already
+        page-resident**, then every request maps the shared prefix pages
+        read-only and runs only its 1-token prompt suffix (see
+        ``_admit_many_paged``).  Returns the slot id per request."""
         if not requests:
             return []
         free = self.free_slots()
         if len(requests) > len(free):
             raise RuntimeError("no free slot")
         self._ensure_slot_tables()
+        if self.cache_impl == "paged":
+            return self._admit_many_paged(requests, free)
         k = len(requests)
         kpad = self._admit_pad(k, self.cfg.slots)
         assert kpad >= k, "more requests than slots"
@@ -329,12 +557,21 @@ class EngineCore:
             self._slot_scatter_many_j(self._slot_cache, self._slot_logits,
                                       self._slot_index, cache, logits,
                                       jnp.asarray(target, jnp.int32), idx)
+        self.stats["prefill_tokens"] += k * (self.ac.n_regions + 1)
+        self._record_admissions(target[:k], requests)
+        return target[:k]
+
+    def _record_admissions(self, slot_ids: List[int],
+                           requests: List[Request], scenes=None,
+                           private=None) -> None:
         log = self.stats["occupancy_log"]
-        for s, request in zip(target, requests):
+        for j, (s, request) in enumerate(zip(slot_ids, requests)):
             others_active = self.active_count()
-            self._slots[s] = _Slot(request=request,
-                                   l_ans=self.ac.answer_len(request.task),
-                                   tokens=[], active=True)
+            self._slots[s] = _Slot(
+                request=request, l_ans=self.ac.answer_len(request.task),
+                tokens=[], active=True,
+                scene=scenes[j] if scenes else None,
+                private_pages=private[j] if private else None)
             self.stats["admitted"] += 1
             if self._step_no > 0 and others_active > 0:
                 self.stats["mid_stream_refills"] += 1
@@ -342,7 +579,103 @@ class EngineCore:
         self._active_dev = None
         if len(log) > self._occupancy_cap:
             del log[:self._occupancy_cap // 2]
-        return target[:k]
+
+    # -- paged admission ------------------------------------------------
+    def _prefill_prefixes(self, miss: List[Tuple[Any, Request]],
+                          protect) -> None:
+        """Region-prefill the scenes in ``miss`` (one batched bucketed call),
+        scatter their KV into freshly allocated shared pages, and make them
+        resident in the prefix cache with their recurrent-state snapshots.
+        ``protect``: scenes of the whole admission batch — already-resident
+        prefixes the batch is about to acquire must survive this eviction."""
+        km = len(miss)
+        n_shared = self._n_shared_pages
+        self._prefix.evict_for(km * n_shared, need_entries=km,
+                               protect=protect)
+        kpad = self._admit_pad(km, self.cfg.slots)
+        images = jnp.asarray(np.stack(
+            [np.asarray(r.image) for _, r in miss]
+            + [np.asarray(miss[-1][1].image)] * (kpad - km)))
+        cache = self._prefill_prefix_j(images)
+        pages = np.full((kpad, n_shared), TRASH_PAGE, np.int32)
+        allocs = []
+        for i in range(km):
+            pg = self._pool.alloc(n_shared)
+            allocs.append(pg)
+            pages[i] = pg
+        self._slot_cache = self._prefix_scatter_j(
+            self._slot_cache, cache, jnp.asarray(pages.reshape(-1)))
+        state_tree = T.map_cache_kinds(self.tier.cfg, [cache],
+                                       kv=lambda _t: None, state=lambda t: t)
+        for i, (scene, _r) in enumerate(miss):
+            row = jax.tree.map(lambda x: x[:, i:i + 1], state_tree)
+            self._prefix.put(scene, allocs[i], row)
+        self.stats["prefix_misses"] += km
+        self.stats["prefill_tokens"] += km * self.ac.n_regions
+
+    def _admit_many_paged(self, requests: List[Request],
+                          free: List[int]) -> List[int]:
+        """Scene-shared admission: prefix pages are mapped read-only into
+        each new request's block table (refcount++), and only the 1-token
+        prompt suffix runs through the model — K queries over one scene
+        prefill the ``N_r`` region tokens once."""
+        k = len(requests)
+        scenes = [scene_key(r) for r in requests]
+        batch_scenes = set(scenes)
+        miss, seen = [], set()
+        for s_, r in zip(scenes, requests):
+            if s_ not in self._prefix and s_ not in seen:
+                miss.append((s_, r))
+                seen.add(s_)
+        if miss:
+            self._prefill_prefixes(miss, protect=batch_scenes)
+        self.stats["prefix_hits"] += k - len(miss)
+
+        # whole-batch private-page budget up front (protecting this batch's
+        # scenes), so no per-request allocation can fail mid-admission
+        self._prefix.evict_for(k * self._private_per_slot, need_entries=0,
+                               protect=batch_scenes)
+        target = free[:k]
+        ptoks = np.empty((k,), np.int32)
+        states, private = [], []
+        for i, (r, s_) in enumerate(zip(requests, scenes)):
+            entry = self._prefix.acquire(s_)
+            priv = self._pool.alloc(self._private_per_slot)
+            self._bt_np[target[i]] = list(entry.pages) + priv
+            ptoks[i] = self.ac.prompt_id(r.task, r.prompt)
+            states.append(entry.state)
+            private.append(priv)
+        self._bt_dev = None
+
+        kpad = self._admit_pad(k, self.cfg.slots)
+        admit_slots = np.asarray(target + [self.cfg.slots] * (kpad - k),
+                                 np.int32)
+        ptoks_pad = np.concatenate([ptoks,
+                                    np.repeat(ptoks[-1:], kpad - k)])
+        states_pad = states + [states[-1]] * (kpad - k)
+        prefix_state = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=1), *states_pad)
+
+        self._slot_logits, self._slot_cache, self._slot_index = \
+            self._paged_admit_j(self._slot_logits, self._slot_cache,
+                                self._slot_index, self._block_table_dev(),
+                                jnp.asarray(admit_slots),
+                                jnp.asarray(ptoks_pad, jnp.int32),
+                                prefix_state)
+        self.stats["prefill_tokens"] += k      # one prompt token per request
+        self._record_admissions(target, requests, scenes=scenes,
+                                private=private)
+        return target
+
+    def _release_slot(self, i: int) -> None:
+        slot = self._slots[i]
+        self._slots[i] = _Slot()
+        self._active_dev = None
+        if self.cache_impl == "paged" and slot.private_pages is not None:
+            self._pool.free(slot.private_pages)
+            self._prefix.release(slot.scene)
+            self._bt_np[i] = TRASH_PAGE
+            self._bt_dev = None
 
     def step(self) -> List[Tuple[Request, np.ndarray]]:
         """Advance every active slot one token; return finished requests.
@@ -356,6 +689,7 @@ class EngineCore:
         toks, self._slot_logits, self._slot_cache, self._slot_index = \
             self._slot_step_j(self._slot_logits, self._slot_cache,
                               self._slot_index, self._active_dev,
+                              *self._step_args(),
                               answer_vocab=self.cfg.answer_vocab)
         toks_np = np.asarray(toks)
         self._step_no += 1
@@ -367,7 +701,50 @@ class EngineCore:
             if len(slot.tokens) >= slot.l_ans:
                 finished.append((slot.request,
                                  np.asarray(slot.tokens, np.int32)))
-                self._slots[i] = _Slot()
-                self._active_dev = None
+                self._release_slot(i)
                 self.stats["finished"] += 1
         return finished
+
+    # ------------------------------------------------------------------
+    def kv_stats(self) -> Dict[str, Any]:
+        """KV-cache footprint of the slot table.
+
+        ``kv_bytes_per_slot``: dense — the reserved worst-case slice every
+        slot holds; paged — each active slot's private pages plus its
+        *amortised* share of the prefix pages it maps (idle engines report
+        the reserved-page equivalent).  ``prefix_hit_rate`` is over all
+        slot-path admissions so far."""
+        self._ensure_slot_tables()
+        kv_bytes = []
+        T.map_cache_kinds(
+            self.tier.cfg, [self._slot_cache],
+            kv=lambda t: kv_bytes.append(sum(
+                x.size * x.dtype.itemsize for x in jax.tree.leaves(t))),
+            state=lambda t: None)
+        total = sum(kv_bytes)
+        out: Dict[str, Any] = {"cache_impl": self.cache_impl,
+                               "kv_bytes_total": int(total)}
+        adm = self.stats["prefix_hits"] + self.stats["prefix_misses"]
+        out["prefix_hit_rate"] = (self.stats["prefix_hits"] / adm
+                                  if adm else 0.0)
+        out["prefill_tokens"] = self.stats["prefill_tokens"]
+        if self.cache_impl == "dense":
+            out["kv_bytes_per_slot"] = int(total // self.cfg.slots)
+            return out
+        page_bytes = total // self._n_pages
+        out.update(page_size=self._page_size, n_pages=self._n_pages,
+                   page_bytes=int(page_bytes),
+                   pages_in_use=self._pool.pages_in_use,
+                   **{f"prefix_{k}": v for k, v in
+                      self._prefix.stats().items()})
+        active = [s for s in self._slots if s.active]
+        if active:
+            pages = 0.0
+            for s in active:
+                entry = self._prefix.get(s.scene)
+                pages += (self._private_per_slot
+                          + self._n_shared_pages / max(entry.users, 1))
+            out["kv_bytes_per_slot"] = int(page_bytes * pages / len(active))
+        else:
+            out["kv_bytes_per_slot"] = int(page_bytes * self._pages_per_slot)
+        return out

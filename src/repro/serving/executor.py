@@ -145,8 +145,8 @@ class CascadeExecutor:
 
     # ------------------------------------------------------------------
     def run_serve(self, policy: CascadePolicy, task: str, images, prompts,
-                  answer_vocab: int, allow_offload: bool = True
-                  ) -> ExecutionResult:
+                  answer_vocab: int, allow_offload: bool = True,
+                  scene: Optional[Any] = None) -> ExecutionResult:
         """Batch-of-one execution with real early exits (the server's mode).
 
         Decisions take effect: onboard decoding aborts at the exit stage and
@@ -154,14 +154,19 @@ class CascadeExecutor:
         ``allow_offload`` is False (link down) an offload verdict degrades to
         onboard completion — the remaining answer tokens are decoded from the
         existing cache (or a full onboard pass if the exit came before any
-        decoding)."""
+        decoding).  ``scene`` (a stable scene key, see
+        ``serving.request.scene_key``) lets queries fanning out over one
+        captured scene reuse the satellite encode V(x)/E(T) through the
+        shared core's scene-keyed memo instead of re-encoding per request —
+        the encode is deterministic, so decisions are unchanged."""
         assert images.shape[0] == 1, "serve mode is per-request"
         l_ans = self.ac.answer_len(task)
         plan = policy.stage_plan(task, l_ans)
 
         rf = tf = vis = None
         if policy.needs_encode:
-            rf, tf, vis = self.sat_core.encode(task, images, prompts)
+            rf, tf, vis = self.sat_core.encode_cached(task, images, prompts,
+                                                      scene=scene)
 
         mask0, s0 = policy.decide_initial(task, 1, vis)
         exit_stage = 0 if bool(np.asarray(mask0)[0]) else -1

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from typing import Any, Dict, Optional
 
@@ -25,6 +26,27 @@ class Request:
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     t_arrival: float = 0.0
     max_new_tokens: Optional[int] = None
+    #: Identity of the captured scene this request queries.  Queries over
+    #: the same scene share image-region work (prefix KV pages in the paged
+    #: engine, encode reuse in the serve path).  ``None`` → derived from the
+    #: image pixels by ``scene_key``.
+    scene_id: Optional[Any] = None
+
+
+def scene_key(req: Request) -> Any:
+    """Stable per-scene key: ``req.scene_id`` when the producer assigned one
+    (the satellite knows which capture a query targets), else a content hash
+    of the image pixels.  Memoised on the request — admission is a hot path.
+    """
+    if req.scene_id is not None:
+        return req.scene_id
+    key = getattr(req, "_scene_key", None)
+    if key is None:
+        a = np.ascontiguousarray(np.asarray(req.image))
+        h = hashlib.sha1(str((a.shape, a.dtype.str)).encode())
+        h.update(a.tobytes())
+        key = req._scene_key = h.hexdigest()
+    return key
 
 
 @dataclasses.dataclass

@@ -121,7 +121,10 @@ def test_batched_slot_step_matches_vmap_token_for_token(sat_system):
 
 def test_admit_many_is_one_batched_prefill(sat_system):
     """K requests admit in ONE fixed-shape prefill + scatter, land in K
-    distinct free slots, and then decode exactly like K sequential admits."""
+    distinct free slots, and then decode exactly like K sequential admits.
+    Under the default paged cache the one batched prefill is the *scene
+    prefix* prefill (the requests are three distinct scenes); the dense
+    full-prefix prefill never runs on the slot path."""
     params, cfg, ac, data = sat_system
     from repro.core.cascade import TierModel
     from repro.serving.engine_core import EngineCore, EngineCoreConfig
@@ -130,16 +133,18 @@ def test_admit_many_is_one_batched_prefill(sat_system):
                       EngineCoreConfig(slots=4, answer_vocab=9))
     reqs = [Request(task="vqa", image=data["images"][i],
                     prompt=int(data["prompts"][i]) % 2) for i in range(3)]
-    calls = {"n": 0}
-    orig = core._prefill_j
+    calls = {"prefix": 0, "dense": 0}
 
-    def counting_prefill(*a, **kw):
-        calls["n"] += 1
-        return orig(*a, **kw)
+    def counting(fn, key):
+        def wrapped(*a, **kw):
+            calls[key] += 1
+            return fn(*a, **kw)
+        return wrapped
 
-    core._prefill_j = counting_prefill
+    core._prefill_prefix_j = counting(core._prefill_prefix_j, "prefix")
+    core._prefill_j = counting(core._prefill_j, "dense")
     slot_ids = core.admit_many(reqs)
-    assert calls["n"] == 1                      # ONE prefill for all three
+    assert calls == {"prefix": 1, "dense": 0}   # ONE prefill for all three
     assert sorted(slot_ids) == slot_ids and len(set(slot_ids)) == 3
     assert core.active_count() == 3
     out = {}
