@@ -24,6 +24,16 @@ the length vector so the page indirection happens in the BlockSpec index map
 dense kernel unchanged — logical column indices, masks and block skipping
 are identical).  Shared prefix pages can therefore appear in many rows'
 tables at zero extra cost.
+
+Both kernels generalise to **multi-token query chunks** (``q_len > 1``): the
+speculative-decoding verifier scores a γ+1-token draft chunk per sequence in
+ONE pass, so the row axis of the query block becomes ``q_len · group`` rows
+(token-major) and the mask is causal *within the chunk* — chunk token ``t``
+(rows ``t·group .. (t+1)·group``) sees logical columns
+``< cache_len - (q_len - 1 - t)``, where ``cache_len`` counts valid slots
+INCLUDING all ``q_len`` chunk tokens.  ``q_len == 1`` reduces exactly to the
+single-token decode above; shared read-only prefix pages are untouched (the
+kernel never writes KV).
 """
 from __future__ import annotations
 
@@ -40,7 +50,8 @@ NEG_INF = -1e30
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
                    l_ref, *, scale: float, window: int,
-                   softcap: Optional[float], kv_blk: int, n_kv: int):
+                   softcap: Optional[float], kv_blk: int, n_kv: int,
+                   q_len: int = 1, group: int = 0):
     ib = pl.program_id(0)
     ikv = pl.program_id(2)
     cache_len = len_ref[ib]
@@ -51,13 +62,17 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Skip blocks entirely outside [lo, cache_len).
-    lo = jnp.maximum(cache_len - window, 0) if window > 0 else 0
+    # Skip blocks entirely outside [lo, cache_len).  For a multi-token chunk
+    # the earliest row (chunk token 0) ends at cache_len - (q_len - 1), so
+    # the windowed lower bound widens by the chunk length; the upper bound is
+    # the last row's cache_len either way.
+    lo = (jnp.maximum(cache_len - window - (q_len - 1), 0)
+          if window > 0 else 0)
     needed = (ikv * kv_blk < cache_len) & ((ikv + 1) * kv_blk > lo)
 
     @pl.when(needed)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)           # (group, hd)
+        q = q_ref[0, 0].astype(jnp.float32)           # (q_len·group, hd)
         k = k_ref[0, 0].astype(jnp.float32)           # (kv_blk, hd)
         v = v_ref[0, 0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -65,14 +80,27 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
         cols = ikv * kv_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = cols < cache_len
+        if q_len == 1:
+            eff_len = cache_len
+        else:
+            # causal within the chunk: score row r belongs to chunk token
+            # t = r // group whose effective valid length is
+            # cache_len - (q_len - 1 - t)
+            t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+            eff_len = cache_len - (q_len - 1) + t
+        mask = cols < eff_len
         if window > 0:
-            mask &= cols >= cache_len - window
+            mask &= cols >= eff_len - window
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
-        p = jnp.exp(s - m_new[:, None])
+        # explicit zero for masked columns: a chunk row that is FULLY
+        # masked inside a needed block (0 < cache_len < q_len — an earlier
+        # chunk token of a nearly-empty row) has m_new == NEG_INF, where
+        # exp(s - m_new) alone would turn every masked score into 1 and
+        # emit mean(V) instead of the documented zeros
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
@@ -89,12 +117,17 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             cache_len: jax.Array, *, window: int = 0,
                             softcap: Optional[float] = None,
                             scale: Optional[float] = None,
-                            kv_blk: int = 256,
+                            kv_blk: int = 256, q_len: int = 1,
                             interpret: bool = False) -> jax.Array:
-    """q: (B, KH, group, hd); k, v: (B, KH, S, hd); cache_len: () or (B,)
-    int32 (per-sequence valid-slot counts) → (B, KH, group, hd)."""
-    b, kh, group, hd = q.shape
+    """q: (B, KH, q_len·group, hd) token-major rows; k, v: (B, KH, S, hd);
+    cache_len: () or (B,) int32 (per-sequence valid-slot counts INCLUDING
+    the q_len chunk tokens) → (B, KH, q_len·group, hd).  ``q_len > 1``
+    scores a multi-token chunk causally within the chunk (speculative
+    verify); ``q_len == 1`` is plain decode."""
+    b, kh, rows, hd = q.shape
     s = k.shape[2]
+    assert rows % q_len == 0
+    group = rows // q_len
     scale = scale if scale is not None else hd ** -0.5
     kv_blk = min(kv_blk, s)
     assert s % kv_blk == 0
@@ -102,22 +135,22 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
 
     kernel = functools.partial(
         _decode_kernel, scale=scale, window=window, softcap=softcap,
-        kv_blk=kv_blk, n_kv=n_kv)
+        kv_blk=kv_blk, n_kv=n_kv, q_len=q_len, group=group)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kh, n_kv),
         in_specs=[
-            pl.BlockSpec((1, 1, group, hd), lambda b_, h_, ik, *_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, rows, hd), lambda b_, h_, ik, *_: (b_, h_, 0, 0)),
             pl.BlockSpec((1, 1, kv_blk, hd), lambda b_, h_, ik, *_: (b_, h_, ik, 0)),
             pl.BlockSpec((1, 1, kv_blk, hd), lambda b_, h_, ik, *_: (b_, h_, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, group, hd),
+        out_specs=pl.BlockSpec((1, 1, rows, hd),
                                lambda b_, h_, ik, *_: (b_, h_, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((group, hd), jnp.float32),
-            pltpu.VMEM((group,), jnp.float32),
-            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
         ],
     )
 
@@ -125,7 +158,7 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kh, group, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kh, rows, hd), q.dtype),
         interpret=interpret,
     )(cache_len, q, k, v)
 
@@ -145,41 +178,47 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
                                   cache_len: jax.Array, *, window: int = 0,
                                   softcap: Optional[float] = None,
                                   scale: Optional[float] = None,
+                                  q_len: int = 1,
                                   interpret: bool = False) -> jax.Array:
-    """q: (B, KH, group, hd); k_pool, v_pool: (n_pages, KH, page, hd);
-    block_table: (B, P) int32 physical page per logical block; cache_len:
-    () or (B,) int32 → (B, KH, group, hd).
+    """q: (B, KH, q_len·group, hd) token-major rows; k_pool, v_pool:
+    (n_pages, KH, page, hd); block_table: (B, P) int32 physical page per
+    logical block; cache_len: () or (B,) int32 (INCLUDING the q_len chunk
+    tokens) → (B, KH, q_len·group, hd).
 
     Logical KV position ``s`` of row ``b`` lives at
     ``pool[block_table[b, s // page], :, s % page]``; masks/skipping use the
     logical position, so the result equals dense decode over the gathered
-    cache."""
-    b, kh, group, hd = q.shape
+    cache.  ``q_len > 1`` is the multi-token speculative scoring chunk,
+    causal within the chunk; the kernel only ever reads the pools, so shared
+    read-only prefix pages are untouched."""
+    b, kh, rows, hd = q.shape
     page = k_pool.shape[2]
     n_blocks = block_table.shape[1]
+    assert rows % q_len == 0
+    group = rows // q_len
     scale = scale if scale is not None else hd ** -0.5
 
     kernel = functools.partial(
         _paged_decode_kernel, scale=scale, window=window, softcap=softcap,
-        kv_blk=page, n_kv=n_blocks)
+        kv_blk=page, n_kv=n_blocks, q_len=q_len, group=group)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kh, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1, group, hd),
+            pl.BlockSpec((1, 1, rows, hd),
                          lambda b_, h_, ip, tbl, lens: (b_, h_, 0, 0)),
             pl.BlockSpec((1, 1, page, hd),
                          lambda b_, h_, ip, tbl, lens: (tbl[b_, ip], h_, 0, 0)),
             pl.BlockSpec((1, 1, page, hd),
                          lambda b_, h_, ip, tbl, lens: (tbl[b_, ip], h_, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, group, hd),
+        out_specs=pl.BlockSpec((1, 1, rows, hd),
                                lambda b_, h_, ip, tbl, lens: (b_, h_, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((group, hd), jnp.float32),
-            pltpu.VMEM((group,), jnp.float32),
-            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
+            pltpu.VMEM((rows,), jnp.float32),
         ],
     )
 
@@ -188,6 +227,6 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kh, group, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kh, rows, hd), q.dtype),
         interpret=interpret,
     )(block_table, cache_len, q, k_pool, v_pool)

@@ -174,6 +174,81 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# multi-token scoring attention (speculative verify; q_len = γ+1 per row)
+# ---------------------------------------------------------------------------
+
+def _chunk_to_rows(q: jax.Array, kh: int):
+    """(B, T, H, hd) → (B, KH, T·group, hd) token-major rows for the
+    multi-token kernels (row r ↦ chunk token r // group)."""
+    b, t, h, hd = q.shape
+    group = h // kh
+    qg = q.reshape(b, t, kh, group, hd).transpose(0, 2, 1, 3, 4)
+    return qg.reshape(b, kh, t * group, hd)
+
+
+def _rows_to_chunk(o: jax.Array, t: int, h: int):
+    b, kh, rows, hd = o.shape
+    group = rows // t
+    return o.reshape(b, kh, t, group, hd).transpose(0, 2, 1, 3, 4) \
+            .reshape(b, t, h, hd)
+
+
+def multi_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           cache_len: jax.Array, *, window: int = 0,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           impl: Impl = None) -> jax.Array:
+    """q: (B, T, H, hd) — T-token chunk at logical positions
+    ``cache_len - T .. cache_len - 1``, causal within the chunk; k, v:
+    (B, S, K, hd); cache_len: () or (B,) int32 INCLUDING the chunk
+    → (B, T, H, hd).  The speculative verifier's dense scoring op."""
+    kind, interp = _resolve(impl)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if kind in ("ref", "flash_structured"):
+        with jax.named_scope("KERNELREGION_decode"):
+            return ref.multi_decode_attention(q, k, v, cache_len,
+                                              window=window, softcap=softcap,
+                                              scale=scale)
+    b, t, h, hd = q.shape
+    kh = k.shape[2]
+    o = decode_attention_pallas(_chunk_to_rows(q, kh),
+                                k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3), cache_len,
+                                window=window, softcap=softcap, scale=scale,
+                                q_len=t, interpret=interp)
+    return _rows_to_chunk(o, t, h)
+
+
+def paged_multi_decode_attention(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, block_table: jax.Array,
+                                 cache_len: jax.Array, *, window: int = 0,
+                                 softcap: Optional[float] = None,
+                                 scale: Optional[float] = None,
+                                 impl: Impl = None) -> jax.Array:
+    """q: (B, T, H, hd); k_pool, v_pool: (n_pages, page, K, hd);
+    block_table: (B, P) int32; cache_len: () or (B,) int32 INCLUDING the
+    chunk → (B, T, H, hd).
+
+    The speculative verifier's scoring op: ONE call emits attention for all
+    T = γ+1 draft positions of every row through its block table (shared
+    read-only prefix pages fetched once per page, never written)."""
+    kind, interp = _resolve(impl)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if kind in ("ref", "flash_structured"):
+        with jax.named_scope("KERNELREGION_decode"):
+            return ref.paged_multi_decode_attention(
+                q, k_pool, v_pool, block_table, cache_len, window=window,
+                softcap=softcap, scale=scale)
+    b, t, h, hd = q.shape
+    kh = k_pool.shape[2]
+    o = paged_decode_attention_pallas(
+        _chunk_to_rows(q, kh), k_pool.transpose(0, 2, 1, 3),
+        v_pool.transpose(0, 2, 1, 3), block_table, cache_len, window=window,
+        softcap=softcap, scale=scale, q_len=t, interpret=interp)
+    return _rows_to_chunk(o, t, h)
+
+
+# ---------------------------------------------------------------------------
 # chunked gated linear attention (model layout (B, S, H, d))
 # ---------------------------------------------------------------------------
 

@@ -372,6 +372,64 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# multi_decode_attention — γ+1-token speculative scoring chunk per sequence
+# ---------------------------------------------------------------------------
+
+def multi_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           cache_len: jax.Array, *, window: int = 0,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None) -> jax.Array:
+    """q: (B, T, H, hd) — a T-token chunk whose tokens sit at logical
+    positions ``cache_len - T .. cache_len - 1``; k, v: (B, S, KH, hd);
+    cache_len: () or (B,) int32 valid-slot counts INCLUDING the chunk
+    → (B, T, H, hd).
+
+    Causal within the chunk: chunk token ``t`` attends to columns
+    ``< cache_len - (T - 1 - t)``.  ``T == 1`` reduces exactly to
+    ``decode_attention``; rows whose effective length is ≤ 0 (e.g. padding
+    slots with ``cache_len == 0``) output zeros, matching the Pallas
+    kernel's clamped-denominator finalize."""
+    b, t, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    group = h // kh
+    scale = scale if scale is not None else hd ** -0.5
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    qf = q.astype(jnp.float32).reshape(b, t, kh, group, hd)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qf,
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = jnp.arange(s)[None, None, :]                       # (1, 1, S)
+    eff = cache_len[:, None] - (t - 1) + jnp.arange(t)[None, :]  # (B, T)
+    valid = pos < eff[:, :, None]                            # (B, T, S)
+    if window > 0:
+        valid &= pos > (eff[:, :, None] - 1 - window)
+    vmask = valid[:, None, None]                             # (B,1,1,T,S)
+    scores = jnp.where(vmask, scores, NEG_INF)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m) * vmask
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, t, h, hd).astype(q.dtype)
+
+
+def paged_multi_decode_attention(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, block_table: jax.Array,
+                                 cache_len: jax.Array, *, window: int = 0,
+                                 softcap: Optional[float] = None,
+                                 scale: Optional[float] = None) -> jax.Array:
+    """Oracle for the multi-token page-indirect scoring kernel: gather every
+    row's pages into a dense cache, then chunk-causal ragged attention.
+
+    q: (B, T, H, hd); k_pool, v_pool: (n_pages, page, KH, hd); block_table:
+    (B, P) int32; cache_len: () or (B,) int32 → (B, T, H, hd)."""
+    k = gather_pages(k_pool, block_table)
+    v = gather_pages(v_pool, block_table)
+    return multi_decode_attention(q, k, v, cache_len, window=window,
+                                  softcap=softcap, scale=scale)
+
+
+# ---------------------------------------------------------------------------
 # ssm_scan — chunked gated linear attention (Mamba-2 SSD / mLSTM core)
 # ---------------------------------------------------------------------------
 

@@ -87,30 +87,33 @@ def embed_inputs(p: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array]
 
 def embed_decode(p: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array],
                  index: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """One-token embedding for decode.
+    """Token embedding for decode / verify chunks.
 
-    ``index``: () or (B,) int32 absolute cache slot — a vector gives each
-    batch row its own RoPE position (ragged slot-table decode where
-    sequences were admitted at different times)."""
+    ``inputs`` holds (B, T) tokens — T = 1 for plain decode, γ+1 for a
+    speculative verify chunk.  ``index``: () or (B,) int32 absolute cache
+    slot of the FIRST chunk token; token ``t`` of a row sits at
+    ``index + t`` — a vector index gives each batch row its own RoPE
+    positions (ragged slot-table decode where sequences were admitted at
+    different times)."""
     if cfg.frontend == "audio":
-        codes = inputs["codes"]                        # (B, 1, K)
-        b = codes.shape[0]
-        x = jnp.zeros((b, 1, cfg.d_model), p["tok"].dtype)
+        codes = inputs["codes"]                        # (B, T, K)
+        b, t = codes.shape[:2]
+        x = jnp.zeros((b, t, cfg.d_model), p["tok"].dtype)
         for i in range(cfg.num_codebooks):
             x = x + jnp.take(p["tok"][i], codes[..., i], axis=0)
     else:
-        tokens = inputs["tokens"]                      # (B, 1)
-        b = tokens.shape[0]
+        tokens = inputs["tokens"]                      # (B, T)
+        b, t = tokens.shape
         x = jnp.take(p["tok"], tokens, axis=0)
     index = jnp.asarray(index)
+    per_row = index[:, None] if index.ndim == 1 else index
+    pos = jnp.broadcast_to(per_row + jnp.arange(t), (b, t))
     if cfg.frontend == "vision" and cfg.use_mrope:
         side = max(int(math.isqrt(max(cfg.num_patches, 1))), 1)
-        t = side + (index - cfg.num_patches)
-        t = t[None, :, None] if t.ndim == 1 else t
-        positions = jnp.broadcast_to(t, (3, b, 1))
+        positions = jnp.broadcast_to((side + (pos - cfg.num_patches))[None],
+                                     (3, b, t))
     else:
-        per_row = index[:, None] if index.ndim == 1 else index
-        positions = jnp.broadcast_to(per_row, (b, 1))
+        positions = pos
     return x, positions
 
 

@@ -148,6 +148,34 @@ def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
                 "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
                 "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1),
             }
+    elif mode == "verify":  # speculative scoring chunk: s == γ+1
+        # Write the s chunk tokens at per-row positions idx..idx+s-1 and
+        # attend with ONE multi-token scoring call, causal within the chunk.
+        # Rollback of a rejected suffix is free: the rejected (page, offset)
+        # slots are simply re-written by the next chunk and the ragged masks
+        # never read past the committed length.  Shared read-only prefix
+        # pages cover positions the chunk can never touch (engine
+        # invariant: chunks start at >= N_r, see serving/kv_pool).
+        assert cache is not None and cache_index is not None
+        idx = jnp.broadcast_to(jnp.asarray(cache_index), (b,))
+        pos = idx[:, None] + jnp.arange(s)[None, :]           # (B, S)
+        if block_table is not None:
+            page = cache["k"].shape[1]
+            pages = jnp.take_along_axis(block_table, pos // page, axis=1)
+            off = pos % page
+            ck = cache["k"].at[pages, off].set(k)
+            cv = cache["v"].at[pages, off].set(v)
+            new_cache = {"k": ck, "v": cv}
+            o = ops.paged_multi_decode_attention(
+                q, ck, cv, block_table, idx + s, window=window,
+                softcap=cfg.attn_softcap)
+        else:
+            rows = jnp.arange(b)[:, None]
+            ck = cache["k"].at[rows, pos].set(k)
+            cv = cache["v"].at[rows, pos].set(v)
+            new_cache = {"k": ck, "v": cv}
+            o = ops.multi_decode_attention(q, ck, cv, idx + s, window=window,
+                                           softcap=cfg.attn_softcap)
     else:  # decode: s == 1
         assert cache is not None and cache_index is not None
         idx = jnp.asarray(cache_index)

@@ -161,6 +161,15 @@ def map_cache_kinds(cfg: ArchConfig, caches, *, kv, state) -> Tuple:
 def _apply_block(p: Params, x: jax.Array, *, cfg: ArchConfig,
                  spec: BlockSpec, cos, sin, cache, cache_index, mode: str,
                  block_table=None) -> Tuple[jax.Array, Any, jax.Array]:
+    if mode == "verify" and spec.kind != ATTN:
+        # Recurrent mixers fold the whole chunk into one state — rejecting a
+        # draft suffix would need per-position state snapshots, so rollback
+        # is only free for attention KV (a pure length decrement).  The
+        # engine gates speculative decoding on all-ATTN stacks; this is the
+        # model-level backstop.
+        raise NotImplementedError(
+            f"verify mode needs rollback-free attention blocks, got "
+            f"{spec.kind!r}")
     h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
     if spec.kind == ATTN:
         h, new_cache = L.attention(p["mixer"], h, cfg=cfg, window=spec.window,
@@ -350,6 +359,32 @@ def decode_step(params: Params, cfg: ArchConfig, cache: Tuple,
                                  block_table=block_table)
     logits = frontends.logits_from_hidden(params["embed"], cfg, x[:, -1])
     return logits, new_cache
+
+
+def verify_step(params: Params, cfg: ArchConfig, cache: Tuple,
+                inputs: Dict[str, jax.Array], index: jax.Array,
+                block_table: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Tuple]:
+    """Score a T = γ+1-token draft chunk in ONE step — the speculative
+    verifier.  ``inputs`` holds (B, T) chunk tokens whose first token sits
+    at cache slot ``index`` (() or (B,) int32; per-row ragged positions);
+    KV for all T tokens is written at (page, offset) through
+    ``block_table`` when given (or scattered densely), and attention is
+    causal within the chunk via the multi-token scoring kernel.
+
+    Returns (logits (B, T, V), new_cache): logits[:, t] conditions on the
+    chunk prefix ..t, so the engine can compute the longest accepted draft
+    prefix from one call.  Rolling back a rejected suffix is a pure per-row
+    index decrement — drafts only ever write positions the row owns, and
+    the ragged masks never read past the committed length, so the next
+    chunk simply overwrites them (no page copies).  Only defined for
+    attention-only stacks (recurrent state has no free rollback)."""
+    x, positions = frontends.embed_decode(params["embed"], cfg, inputs,
+                                          index)
+    x, _, new_cache = _run_stack(params, cfg, x, positions, mode="verify",
+                                 cache=cache, cache_index=index,
+                                 block_table=block_table)
+    return frontends.logits_from_hidden(params["embed"], cfg, x), new_cache
 
 
 def hidden_features(params: Params, cfg: ArchConfig,

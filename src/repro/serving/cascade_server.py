@@ -27,7 +27,8 @@ from repro.core.latency import LatencyModel, DEFAULT_LINK
 from repro.network.link import LinkModel
 from repro.network.orbit import ContactPlan
 from repro.network.scheduler import TransmissionScheduler
-from repro.serving.engine_core import shared_core
+from repro.serving.engine_core import (EngineCore, EngineCoreConfig,
+                                       shared_core)
 from repro.serving.executor import CascadeExecutor
 from repro.serving.offload import OffloadPipeline
 from repro.serving.policy import ProgressiveConfidencePolicy
@@ -41,7 +42,8 @@ class CascadeServer:
                  latency: Optional[LatencyModel] = None,
                  link: LinkModel = DEFAULT_LINK,
                  plan: Optional[ContactPlan] = None,
-                 link_up: bool = True, tx_jitter: bool = False):
+                 link_up: bool = True, tx_jitter: bool = False,
+                 spec_gamma: int = 0):
         self.sat, self.gs = sat, gs
         self.ac, self.conf = adapter_cfg, conf_params
         self.cc = cascade_cfg or CascadeConfig()
@@ -51,6 +53,28 @@ class CascadeServer:
         self.scheduler = TransmissionScheduler(self.plan, self.link)
         self.link_up = link_up
         self.tx_jitter = tx_jitter
+        # spec_gamma > 0: offloaded requests decode speculatively at the GS
+        # — the satellite tier drafts (and its piggybacked partial answer
+        # seeds the first verify chunks); outputs stay token-for-token the
+        # greedy engine's, so decisions and the golden path are unchanged.
+        self._gs_spec_core = None
+        if spec_gamma:
+            self._gs_spec_core = EngineCore(
+                gs, adapter_cfg,
+                EngineCoreConfig(slots=1, answer_vocab=self.cc.answer_vocab,
+                                 spec_gamma=spec_gamma),
+                draft=sat)
+
+    # ------------------------------------------------------------------
+    def warmup(self) -> None:
+        """Pre-compile the speculative GS core's slot-path executables (the
+        spec step variants + drafter buckets) so the first offloaded
+        request doesn't pay compile time mid-serve — call ahead of a
+        contact window when wall-clock latency matters.  No-op when
+        ``spec_gamma == 0`` (the greedy batch path compiles lazily per
+        shape, exactly as before this option existed)."""
+        if self._gs_spec_core is not None:
+            self._gs_spec_core.warmup()
 
     # ------------------------------------------------------------------
     def _pipeline(self) -> OffloadPipeline:
@@ -59,8 +83,8 @@ class CascadeServer:
                                link=self.link, scheduler=self.scheduler)
 
     def _executor(self, pipeline: OffloadPipeline) -> CascadeExecutor:
-        return CascadeExecutor(shared_core(self.sat, self.ac),
-                               shared_core(self.gs, self.ac),
+        gs_core = self._gs_spec_core or shared_core(self.gs, self.ac)
+        return CascadeExecutor(shared_core(self.sat, self.ac), gs_core,
                                self.ac, pipeline)
 
     def _policy(self) -> ProgressiveConfidencePolicy:

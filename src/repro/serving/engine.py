@@ -40,15 +40,23 @@ class EngineConfig:
     cache_impl: str = "paged"           # "paged" | "dense" (oracle)
     page_size: int = 8                  # KV tokens per page (paged only)
     prefix_cache_scenes: Optional[int] = None   # resident scenes (→ slots)
+    #: speculative decoding: γ compact-model draft tokens verified per step
+    #: (0 = off).  Needs a ``draft`` tier passed to ``InferenceEngine``.
+    spec_gamma: int = 0
 
 
 class InferenceEngine:
-    """Single-tier engine over an EO-adapted backbone."""
+    """Single-tier engine over an EO-adapted backbone.
+
+    With ``EngineConfig(spec_gamma=γ)`` and a compact ``draft`` tier the
+    engine decodes speculatively: the draft model proposes γ tokens per
+    slot and this tier verifies them in one multi-token scoring step —
+    token streams stay exactly the greedy streams (greedy acceptance)."""
 
     def __init__(self, params, cfg: ArchConfig,
                  adapter_cfg: EO.EOAdapterConfig,
                  engine_cfg: Optional[EngineConfig] = None,
-                 tier: str = "satellite"):
+                 tier: str = "satellite", draft: Optional[TierModel] = None):
         self.params = params
         self.cfg = cfg
         self.ac = adapter_cfg
@@ -61,7 +69,9 @@ class InferenceEngine:
                              step_impl=self.ec.step_impl,
                              cache_impl=self.ec.cache_impl,
                              page_size=self.ec.page_size,
-                             prefix_cache_scenes=self.ec.prefix_cache_scenes))
+                             prefix_cache_scenes=self.ec.prefix_cache_scenes,
+                             spec_gamma=self.ec.spec_gamma),
+            draft=draft)
 
     def warmup(self) -> None:
         """Pre-compile the slot path (decode step + every admission bucket)

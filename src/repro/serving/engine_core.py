@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import ATTN
 from repro.core import eo_adapter as EO
 from repro.models import transformer as T
 from repro.serving.kv_pool import KVPagePool, PrefixCache, TRASH_PAGE
@@ -72,6 +73,14 @@ class EngineCoreConfig:
     #: (None → slots); bounds the pool at
     #: slots·pages_per_slot + scenes·shared_pages_per_scene
     prefix_cache_scenes: Optional[int] = None
+    #: speculative decoding: γ draft tokens per slot verified by ONE
+    #: multi-token scoring step of this (regular) tier; the compact draft
+    #: tier is passed to the ``EngineCore`` constructor.  0 = off — the
+    #: non-speculative engine stays the token-for-token oracle, exactly as
+    #: ``step_impl="vmap"`` and ``cache_impl="dense"`` are oracles.
+    #: Requires the batched paged engine and attention-only stacks (paged
+    #: rollback is only free for attention KV).
+    spec_gamma: int = 0
 
 
 @dataclasses.dataclass
@@ -82,6 +91,14 @@ class _Slot:
     active: bool = False
     scene: Optional[Any] = None         # paged: resident prefix this slot maps
     private_pages: Optional[List[int]] = None
+    #: remaining piggybacked draft tokens (the satellite's answer riding the
+    #: offload payload), aligned with answer positions; dropped on the first
+    #: committed token that diverges from it
+    pending_drafts: Optional[List[int]] = None
+    #: speculative engines only: per-emitted-token answer-vocab probability
+    #: rows (the distribution each committed token was argmaxed from), so
+    #: ``generate_spec`` can honour ``generate``'s (tokens, probs) contract
+    probs: Optional[List[np.ndarray]] = None
 
 
 def shared_core(tier, adapter_cfg: EO.EOAdapterConfig) -> "EngineCore":
@@ -114,7 +131,8 @@ class EngineCore:
     """Jitted fixed-shape executor + slot table over one tier model."""
 
     def __init__(self, tier, adapter_cfg: EO.EOAdapterConfig,
-                 core_cfg: Optional[EngineCoreConfig] = None):
+                 core_cfg: Optional[EngineCoreConfig] = None,
+                 draft=None):
         self.tier = tier
         self.ac = adapter_cfg
         self.cfg = core_cfg or EngineCoreConfig()
@@ -130,6 +148,28 @@ class EngineCore:
         # the vmap oracle predates paging and steps the dense layout
         self.cache_impl = ("dense" if self.cfg.step_impl == "vmap"
                            else self.cfg.cache_impl)
+
+        self.draft = draft
+        if self.cfg.spec_gamma:
+            if self.cfg.spec_gamma < 1:
+                raise ValueError("spec_gamma must be >= 1 when set")
+            if draft is None:
+                raise ValueError("spec_gamma > 0 requires a compact draft "
+                                 "tier (the cascade's satellite model)")
+            if self.cfg.step_impl != "batched" or self.cache_impl != "paged":
+                raise ValueError("speculative decoding requires the batched "
+                                 "paged engine (spec=off is the oracle)")
+            for c in (tier.cfg, draft.cfg):
+                if any(s.kind != ATTN for s in c.block_pattern):
+                    raise ValueError(
+                        "speculative decoding requires attention-only "
+                        "stacks: recurrent state folds the whole chunk into "
+                        "one snapshot, so only attention KV rolls back for "
+                        "free (a per-row length decrement)")
+        # a verify chunk writes γ positions past the committed index, so
+        # spec engines reserve γ extra KV slots per row (rejected drafts
+        # land there and are overwritten by the next chunk)
+        self._spec_margin = self.cfg.spec_gamma
 
         params, cfg, ac = tier.params, tier.cfg, adapter_cfg
 
@@ -258,7 +298,8 @@ class EngineCore:
                 ps = math.gcd(ps, n_regions)
             self._page_size = ps
             self._n_shared_pages = n_regions // ps
-            self._pages_per_slot = -(-self._slot_max_len // ps)
+            self._pages_per_slot = -(-(self._slot_max_len
+                                       + self._spec_margin) // ps)
             self._private_per_slot = (self._pages_per_slot
                                       - self._n_shared_pages)
             scenes = (self.cfg.prefix_cache_scenes
@@ -352,7 +393,127 @@ class EngineCore:
             self._prefix_scatter_j = jax.jit(_prefix_scatter)
             self._paged_admit_j = jax.jit(_paged_admit)
 
+        # -- speculative-decoding machinery (spec_gamma > 0) ----------------
+        if self.cfg.spec_gamma:
+            gam = self.cfg.spec_gamma
+            dparams, dcfg = draft.params, draft.cfg
+            self._draft_max_len = self._slot_max_len + gam
+
+            def _draft_prefill(images, ptok, *, max_len):
+                """Drafter-side [regions | prompt] prefill: the compact
+                model mirrors the slot table on its own small dense cache
+                (no page pool — its KV is cheap and never shared)."""
+                return EO.prefill_tokens(dparams, dcfg, ac, images, ptok,
+                                         max_len)
+
+            def _draft_scatter(draft_cache, cache, slots):
+                """Gather+select scatter of K freshly-prefilled drafter rows
+                (same formulation as ``_slot_scatter_many``)."""
+                sel = slots[None, :] == jnp.arange(n_slots)[:, None]
+                hit = sel.any(axis=1)
+                src = jnp.argmax(sel, axis=1)
+
+                def put(full, new):
+                    gathered = jnp.take(new, src, axis=1)
+                    m = hit.reshape((1, -1) + (1,) * (full.ndim - 2))
+                    return jnp.where(m, gathered, full)
+
+                return jax.tree.map(put, draft_cache, cache)
+
+            def _verify_accept(chunk, slot_logits, slot_cache, slot_index,
+                               active, block_table, answer_vocab):
+                """ONE γ+1-token scoring step of the regular model + the
+                longest-accepted-prefix per row, entirely on device.
+                ``chunk``: (slots, γ+1) = [y₁ | d₁..d_γ] where y₁ is this
+                tier's own next token (free — argmax of the held logits)
+                and d_i are the drafts.  Greedy acceptance: d_i commits iff
+                it equals the verifier's argmax at its position, so the
+                committed stream is exactly the greedy stream.  Rollback is
+                the index update (idx += 1 + accepted): rejected positions
+                stay in row-private pages, are never attended (ragged masks
+                read < idx), and the next chunk overwrites them — no page
+                copies."""
+                logits_all, new_cache = T.verify_step(
+                    params["backbone"], cfg, slot_cache, {"tokens": chunk},
+                    slot_index, block_table=block_table)
+                gtok = jnp.argmax(logits_all[..., :answer_vocab],
+                                  axis=-1).astype(jnp.int32)   # (S, γ+1)
+                eq = (gtok[:, :gam] == chunk[:, 1:]).astype(jnp.int32)
+                acc = jnp.cumprod(eq, axis=1).sum(axis=1)      # (S,) prefix
+                n_commit = 1 + acc
+                new_logits = jnp.take_along_axis(
+                    logits_all, acc[:, None, None], axis=1)[:, 0]
+                new_index = jnp.where(active, slot_index + n_commit,
+                                      slot_index)
+                # distribution each chunk token was argmaxed from (the
+                # greedy ``decode_chunk`` contract): y₁ ← the held logits,
+                # chunk token j ← the verifier's logits after chunk[..j-1]
+                tok_probs = jax.nn.softmax(jnp.concatenate(
+                    [slot_logits[:, None, :answer_vocab],
+                     logits_all[:, :-1, :answer_vocab]], axis=1), axis=-1)
+                return n_commit, new_logits, new_cache, new_index, tok_probs
+
+            def _spec_step(slot_logits, slot_cache, slot_index, active,
+                           block_table, draft_cache, pending, pending_len,
+                           *, answer_vocab):
+                """Full speculative step: γ+1 compact-model draft feeds
+                (piggybacked ``pending`` drafts override the drafter's
+                argmax where provided and are fed THROUGH it, so its cache
+                tracks the committed stream), then verify-accept.  The
+                extra γ+1-th feed writes the last draft's KV so an
+                all-accepted step leaves the drafter's cache complete."""
+                y1 = jnp.argmax(slot_logits[:, :answer_vocab],
+                                axis=-1).astype(jnp.int32)
+
+                def body(carry, j):
+                    tok, dcache, i = carry
+                    dlogits, dcache = T.decode_step(
+                        dparams["backbone"], dcfg, dcache,
+                        {"tokens": tok[:, None]}, i)
+                    nxt = jnp.argmax(dlogits[:, :answer_vocab],
+                                     axis=-1).astype(jnp.int32)
+                    pig = jax.lax.dynamic_index_in_dim(
+                        pending, jnp.minimum(j, gam - 1), axis=1,
+                        keepdims=False)
+                    nxt = jnp.where(j < pending_len, pig, nxt)
+                    return (nxt, dcache, i + 1), nxt
+
+                (_, draft_cache, _), drafts = jax.lax.scan(
+                    body, (y1, draft_cache, slot_index), jnp.arange(gam + 1),
+                    unroll=gam + 1)
+                chunk = jnp.concatenate([y1[:, None], drafts[:gam].T], 1)
+                out = _verify_accept(chunk, slot_logits, slot_cache,
+                                     slot_index, active, block_table,
+                                     answer_vocab)
+                return (chunk,) + out + (draft_cache,)
+
+            def _spec_verify(slot_logits, slot_cache, slot_index, active,
+                             block_table, drafts, *, answer_vocab):
+                """Verify-only fast path: every active row's useful drafts
+                arrived piggybacked (the satellite's answer riding the
+                offload payload), so the drafter is skipped entirely.  Its
+                cache goes stale for these rows — that can only hurt LATER
+                local draft quality, never correctness: the verifier is the
+                sole authority on committed tokens."""
+                y1 = jnp.argmax(slot_logits[:, :answer_vocab],
+                                axis=-1).astype(jnp.int32)
+                chunk = jnp.concatenate([y1[:, None], drafts], 1)
+                return (chunk,) + _verify_accept(chunk, slot_logits,
+                                                 slot_cache, slot_index,
+                                                 active, block_table,
+                                                 answer_vocab)
+
+            self._draft_prefill_j = jax.jit(_draft_prefill,
+                                            static_argnames=("max_len",))
+            self._draft_scatter_j = jax.jit(_draft_scatter)
+            self._spec_step_j = jax.jit(_spec_step,
+                                        static_argnames=("answer_vocab",))
+            self._spec_verify_j = jax.jit(_spec_verify,
+                                          static_argnames=("answer_vocab",))
+
         self._slots: List[_Slot] = [_Slot() for _ in range(self.cfg.slots)]
+        self._draft_cache = None
+        self._spec_probs: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self._slot_cache = None
         self._slot_logits = None
         self._slot_index = None
@@ -368,6 +529,17 @@ class EngineCore:
             "encode_reuse": 0,          # serve-path scene-encode cache hits
             "occupancy_log": [],        # (step, active_slots_after_admit)
         }
+        if self.cfg.spec_gamma:
+            self.stats["spec"] = {
+                "steps": 0,             # speculative engine steps
+                "verify_only_steps": 0,  # steps that skipped the drafter
+                "slot_steps": 0,        # active-slot · step pairs
+                "drafted": 0,           # γ per active slot per step
+                "accepted": 0,          # drafts the verifier accepted
+                "committed": 0,         # tokens committed (1 + accepted)
+                "emitted": 0,           # committed tokens kept (≤ l_ans)
+                "piggybacked": 0,       # drafts supplied by the satellite
+            }
         self._occupancy_cap = 4096      # keep the log bounded on long runs
 
     # ------------------------------------------------------------------
@@ -435,6 +607,9 @@ class EngineCore:
             self._slot_logits = jnp.zeros((self.cfg.slots, cfg.vocab_size),
                                           jnp.float32)
             self._slot_index = jnp.zeros((self.cfg.slots,), jnp.int32)
+        if self.cfg.spec_gamma and self._draft_cache is None:
+            self._draft_cache = T.init_cache(self.draft.cfg, self.cfg.slots,
+                                             self._draft_max_len)
 
     def _block_table_dev(self) -> jax.Array:
         if self._bt_dev is None:
@@ -450,7 +625,11 @@ class EngineCore:
     def warmup(self) -> None:
         """Pre-compile every slot-path executable: the decode step plus, per
         power-of-two admission bucket, the dense prefill + scatter pair or
-        the paged prefix-prefill + page-scatter + prompt-suffix admit trio.
+        the paged admit trio (prefix prefill, page scatter, prompt-suffix
+        admit).  Speculative engines additionally compile the drafter's
+        prefill + scatter per bucket and BOTH jitted spec step variants
+        (draft-loop + verify, and the piggyback verify-only path), so the
+        first admission/verify of a serving loop never pays compile time.
 
         Traffic decides when each bucket size first occurs, so without this
         a compile can land mid-serve — exactly the stall the fixed-shape
@@ -480,6 +659,13 @@ class EngineCore:
                     self._block_table_dev(),
                     jnp.full((k,), self.cfg.slots, jnp.int32),
                     jnp.zeros((k,), jnp.int32), state)
+                if self.cfg.spec_gamma:
+                    _, dcache, _ = self._draft_prefill_j(
+                        images, jnp.zeros((k,), jnp.int32),
+                        max_len=self._draft_max_len)
+                    self._draft_scatter_j(self._draft_cache, dcache,
+                                          jnp.full((k,), self.cfg.slots,
+                                                   jnp.int32))
             else:
                 ptok = jnp.zeros((k,), jnp.int32)
                 logits, cache, idx = self._prefill_j(
@@ -499,6 +685,21 @@ class EngineCore:
 
     def _step_once_compiled(self):
         inactive = jnp.zeros((self.cfg.slots,), bool)
+        if self.cfg.spec_gamma:
+            # compile both speculative step variants (no slot matches, all
+            # block-table rows point at the trash page, outputs discarded)
+            pend = jnp.zeros((self.cfg.slots, self.cfg.spec_gamma),
+                             jnp.int32)
+            self._spec_step_j(self._slot_logits, self._slot_cache,
+                              self._slot_index, inactive,
+                              self._block_table_dev(), self._draft_cache,
+                              pend, jnp.zeros((self.cfg.slots,), jnp.int32),
+                              answer_vocab=self.cfg.answer_vocab)
+            self._spec_verify_j(self._slot_logits, self._slot_cache,
+                                self._slot_index, inactive,
+                                self._block_table_dev(), pend,
+                                answer_vocab=self.cfg.answer_vocab)
+            return
         self._slot_step_j(self._slot_logits, self._slot_cache,
                           self._slot_index, inactive, *self._step_args(),
                           answer_vocab=self.cfg.answer_vocab)
@@ -567,11 +768,22 @@ class EngineCore:
         log = self.stats["occupancy_log"]
         for j, (s, request) in enumerate(zip(slot_ids, requests)):
             others_active = self.active_count()
+            pending = None
+            if self.cfg.spec_gamma and request.draft_tokens is not None:
+                pending = [int(t) for t in
+                           np.asarray(request.draft_tokens).reshape(-1)]
+            # per-token probs are only materialised for requests that will
+            # read them (generate_spec) — plain slot-path serving never
+            # pays the host transfer / per-token appends
+            wants_probs = (self.cfg.spec_gamma
+                           and getattr(request, "_wants_probs", False))
             self._slots[s] = _Slot(
                 request=request, l_ans=self.ac.answer_len(request.task),
                 tokens=[], active=True,
                 scene=scenes[j] if scenes else None,
-                private_pages=private[j] if private else None)
+                private_pages=private[j] if private else None,
+                pending_drafts=pending,
+                probs=[] if wants_probs else None)
             self.stats["admitted"] += 1
             if self._step_no > 0 and others_active > 0:
                 self.stats["mid_stream_refills"] += 1
@@ -663,6 +875,18 @@ class EngineCore:
                                 jnp.asarray(ptoks_pad, jnp.int32),
                                 prefix_state)
         self.stats["prefill_tokens"] += k      # one prompt token per request
+        if self.cfg.spec_gamma:
+            # the drafter mirrors the slot table on its own dense cache: one
+            # bucketed [regions | prompt] prefill for the admitted batch
+            # (the compact model has no page pool — its KV is cheap)
+            imgs = jnp.asarray(np.stack(
+                [np.asarray(r.image) for r in requests]
+                + [np.asarray(requests[-1].image)] * (kpad - k)))
+            _, dcache, _ = self._draft_prefill_j(
+                imgs, jnp.asarray(ptoks_pad, jnp.int32),
+                max_len=self._draft_max_len)
+            self._draft_cache = self._draft_scatter_j(
+                self._draft_cache, dcache, jnp.asarray(admit_slots))
         self._record_admissions(target, requests, scenes=scenes,
                                 private=private)
         return target
@@ -678,10 +902,16 @@ class EngineCore:
             self._bt_dev = None
 
     def step(self) -> List[Tuple[Request, np.ndarray]]:
-        """Advance every active slot one token; return finished requests.
+        """Advance every active slot; return finished requests.
 
-        Finished slots free immediately — callers refill them from their
-        pending queue before the next ``step`` (continuous batching)."""
+        Non-speculative engines commit one token per slot; speculative
+        engines (``spec_gamma > 0``) commit the longest verified draft
+        prefix + 1 — up to γ+1 tokens per slot per step, token-for-token
+        identical to the greedy stream.  Finished slots free immediately —
+        callers refill them from their pending queue before the next
+        ``step`` (continuous batching)."""
+        if self.cfg.spec_gamma:
+            return self._step_spec()
         if self.active_count() == 0:
             return []
         if self._active_dev is None:
@@ -704,6 +934,152 @@ class EngineCore:
                 self._release_slot(i)
                 self.stats["finished"] += 1
         return finished
+
+    def _step_spec(self) -> List[Tuple[Request, np.ndarray]]:
+        """Speculative all-slot step: draft γ tokens per row (piggybacked
+        satellite answers supply them for free where available), verify all
+        of them in ONE multi-token scoring step of the regular model, and
+        commit each row's longest accepted prefix + 1.
+
+        Greedy acceptance makes the committed stream exactly the greedy
+        stream; rejected drafts cost nothing beyond the verify FLOPs —
+        paged rollback is a per-row index decrement (drafts only ever write
+        pages the slot owns)."""
+        if self.active_count() == 0:
+            return []
+        if self._active_dev is None:
+            self._active_dev = jnp.asarray([s.active for s in self._slots])
+        g = self.cfg.spec_gamma
+        n_slots = self.cfg.slots
+        pend = np.zeros((n_slots, g), np.int32)
+        plen = np.zeros((n_slots,), np.int32)
+        n_active = covered = 0
+        for i, slot in enumerate(self._slots):
+            if not slot.active:
+                continue
+            n_active += 1
+            p = slot.pending_drafts
+            if p:
+                # y₁ covers answer position len(tokens); draft j predicts
+                # position len(tokens) + j
+                off = len(slot.tokens) + 1
+                avail = p[off:off + g]
+                pend[i, :len(avail)] = avail
+                plen[i] = len(avail)
+            # drafts past the answer end are useless — a row is "covered"
+            # when piggybacked drafts span every position it still needs
+            useful = min(g, max(slot.l_ans - len(slot.tokens) - 1, 0))
+            if plen[i] >= useful:
+                covered += 1
+        sp = self.stats["spec"]
+        args = (self._slot_logits, self._slot_cache, self._slot_index,
+                self._active_dev, self._block_table_dev())
+        verify_only = covered == n_active
+        if verify_only:
+            chunk, n_commit, self._slot_logits, self._slot_cache, \
+                self._slot_index, tok_probs = self._spec_verify_j(
+                    *args, jnp.asarray(pend),
+                    answer_vocab=self.cfg.answer_vocab)
+            sp["verify_only_steps"] += 1
+        else:
+            chunk, n_commit, self._slot_logits, self._slot_cache, \
+                self._slot_index, tok_probs, self._draft_cache = \
+                self._spec_step_j(
+                    *args, self._draft_cache, jnp.asarray(pend),
+                    jnp.asarray(plen), answer_vocab=self.cfg.answer_vocab)
+        chunk_np = np.asarray(chunk)
+        n_np = np.asarray(n_commit)
+        probs_np = None
+        if any(s.active and s.probs is not None for s in self._slots):
+            probs_np = np.asarray(tok_probs)
+        self._step_no += 1
+        sp["steps"] += 1
+        sp["slot_steps"] += n_active
+        sp["piggybacked"] += int(plen.sum())
+        finished: List[Tuple[Request, np.ndarray]] = []
+        for i, slot in enumerate(self._slots):
+            if not slot.active:
+                continue
+            n = int(n_np[i])
+            # accept-rate accounting counts REAL drafts only: the drafter
+            # proposes γ per row, a verify-only step exactly the
+            # piggybacked plen[i] — the zero-padded tail of ``pend`` is not
+            # a draft, and an acceptance among padding (the verifier's
+            # argmax happening to be 0) must not read as agreement
+            real = int(plen[i]) if verify_only else g
+            sp["drafted"] += real
+            sp["accepted"] += min(n - 1, real)
+            sp["committed"] += n
+            for j in range(n):
+                pos = len(slot.tokens)
+                if pos >= slot.l_ans:
+                    break                       # over-commit past the answer
+                t = int(chunk_np[i, j])
+                p = slot.pending_drafts
+                if p is not None and pos < len(p) and p[pos] != t:
+                    slot.pending_drafts = None  # satellite stream diverged
+                slot.tokens.append(t)
+                if slot.probs is not None:
+                    slot.probs.append(probs_np[i, j])
+                sp["emitted"] += 1
+            if len(slot.tokens) >= slot.l_ans:
+                finished.append((slot.request,
+                                 np.asarray(slot.tokens, np.int32)))
+                self._stash_spec_probs(slot)
+                self._release_slot(i)
+                self.stats["finished"] += 1
+        return finished
+
+    def _stash_spec_probs(self, slot: _Slot) -> None:
+        """Keep a finished slot's per-token probability rows so
+        ``generate_spec`` can return them (bounded: the serve path consumes
+        an entry immediately after its request finishes)."""
+        if not slot.probs:
+            return
+        self._spec_probs[slot.request.request_id] = np.stack(slot.probs)
+        while len(self._spec_probs) > 64:
+            self._spec_probs.popitem(last=False)
+
+    def spec_stats(self) -> Dict[str, Any]:
+        """Speculative-decoding counters + derived rates (empty when off)."""
+        sp = dict(self.stats.get("spec") or {})
+        if not sp:
+            return sp
+        sp["accept_rate"] = sp["accepted"] / max(sp["drafted"], 1)
+        sp["drafts_per_step"] = sp["drafted"] / max(sp["steps"], 1)
+        sp["tokens_per_slot_step"] = (sp["committed"]
+                                      / max(sp["slot_steps"], 1))
+        sp["piggyback_frac"] = sp["piggybacked"] / max(sp["drafted"], 1)
+        return sp
+
+    def generate_spec(self, task: str, images: jax.Array,
+                      prompts: jax.Array, answer_vocab: int,
+                      draft_tokens=None) -> Tuple[jax.Array, jax.Array]:
+        """Batch-of-one greedy answer through the SPECULATIVE slot path —
+        the GS-side entry the executor uses for offloaded requests, so the
+        satellite's piggybacked answer tokens can seed the verify chunks
+        (the ground station's first verify step then starts with free
+        drafts).  Honours ``generate``'s contract: tokens are
+        token-for-token identical and probs are the answer-vocab
+        distributions each token was argmaxed from.  Intended for a
+        dedicated serve core (it drains only its own request)."""
+        if not self.cfg.spec_gamma:
+            raise ValueError("generate_spec requires spec_gamma > 0")
+        if answer_vocab != self.cfg.answer_vocab:
+            raise ValueError(
+                f"answer_vocab {answer_vocab} != engine answer_vocab "
+                f"{self.cfg.answer_vocab} (baked into the compiled spec "
+                "step)")
+        req = Request(task=task, image=np.asarray(images)[0],
+                      prompt=int(np.asarray(prompts)[0]),
+                      draft_tokens=draft_tokens)
+        req._wants_probs = True
+        self.admit_many([req])
+        while True:
+            for r, toks in self.step():
+                if r is req:
+                    probs = self._spec_probs.pop(req.request_id)
+                    return jnp.asarray(toks[None]), jnp.asarray(probs[None])
 
     # ------------------------------------------------------------------
     def kv_stats(self) -> Dict[str, Any]:

@@ -215,8 +215,17 @@ class CascadeExecutor:
         fallback_full = False
         if offload:
             gs_view = policy.gs_view(self.pipeline, task, images, rf, tf)
-            gs_toks, gs_probs = self.gs_core.generate(
-                task, gs_view.images, prompts, answer_vocab)
+            if self.gs_core.cfg.spec_gamma:
+                # speculative GS inference: the satellite's partial answer
+                # (decoded before the offload verdict) rides the downlink as
+                # the verifier's first drafts — bytes we transmit anyway
+                drafts = self.pipeline.attach_draft(gs_view, sat_tokens)
+                gs_toks, gs_probs = self.gs_core.generate_spec(
+                    task, gs_view.images, prompts, answer_vocab,
+                    draft_tokens=drafts)
+            else:
+                gs_toks, gs_probs = self.gs_core.generate(
+                    task, gs_view.images, prompts, answer_vocab)
             gs_tokens = np.asarray(gs_toks)
             gs_pred = EO.prediction_from_tokens(task, jnp.asarray(gs_tokens))
             tokens = gs_tokens[0]

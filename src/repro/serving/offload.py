@@ -86,6 +86,26 @@ class OffloadPipeline:
         return GSView(images=gs_images, bytes_frac=frac, kept_frac=frac,
                       region_scores=None, meta=meta)
 
+    # -- draft piggybacking -------------------------------------------------
+    def attach_draft(self, view: GSView, sat_tokens) -> Optional[np.ndarray]:
+        """Piggyback the satellite's already-decoded answer tokens on the
+        offload payload as the GS verifier's initial draft sequence.
+
+        The cascade computes these tokens anyway (the compact model decoded
+        them before the offload verdict), and they ride the same downlink
+        as the filtered image — a few int32s next to MBs of pixels, recorded
+        in ``view.meta`` for accounting honesty.  The GS engine's first
+        verify steps then start with free drafts; a wrong draft can only
+        cost accept rate, never output correctness (greedy acceptance).
+        Returns the draft array, or None when nothing was decoded onboard.
+        """
+        if sat_tokens is None or len(sat_tokens) == 0:
+            return None
+        toks = np.asarray(sat_tokens, np.int32).reshape(-1)
+        view.meta["draft_tokens"] = toks
+        view.meta["draft_bytes"] = int(toks.size * 4)
+        return toks
+
     # -- transmission -------------------------------------------------------
     def payload_bytes(self, task: str, bytes_frac) -> np.ndarray:
         """Modelled raw-image downlink bytes scaled by achieved compression."""

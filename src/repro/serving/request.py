@@ -31,6 +31,12 @@ class Request:
     #: engine, encode reuse in the serve path).  ``None`` → derived from the
     #: image pixels by ``scene_key``.
     scene_id: Optional[Any] = None
+    #: Piggybacked draft answer tokens for speculative decoding — typically
+    #: the satellite's already-computed compact-model answer riding the
+    #: offload payload (bytes the downlink already carries).  Aligned with
+    #: answer positions; purely advisory: wrong drafts cost accept rate,
+    #: never correctness (the verifier commits only its own greedy tokens).
+    draft_tokens: Optional[np.ndarray] = None
 
 
 def scene_key(req: Request) -> Any:

@@ -196,6 +196,66 @@ def test_paged_decode_matches_dense_decode_on_gathered_cache():
 
 
 @pytest.mark.kernel_parity
+@pytest.mark.parametrize("q_len", [1, 2, 8])
+@pytest.mark.parametrize("s,h,kh,hd,page,window", [
+    (64, 8, 2, 32, 8, 0),        # plain multi-token paged scoring
+    (64, 4, 1, 64, 16, 24),      # + sliding window
+    (64, 4, 4, 16, 8, 0),        # MHA (group = 1)
+])
+def test_paged_multi_token_scoring_parity(s, h, kh, hd, page, window, q_len):
+    """The speculative verifier's kernel: a q_len = γ+1 token chunk per row
+    scored in ONE page-indirect pass (interpret mode) vs the
+    gather-then-dense chunk-causal oracle.  Ragged lengths include the
+    empty row (an inactive slot parked on the trash page), a row SHORTER
+    than the chunk (its early chunk tokens are fully masked inside a
+    needed block — the m == NEG_INF corner), the chunk-only row and the
+    full row; shared-prefix pages alias across rows and are verified
+    bit-identical after the call (the scoring kernel never writes KV)."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    clen = jnp.asarray([0, max(q_len - 1, 1), q_len, s], jnp.int32)
+    b = clen.shape[0]
+    n_logical = s // page
+    n_pages = 1 + 2 + b * n_logical
+    kp = _rand(k1, (n_pages, page, kh, hd), jnp.float32)
+    vp = _rand(k2, (n_pages, page, kh, hd), jnp.float32)
+    q = _rand(k3, (b, q_len, h, hd), jnp.float32)
+    bt = jnp.asarray(_block_tables(np.random.RandomState(0), b, n_logical,
+                                   n_pages, n_shared=2))
+    kp_before, vp_before = np.asarray(kp).copy(), np.asarray(vp).copy()
+    got = ops.paged_multi_decode_attention(q, kp, vp, bt, clen,
+                                           window=window,
+                                           impl="pallas_interpret")
+    want = ops.paged_multi_decode_attention(q, kp, vp, bt, clen,
+                                            window=window, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert np.all(np.asarray(got)[0] == 0)      # empty row → exact zeros
+    # the pools (shared prefix pages included) are untouched
+    np.testing.assert_array_equal(np.asarray(kp), kp_before)
+    np.testing.assert_array_equal(np.asarray(vp), vp_before)
+
+
+@pytest.mark.kernel_parity
+def test_multi_token_chunk_matches_sequential_single_token():
+    """Chunk-causal semantics pinned against the single-token kernel: token
+    t of a T-chunk must equal a 1-token call at cache_len - (T-1-t)."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    s, h, kh, hd, t = 64, 4, 2, 32, 4
+    clen = jnp.asarray([t, 17, s], jnp.int32)
+    b = clen.shape[0]
+    q = _rand(k3, (b, t, h, hd), jnp.float32)
+    k = _rand(k1, (b, s, kh, hd), jnp.float32)
+    v = _rand(k2, (b, s, kh, hd), jnp.float32)
+    chunk = ops.multi_decode_attention(q, k, v, clen,
+                                       impl="pallas_interpret")
+    for ti in range(t):
+        one = ops.decode_attention(q[:, ti], k, v, clen - (t - 1 - ti),
+                                   impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(chunk[:, ti]),
+                                   np.asarray(one), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.kernel_parity
 @pytest.mark.parametrize("s,h,kh,hd,window", [
     (256, 8, 2, 32, 0),          # plain ragged decode
     (512, 4, 1, 64, 128),        # ragged + sliding window (band slice path)

@@ -1,0 +1,423 @@
+"""Cascade-speculative decoding: the compact model drafts, the regular
+model verifies γ tokens per step.
+
+Guarantee layers (none need trained weights — equivalence and accounting
+are training-independent, so everything here runs in the fast set):
+
+- model: ``T.verify_step`` over a γ+1-token chunk equals γ+1 sequential
+  ``T.decode_step`` calls — logits at every chunk position AND the written
+  KV — for both the dense and the paged cache (ragged per-row start
+  positions included);
+- engine: the speculative engine serves a mixed-task fan-out queue
+  token-for-token identically to the non-speculative greedy oracle, with
+  local compact-model drafts, perfect piggybacked drafts (accept rate 1)
+  and adversarially wrong piggybacked drafts (accept rate suffers, outputs
+  don't);
+- executor: ``run_serve`` with a speculative GS core returns the same
+  predictions/tokens as the greedy GS core across policies;
+- safety: shared prefix pages are never written while speculative chunks
+  fly; warmup precompiles the whole spec trio (no mid-serve compiles);
+- config: spec demands the batched paged engine, a draft tier, and
+  attention-only stacks (the free-rollback precondition).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.spaceverse_pair import proxy_pair
+from repro.core import eo_adapter as EO
+from repro.core.cascade import CascadeConfig, TierModel
+from repro.core.latency import LatencyModel
+from repro.data import synthetic
+from repro.models import transformer as T
+from repro.serving import (EngineConfig, EngineCore, EngineCoreConfig,
+                           InferenceEngine, Request)
+from repro.serving.executor import CascadeExecutor
+from repro.serving.offload import OffloadPipeline
+from repro.serving.policy import GroundOnlyPolicy, TabiPolicy
+
+
+@pytest.fixture(scope="module")
+def pair_system():
+    """Init-only satellite (draft) + ground (verify) tiers + data."""
+    sat_cfg, gs_cfg = proxy_pair("small")
+    ac = EO.EOAdapterConfig()
+    sat = TierModel(EO.init_adapter(jax.random.PRNGKey(0), sat_cfg, ac),
+                    sat_cfg)
+    gs = TierModel(EO.init_adapter(jax.random.PRNGKey(1), gs_cfg, ac),
+                   gs_cfg)
+    eo_cfg = synthetic.EOTaskConfig(image_size=ac.image_size, grid=ac.grid,
+                                    num_classes=ac.num_classes)
+    data = synthetic.make_dataset("cls", 16, seed=0, cfg=eo_cfg)
+    return sat, gs, ac, data
+
+
+# ---------------------------------------------------------------------------
+# model level: verify_step == sequential decode_steps
+# ---------------------------------------------------------------------------
+
+def test_verify_step_matches_sequential_decode_dense(pair_system):
+    _, gs, ac, _ = pair_system
+    cfg, params = gs.cfg, gs.params["backbone"]
+    b, max_len, t = 3, 40, 4
+    patches = jax.random.normal(jax.random.PRNGKey(1),
+                                (b, cfg.num_patches, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, 2), 0,
+                              cfg.vocab_size)
+    _, cache, idx = T.prefill(params, cfg,
+                              {"tokens": toks, "patch_embeds": patches},
+                              max_len)
+    start = jnp.full((b,), int(idx), jnp.int32)
+    chunk = jax.random.randint(jax.random.PRNGKey(3), (b, t), 0, 64)
+
+    c_seq, lg = cache, []
+    for ti in range(t):
+        l, c_seq = T.decode_step(params, cfg, c_seq,
+                                 {"tokens": chunk[:, ti:ti + 1]}, start + ti)
+        lg.append(l)
+    lg_ver, c_ver = T.verify_step(params, cfg, cache, {"tokens": chunk},
+                                  start)
+    np.testing.assert_allclose(np.asarray(lg_ver),
+                               np.asarray(jnp.stack(lg, 1)),
+                               rtol=1e-5, atol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(c_ver), jax.tree.leaves(c_seq)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_verify_step_matches_sequential_decode_paged_ragged(pair_system):
+    """Paged verify with per-row ragged start positions: each row's chunk
+    lands at its own (page, offset) run and the logits match sequential
+    paged decode exactly."""
+    _, gs, ac, _ = pair_system
+    cfg, params = gs.cfg, gs.params["backbone"]
+    b, page, n_pages, max_len, t = 3, 8, 40, 40, 3
+    patches = jax.random.normal(jax.random.PRNGKey(1),
+                                (b, cfg.num_patches, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, 2), 0,
+                              cfg.vocab_size)
+    _, dcache, idx = T.prefill(params, cfg,
+                               {"tokens": toks, "patch_embeds": patches},
+                               max_len)
+    # copy the dense prefill into pages through per-row block tables
+    pcache = T.init_paged_cache(cfg, b, n_pages, page)
+    nl = max_len // page
+    bt = np.arange(1, 1 + b * nl).reshape(b, nl).astype(np.int32)
+
+    def fill(pool, dense):
+        def leaf(pool_leaf, dn):
+            out = pool_leaf
+            for r in range(b):
+                resh = dn[:, r].reshape((dn.shape[0], nl, page)
+                                        + dn.shape[3:])
+                out = out.at[:, bt[r]].set(resh)
+            return out
+        return jax.tree.map(leaf, pool, dense)
+
+    pcache = T.map_cache_kinds(cfg, [pcache, dcache], kv=fill,
+                               state=lambda p, d: d)
+    # ragged: pretend rows committed different numbers of tokens
+    start = jnp.asarray([int(idx), int(idx) + 2, int(idx) + 5], jnp.int32)
+    chunk = jax.random.randint(jax.random.PRNGKey(3), (b, t), 0, 64)
+    btj = jnp.asarray(bt)
+
+    c_seq, lg = pcache, []
+    for ti in range(t):
+        l, c_seq = T.decode_step(params, cfg, c_seq,
+                                 {"tokens": chunk[:, ti:ti + 1]}, start + ti,
+                                 block_table=btj)
+        lg.append(l)
+    lg_ver, c_ver = T.verify_step(params, cfg, pcache, {"tokens": chunk},
+                                  start, block_table=btj)
+    np.testing.assert_allclose(np.asarray(lg_ver),
+                               np.asarray(jnp.stack(lg, 1)),
+                               rtol=1e-5, atol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(c_ver), jax.tree.leaves(c_seq)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_verify_step_rejects_recurrent_stacks():
+    """The free-rollback precondition is enforced at the model level too."""
+    from repro import configs
+    cfg = configs.get_config("hymba-1.5b", reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    cache = T.init_cache(cfg, 2, 16)
+    with pytest.raises(NotImplementedError):
+        T.verify_step(params, cfg, cache,
+                      {"tokens": jnp.zeros((2, 3), jnp.int32)},
+                      jnp.zeros((2,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# engine level: spec == greedy token-for-token
+# ---------------------------------------------------------------------------
+
+def _queue(data, n=8):
+    """Mixed fan-out: det (N_r tokens) next to vqa/cls (1 token), with
+    scene sharing and mid-stream refills."""
+    reqs = [Request(task="det", image=data["images"][0], prompt=0),
+            Request(task="cls", image=data["images"][0], prompt=0)]
+    reqs += [Request(task="vqa", image=data["images"][i % 4], prompt=i % 2)
+             for i in range(n - 3)]
+    reqs.append(Request(task="det", image=data["images"][1], prompt=1))
+    return reqs
+
+
+def _serve(core, reqs):
+    out = {}
+    q = list(reversed(reqs))
+    while q or core.active_count():
+        n = min(len(q), len(core.free_slots()))
+        if n:
+            core.admit_many([q.pop() for _ in range(n)])
+        for r, t in core.step():
+            out[r.request_id] = t.tolist()
+    return out
+
+
+def _clone(reqs, drafts=None):
+    return [Request(task=r.task, image=r.image, prompt=r.prompt,
+                    request_id=r.request_id,
+                    draft_tokens=None if drafts is None
+                    else drafts[r.request_id])
+            for r in reqs]
+
+
+@pytest.mark.parametrize("gamma", [1, 3])
+def test_spec_matches_greedy_token_for_token(pair_system, gamma):
+    """The tentpole equivalence: the speculative engine (compact drafter +
+    γ-token verify) serves mixed traffic with exactly the greedy oracle's
+    token streams, while committing more than one token per slot-step."""
+    sat, gs, ac, data = pair_system
+    reqs = _queue(data)
+    greedy = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                        EngineCoreConfig(slots=3, answer_vocab=9))
+    o_greedy = _serve(greedy, reqs)
+    spec = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=3, answer_vocab=9,
+                                       spec_gamma=gamma), draft=sat)
+    o_spec = _serve(spec, _clone(reqs))
+    assert o_spec == o_greedy
+    sp = spec.spec_stats()
+    assert sp["committed"] >= sp["slot_steps"]        # ≥ 1 token per step
+    assert spec.stats["finished"] == len(reqs)
+
+
+def test_spec_piggyback_perfect_drafts_accept_all(pair_system):
+    """Seeding every request with the greedy engine's own answer (the
+    satellite-piggyback regime with an agreeing satellite) must accept
+    every draft: detection answers then finish in ceil(L/(γ+1)) steps."""
+    sat, gs, ac, data = pair_system
+    reqs = _queue(data)
+    greedy = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                        EngineCoreConfig(slots=3, answer_vocab=9))
+    o_greedy = _serve(greedy, reqs)
+    drafts = {rid: np.asarray(toks, np.int32)
+              for rid, toks in o_greedy.items()}
+    spec = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=3, answer_vocab=9,
+                                       spec_gamma=3), draft=sat)
+    o_spec = _serve(spec, _clone(reqs, drafts))
+    assert o_spec == o_greedy
+    sp = spec.spec_stats()
+    assert sp["piggybacked"] > 0
+    assert sp["verify_only_steps"] == sp["steps"]     # drafter never ran
+    # every emitted token beyond the first per step came from an accepted
+    # draft — with perfect drafts nothing useful is ever rejected: the det
+    # requests (16 tokens) each finish in ceil(16/4) = 4 slot-steps
+    assert sp["tokens_per_slot_step"] > 2.0
+
+
+def test_spec_adversarial_drafts_cannot_corrupt_output(pair_system):
+    """Wrong piggybacked drafts (every token perturbed) must only cost
+    accept rate — the committed streams stay exactly greedy."""
+    sat, gs, ac, data = pair_system
+    reqs = _queue(data)
+    greedy = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                        EngineCoreConfig(slots=3, answer_vocab=9))
+    o_greedy = _serve(greedy, reqs)
+    drafts = {rid: np.asarray([(t + 1) % 9 for t in toks], np.int32)
+              for rid, toks in o_greedy.items()}
+    spec = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=3, answer_vocab=9,
+                                       spec_gamma=3), draft=sat)
+    o_spec = _serve(spec, _clone(reqs, drafts))
+    assert o_spec == o_greedy
+
+
+def test_spec_engine_inference_engine_front_door(pair_system):
+    """The InferenceEngine wiring: EngineConfig(spec_gamma=γ) + draft tier
+    serves identically to the default engine."""
+    sat, gs, ac, data = pair_system
+    reqs = _queue(data, n=6)
+    base = InferenceEngine(gs.params, gs.cfg, ac,
+                           EngineConfig(slots=2, answer_vocab=9))
+    r_base = base.serve(list(reqs))
+    spec = InferenceEngine(gs.params, gs.cfg, ac,
+                           EngineConfig(slots=2, answer_vocab=9,
+                                        spec_gamma=2), draft=sat)
+    r_spec = spec.serve(_clone(reqs))
+    by_id = lambda rs: {r.request_id: np.asarray(r.tokens).tolist()
+                        for r in rs}
+    assert by_id(r_base) == by_id(r_spec)
+
+
+# ---------------------------------------------------------------------------
+# safety + warmup + config
+# ---------------------------------------------------------------------------
+
+def _shared_page_snapshot(core):
+    pages = sorted({p for e in core._prefix._entries.values()
+                    for p in e.pages})
+    assert pages
+    out = []
+    T.map_cache_kinds(
+        core.tier.cfg, [core._slot_cache],
+        kv=lambda t: out.append(jax.tree.map(
+            lambda x: np.asarray(x[:, pages]), t)),
+        state=lambda t: None)
+    return pages, out
+
+
+def test_spec_never_writes_shared_prefix_pages(pair_system):
+    """Verify chunks write γ positions past the committed index — all of
+    them must land in row-private pages; resident shared prefix pages stay
+    bit-identical while speculative chunks fly."""
+    sat, gs, ac, data = pair_system
+    core = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=3, answer_vocab=9,
+                                       spec_gamma=3), draft=sat)
+    img = data["images"][0]
+    core.admit_many([Request(task="det", image=img, prompt=0)])
+    pages0, snap0 = _shared_page_snapshot(core)
+    core.admit_many([Request(task="vqa", image=img, prompt=0),
+                     Request(task="cls", image=img, prompt=0)])
+    for _ in range(3):
+        core.step()
+    pages1, snap1 = _shared_page_snapshot(core)
+    assert pages1 == pages0
+    for a, b in zip(jax.tree.leaves(snap0), jax.tree.leaves(snap1)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_spec_warmup_precompiles_everything(pair_system):
+    """After warmup, a first admission + speculative steps (both variants:
+    with and without piggybacked coverage) trigger NO new compilations —
+    the contact-window guarantee extended to the spec trio."""
+    sat, gs, ac, data = pair_system
+    core = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=2, answer_vocab=9,
+                                       spec_gamma=2), draft=sat)
+    core.warmup()
+    assert core.active_count() == 0
+    fns = [core._spec_step_j, core._spec_verify_j, core._draft_prefill_j,
+           core._draft_scatter_j, core._prefill_prefix_j,
+           core._prefix_scatter_j, core._paged_admit_j]
+    sizes = [f._cache_size() for f in fns]
+    assert all(s > 0 for s in sizes)
+    core.admit_many([
+        Request(task="det", image=data["images"][0], prompt=0,
+                draft_tokens=np.zeros((16,), np.int32)),  # covered row
+        Request(task="vqa", image=data["images"][1], prompt=0)])
+    for _ in range(4):
+        core.step()
+    assert [f._cache_size() for f in fns] == sizes
+
+
+def test_spec_config_validation(pair_system):
+    sat, gs, ac, _ = pair_system
+    with pytest.raises(ValueError):                    # no draft tier
+        EngineCore(TierModel(gs.params, gs.cfg), ac,
+                   EngineCoreConfig(spec_gamma=2))
+    with pytest.raises(ValueError):                    # dense cache
+        EngineCore(TierModel(gs.params, gs.cfg), ac,
+                   EngineCoreConfig(spec_gamma=2, cache_impl="dense"),
+                   draft=sat)
+    with pytest.raises(ValueError):                    # vmap oracle
+        EngineCore(TierModel(gs.params, gs.cfg), ac,
+                   EngineCoreConfig(spec_gamma=2, step_impl="vmap"),
+                   draft=sat)
+
+
+# ---------------------------------------------------------------------------
+# executor level: spec-vs-greedy across policies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy_fn", [
+    lambda: GroundOnlyPolicy(),
+    lambda: TabiPolicy(threshold=1.1),     # always offloads → piggybacks
+], ids=["ground-only", "tabi-always-offload"])
+def test_run_serve_spec_equals_greedy_across_policies(pair_system,
+                                                      policy_fn):
+    """Offloaded requests answered by the speculative GS core (satellite
+    tokens piggybacked as drafts where the policy decoded onboard) must
+    return exactly the greedy GS core's predictions and tokens."""
+    sat, gs, ac, data = pair_system
+    cc = CascadeConfig(answer_vocab=9)
+    pipe = OffloadPipeline(ac, cc, LatencyModel())
+    from repro.serving.engine_core import shared_core
+    sat_core = shared_core(sat, ac)
+    gs_greedy = shared_core(gs, ac)
+    gs_spec = EngineCore(gs, ac,
+                         EngineCoreConfig(slots=1, answer_vocab=9,
+                                          spec_gamma=3), draft=sat)
+    ex_g = CascadeExecutor(sat_core, gs_greedy, ac, pipe)
+    ex_s = CascadeExecutor(sat_core, gs_spec, ac, pipe)
+    for task in ("vqa", "det"):
+        for i in range(3):
+            img = jnp.asarray(np.asarray(data["images"][i])[None])
+            pr = jnp.asarray(np.array([i % 2], np.int32))
+            rg = ex_g.run_serve(policy_fn(), task, img, pr, 9)
+            rs = ex_s.run_serve(policy_fn(), task, img, pr, 9)
+            assert np.array_equal(np.asarray(rg.pred), np.asarray(rs.pred))
+            assert np.array_equal(np.asarray(rg.offload),
+                                  np.asarray(rs.offload))
+            if rg.gs_tokens is not None:
+                assert np.array_equal(rg.gs_tokens, rs.gs_tokens)
+    # Tabi decodes onboard first, so its offloads carry piggybacked drafts
+    if policy_fn().name == "tabi":
+        assert gs_spec.spec_stats()["piggybacked"] > 0
+
+
+def test_generate_spec_probs_match_generate(pair_system):
+    """``generate_spec`` honours ``generate``'s full contract: identical
+    tokens AND the answer-vocab distribution each token was argmaxed from
+    (the verifier's own logits — drafts never shift them)."""
+    sat, gs, ac, data = pair_system
+    core = EngineCore(gs, ac,
+                      EngineCoreConfig(slots=1, answer_vocab=9,
+                                       spec_gamma=3), draft=sat)
+    img = jnp.asarray(np.asarray(data["images"][2])[None])
+    pr = jnp.asarray(np.array([1], np.int32))
+    want_t, want_p = core.generate("det", img, pr, 9)
+    got_t, got_p = core.generate_spec("det", img, pr, 9)
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want_p),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cascade_server_spec_matches_greedy(tiny_bundle):
+    """The deployable face: CascadeServer(spec_gamma=γ) serves a request
+    stream with exactly the spec-off server's responses (tier, exit stage,
+    tokens, bytes) — decisions and the golden path cannot drift."""
+    from repro.network.orbit import ContactPlan
+    from repro.serving import CascadeServer
+    b = tiny_bundle
+    servers = [CascadeServer(b.sat, b.gs, b.adapter_cfg, b.conf_params,
+                             b.cascade_cfg, b.latency,
+                             plan=ContactPlan(contact_fraction_override=1.0),
+                             spec_gamma=g) for g in (0, 3)]
+    servers[1].warmup()
+    for task in ("vqa", "cls"):
+        data = b.datasets[task]
+        for i in range(3):
+            req = lambda: Request(task=task, image=data["images"][i],
+                                  prompt=int(data["prompts"][i]),
+                                  t_arrival=float(i))
+            r0 = servers[0].handle(req(), now=float(i))
+            r1 = servers[1].handle(req(), now=float(i))
+            assert (r0.tier, r0.exit_stage) == (r1.tier, r1.exit_stage)
+            np.testing.assert_array_equal(r0.tokens, r1.tokens)
+            assert r0.tx_bytes == r1.tx_bytes
