@@ -11,7 +11,12 @@ demo also drops the link mid-stream to show graceful degradation to
 satellite-only service, then fans several prompts out over ONE captured
 scene to show the paged KV cache sharing the image-region prefix across
 queries (the region tokens prefill once; every further query only runs its
-prompt suffix).
+prompt suffix).  A final section turns on chunked prefill
+(``EngineCoreConfig(prefill_chunk=C)``): admission stops running the scene
+prefill as one synchronous call and instead streams it into the paged
+cache a few region tokens per fused token-budget step, printing the
+per-step decode/prompt/chunk token mix and the measured TTFT with
+chunking on vs off.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -155,6 +160,80 @@ def main():
           f"satellite's downlinked answer, {local} drafted locally by the "
           f"compact model; {sp['verify_only_steps']}/{sp['steps']} steps "
           f"skipped the drafter entirely")
+
+    _chunked_demo(bundle, args.fanout)
+
+
+def _chunked_demo(bundle, fanout: int) -> None:
+    """Continuous-arrival chunked prefill: admission streams each new
+    scene's region tokens into the paged cache a few per fused step, next
+    to everyone else's decode tokens — the engine never stops decoding to
+    admit.  Prints the per-step token mix and the measured TTFT with
+    chunking on vs off (same requests, token-for-token equal answers)."""
+    import time
+
+    import numpy as np
+
+    from repro.serving import EngineCore, EngineCoreConfig, Request
+    from repro.core.cascade import TierModel
+
+    print("\n== chunked prefill: admission fused into the decode step ==")
+    scenes = bundle.datasets["cls"]["images"]
+    n_regions = bundle.adapter_cfg.n_regions
+
+    def stream(tag):
+        reqs = []
+        for s in range(4):
+            img = scenes[s % len(scenes)]
+            reqs.append(Request(task="det", image=img, prompt=0,
+                                scene_id=f"{tag}-{s}"))
+            reqs += [Request(task="vqa", image=img, prompt=q % 2,
+                             scene_id=f"{tag}-{s}")
+                     for q in range(max(fanout // 2 - 1, 1))]
+        return reqs
+
+    results = {}
+    for chunk in (0, 8):
+        core = EngineCore(TierModel(bundle.sat.params, bundle.sat.cfg),
+                          bundle.adapter_cfg,
+                          EngineCoreConfig(slots=4, answer_vocab=9,
+                                           prefill_chunk=chunk))
+        core.warmup()
+        queue = list(reversed(stream(f"c{chunk}")))
+        outs = {}
+        while queue or core.active_count():
+            n = min(len(queue), len(core.free_slots()))
+            if n:
+                core.admit_many([queue.pop() for _ in range(n)])
+            for r, t in core.step():
+                outs[r.request_id] = t.tolist()
+        log = core.stats["request_log"]
+        ttft = sorted(r["t_first"] - r["t_admit"] for r in log)
+        results[chunk] = {"outs": [outs[k] for k in sorted(outs)],
+                          "ttft_ms": ttft[len(ttft) // 2] * 1e3,
+                          "core": core}
+    chunked = results[8]["core"]
+    mix = chunked.stats["sched"]["step_log"]
+    print(f"per-step token mix of the first fused steps "
+          f"(decode/prompt/chunk), budget "
+          f"{chunked.scheduler_stats()['budget']}:")
+    for i, (d, p, c) in enumerate(mix[:8]):
+        bar = "D" * d + "P" * p + "c" * c
+        print(f"  step {i:2d}: {d:2d} decode + {p} prompt + {c:2d} chunk  "
+              f"|{bar}|")
+    st = chunked.scheduler_stats()
+    print(f"{st['fused_steps']} fused steps, budget utilisation "
+          f"{st['budget_utilization']:.2f}, prefill by kind "
+          f"{st['prefill_by_kind']} "
+          f"(the {n_regions}-token scene prefix streams as "
+          f"'chunk' tokens instead of one synchronous admission call)")
+    same = results[0]["outs"] == results[8]["outs"]
+    print(f"TTFT p50: {results[8]['ttft_ms']:.2f}ms chunked vs "
+          f"{results[0]['ttft_ms']:.2f}ms stall admission; outputs "
+          f"token-for-token equal: {same}  (at this demo's toy 16-token "
+          f"scenes the stall is tiny — benchmarks/serving_bench.py "
+          f"measures production-shaped 256-token scenes, where the "
+          f"urgent-query TTFT halves)")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,13 @@ ONE pass, so the row axis of the query block becomes ``q_len · group`` rows
 INCLUDING all ``q_len`` chunk tokens.  ``q_len == 1`` reduces exactly to the
 single-token decode above; shared read-only prefix pages are untouched (the
 kernel never writes KV).
+
+``paged_prefill_attention_pallas`` extends the multi-token form to the
+**chunked-prefill** regime (Sarathi-style prefill chunks, C ≫ γ+1): the
+query-chunk axis joins the grid in ``q_blk``-token sub-blocks, each with its
+own online-softmax scratch and its own causal KV-block skip bounds, so large
+prefix-append chunks stream through bounded VMEM and early chunk tokens
+never fetch KV blocks only later tokens can see.
 """
 from __future__ import annotations
 
@@ -46,6 +53,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``cap`` (block/chunk sizing:
+    grids need the tile count to divide the axis exactly)."""
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
@@ -219,6 +235,144 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
             pltpu.VMEM((rows, hd), jnp.float32),
             pltpu.VMEM((rows,), jnp.float32),
             pltpu.VMEM((rows,), jnp.float32),
+        ],
+    )
+
+    block_table = jnp.asarray(block_table, jnp.int32)
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, rows, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, cache_len, q, k_pool, v_pool)
+
+
+def _prefill_append_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                           acc_ref, m_ref, l_ref, *, scale: float,
+                           window: int, softcap: Optional[float],
+                           kv_blk: int, n_kv: int, q_len: int, q_blk: int,
+                           group: int):
+    """Prefix-append attention for one (batch row, KV head, query sub-block,
+    KV page) grid cell.  The query-chunk axis is tiled: sub-block ``iq``
+    covers chunk tokens ``iq·q_blk .. iq·q_blk + q_blk - 1``, so only its
+    own causal prefix of KV blocks is fetched — early chunk tokens of a
+    long prefill chunk skip the blocks that only later tokens can see, and
+    the per-sub-block VMEM footprint stays q_blk·group rows no matter how
+    large the chunk is (the γ+1 verify kernel holds the whole chunk in one
+    block, which is fine for small γ but not for C-token prefill chunks)."""
+    ib = pl.program_id(0)
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+    cache_len = len_ref[ib]
+    t0 = iq * q_blk
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # chunk token t has effective length cache_len - (q_len - 1) + t; this
+    # sub-block's tokens span [t0, t0 + q_blk), so its last row bounds the
+    # columns it can ever read and its first row bounds the window floor
+    hi = cache_len - (q_len - 1) + t0 + q_blk - 1   # last row's eff length
+    lo = (jnp.maximum(cache_len - (q_len - 1) + t0 - window, 0)
+          if window > 0 else 0)
+    needed = (ikv * kv_blk < hi) & ((ikv + 1) * kv_blk > lo)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (q_blk·group, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (kv_blk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        cols = ikv * kv_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        t = t0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        eff_len = cache_len - (q_len - 1) + t
+        mask = cols < eff_len
+        if window > 0:
+            mask &= cols >= eff_len - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        # explicit zero for masked columns (rows with eff_len <= 0 — idle
+        # engine rows / padding tail tokens — must emit zeros, not mean(V))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_pallas(q: jax.Array, k_pool: jax.Array,
+                                   v_pool: jax.Array, block_table: jax.Array,
+                                   cache_len: jax.Array, *, window: int = 0,
+                                   softcap: Optional[float] = None,
+                                   scale: Optional[float] = None,
+                                   q_len: int = 1, q_blk: int = 8,
+                                   interpret: bool = False) -> jax.Array:
+    """Chunked-prefill **prefix-append** attention, page-indirect.
+
+    q: (B, KH, q_len·group, hd) token-major rows of a q_len-token prefill
+    chunk whose KV the caller just wrote at per-row (page, offset);
+    k_pool, v_pool: (n_pages, KH, page, hd); block_table: (B, P) int32;
+    cache_len: () or (B,) int32 valid-slot counts INCLUDING the chunk
+    → (B, KH, q_len·group, hd).
+
+    Semantics are exactly ``paged_decode_attention_pallas`` at the same
+    ``q_len`` (chunk token ``t`` sees logical columns
+    ``< cache_len - (q_len - 1 - t)``); the difference is structural: the
+    query-chunk axis joins the grid in ``q_blk``-token sub-blocks with
+    per-sub-block online-softmax scratch and per-sub-block KV-block
+    skipping, so a C-token chunk costs O(Σ_t prefix_t) block fetches and
+    bounded VMEM instead of one C·group-row mega-block — the shape a
+    Sarathi-style chunked prefill feeds (C ≫ γ+1)."""
+    b, kh, rows, hd = q.shape
+    page = k_pool.shape[2]
+    n_blocks = block_table.shape[1]
+    assert rows % q_len == 0
+    group = rows // q_len
+    scale = scale if scale is not None else hd ** -0.5
+    if q_len % q_blk != 0:
+        q_blk = largest_divisor_leq(q_len, q_blk)
+    n_q = q_len // q_blk
+    sub_rows = q_blk * group
+
+    kernel = functools.partial(
+        _prefill_append_kernel, scale=scale, window=window, softcap=softcap,
+        kv_blk=page, n_kv=n_blocks, q_len=q_len, q_blk=q_blk, group=group)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, n_q, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, sub_rows, hd),
+                         lambda b_, h_, iq, ip, tbl, lens: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b_, h_, iq, ip, tbl, lens:
+                         (tbl[b_, ip], h_, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b_, h_, iq, ip, tbl, lens:
+                         (tbl[b_, ip], h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, sub_rows, hd),
+                               lambda b_, h_, iq, ip, tbl, lens:
+                               (b_, h_, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((sub_rows, hd), jnp.float32),
+            pltpu.VMEM((sub_rows,), jnp.float32),
+            pltpu.VMEM((sub_rows,), jnp.float32),
         ],
     )
 

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import (decode_attention_pallas,
-                                            paged_decode_attention_pallas)
+                                            paged_decode_attention_pallas,
+                                            paged_prefill_attention_pallas)
 from repro.kernels.ssm_scan import ssm_scan_pallas
 from repro.kernels.region_score import region_score_pallas
 
@@ -245,6 +246,48 @@ def paged_multi_decode_attention(q: jax.Array, k_pool: jax.Array,
         _chunk_to_rows(q, kh), k_pool.transpose(0, 2, 1, 3),
         v_pool.transpose(0, 2, 1, 3), block_table, cache_len, window=window,
         softcap=softcap, scale=scale, q_len=t, interpret=interp)
+    return _rows_to_chunk(o, t, h)
+
+
+# ---------------------------------------------------------------------------
+# paged prefill-append attention (chunked prefill; q_len = C per row)
+# ---------------------------------------------------------------------------
+
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_table: jax.Array,
+                            cache_len: jax.Array, *, window: int = 0,
+                            softcap: Optional[float] = None,
+                            scale: Optional[float] = None, q_blk: int = 8,
+                            impl: Impl = None) -> jax.Array:
+    """q: (B, C, H, hd) — a C-token **prefill chunk** whose KV the caller
+    just scattered at per-row (page, offset); k_pool, v_pool: (n_pages,
+    page, K, hd); block_table: (B, P) int32; cache_len: () or (B,) int32
+    INCLUDING the chunk → (B, C, H, hd).
+
+    The chunked-prefill scoring op: chunk token ``t`` attends causally to
+    its own chunk prefix plus all previously-written paged KV (columns
+    ``< cache_len - (C - 1 - t)``).  Ragged engine rows (decode rows with
+    C_eff = 1, partial tail chunks, idle rows) ride as rows whose
+    ``cache_len`` reflects their own valid-token count; their padding
+    positions produce garbage the engine discards and their padding KV
+    writes were steered out of bounds by the model layer.  The Pallas path
+    tiles the query-chunk axis in ``q_blk``-token sub-blocks (per-sub-block
+    scratch + KV-block skipping) — the structural difference from the γ+1
+    verify op, which holds the whole chunk in one block."""
+    kind, interp = _resolve(impl)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if kind in ("ref", "flash_structured"):
+        with jax.named_scope("KERNELREGION_decode"):
+            return ref.paged_prefill_attention(
+                q, k_pool, v_pool, block_table, cache_len, window=window,
+                softcap=softcap, scale=scale)
+    b, t, h, hd = q.shape
+    kh = k_pool.shape[2]
+    o = paged_prefill_attention_pallas(
+        _chunk_to_rows(q, kh), k_pool.transpose(0, 2, 1, 3),
+        v_pool.transpose(0, 2, 1, 3), block_table, cache_len, window=window,
+        softcap=softcap, scale=scale, q_len=t, q_blk=q_blk,
+        interpret=interp)
     return _rows_to_chunk(o, t, h)
 
 

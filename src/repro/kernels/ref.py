@@ -430,6 +430,39 @@ def paged_multi_decode_attention(q: jax.Array, k_pool: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# paged_prefill_attention — prefix-append scoring for chunked prefill
+# ---------------------------------------------------------------------------
+
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_table: jax.Array,
+                            cache_len: jax.Array, *, window: int = 0,
+                            softcap: Optional[float] = None,
+                            scale: Optional[float] = None) -> jax.Array:
+    """Oracle for the chunked-prefill **prefix-append** kernel: a (B, C)
+    query chunk whose tokens sit at logical positions
+    ``cache_len - C .. cache_len - 1`` attends causally to its own chunk
+    plus all previously-written paged KV (the committed prefix), resolved
+    through per-row block tables.
+
+    Same contract as ``paged_multi_decode_attention`` — chunk token ``t``
+    of row ``b`` sees logical columns ``< cache_len[b] - (C - 1) + t`` —
+    because a prefill chunk *is* a multi-token append whose KV was just
+    scattered at ``(page, offset)`` by the caller; the ragged engine rows
+    (1-token decode rows, partial tail chunks, idle rows steered to the
+    trash page) differ only in their per-row ``cache_len``.  Kept as a
+    named entry point so the Pallas kernel (which additionally tiles the
+    query-chunk axis — prefill chunks are much larger than the γ+1 verify
+    chunks) has a stable oracle to diff against.
+
+    q: (B, C, H, hd); k_pool, v_pool: (n_pages, page, KH, hd); block_table:
+    (B, P) int32; cache_len: () or (B,) int32 INCLUDING the chunk
+    → (B, C, H, hd)."""
+    return paged_multi_decode_attention(q, k_pool, v_pool, block_table,
+                                        cache_len, window=window,
+                                        softcap=softcap, scale=scale)
+
+
+# ---------------------------------------------------------------------------
 # ssm_scan — chunked gated linear attention (Mamba-2 SSD / mLSTM core)
 # ---------------------------------------------------------------------------
 

@@ -117,6 +117,45 @@ def embed_decode(p: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array],
     return x, positions
 
 
+def embed_chunk(p: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array],
+                index: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Mixed-modality chunk embedding for the fused chunked-prefill step.
+
+    One fixed-shape (B, C) chunk per batch row, where each row is either a
+    **region chunk** (C precomputed patch embeddings — a slice of a scene's
+    vision prefix streaming into the cache) or a **token chunk** (prompt /
+    answer token ids): ``inputs["patch_mask"]`` (B,) bool selects per row
+    between ``inputs["patch_embeds"]`` (B, C, d) and the embedding of
+    ``inputs["tokens"]`` (B, C).  ``index``: (B,) int32 absolute cache slot
+    of each row's FIRST chunk token.
+
+    Positions follow ``embed_inputs``'s layout exactly so a chunked prefill
+    reproduces the full prefill bit-for-bit: region chunk token ``t`` *is*
+    patch ``index + t`` (M-RoPE grid position ``(0, p // side, p % side)``),
+    token rows continue diagonally at ``side + pos - num_patches``."""
+    tokens = inputs["tokens"]                          # (B, C)
+    b, t = tokens.shape
+    x = jnp.take(p["tok"], tokens, axis=0)
+    patches = inputs.get("patch_embeds")
+    patch_mask = inputs.get("patch_mask")
+    if patches is not None:
+        x = jnp.where(patch_mask[:, None, None], patches.astype(x.dtype), x)
+    index = jnp.asarray(index)
+    pos = jnp.broadcast_to(index[:, None] + jnp.arange(t), (b, t))
+    if cfg.frontend == "vision" and cfg.use_mrope:
+        side = max(int(math.isqrt(max(cfg.num_patches, 1))), 1)
+        tpos = jnp.broadcast_to((side + (pos - cfg.num_patches))[None],
+                                (3, b, t))
+        if patches is not None:
+            ppos = jnp.stack([jnp.zeros_like(pos), pos // side, pos % side])
+            positions = jnp.where(patch_mask[None, :, None], ppos, tpos)
+        else:
+            positions = tpos
+    else:
+        positions = pos
+    return x, positions
+
+
 def logits_from_hidden(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
     if cfg.tie_embeddings:
         table = p["tok"][0] if cfg.num_codebooks else p["tok"]

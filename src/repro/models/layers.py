@@ -126,6 +126,7 @@ def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
               cache: Optional[Params] = None,
               cache_index: Optional[jax.Array] = None,
               block_table: Optional[jax.Array] = None,
+              chunk_lens: Optional[jax.Array] = None,
               mode: str = "train") -> Tuple[jax.Array, Optional[Params]]:
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
@@ -148,6 +149,48 @@ def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
                 "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
                 "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1),
             }
+    elif mode == "prefill_append":  # chunked prefill: s == C, ragged valid
+        # Stream a C-token chunk into the cache at per-row positions
+        # idx..idx+chunk_lens-1 and attend with ONE prefix-append call,
+        # causal within the chunk.  Rows are RAGGED: a fused engine step
+        # mixes full region chunks (chunk_lens == C), 1-token prompt/decode
+        # rows (chunk_lens == 1), partial tail chunks and idle rows
+        # (chunk_lens == 0).  Tokens at t >= chunk_lens are padding — their
+        # KV write is steered OUT OF BOUNDS (scatter drops out-of-range
+        # updates), so they can never land in a page/slot any sequence
+        # reads, and their attention output is garbage the caller discards
+        # (valid tokens never attend to them: token t reads columns
+        # < idx + t + 1, all written by valid tokens or the committed
+        # prefix).
+        assert cache is not None and cache_index is not None
+        idx = jnp.broadcast_to(jnp.asarray(cache_index), (b,))
+        pos = idx[:, None] + jnp.arange(s)[None, :]           # (B, S)
+        valid = (jnp.arange(s)[None, :] < chunk_lens[:, None]
+                 if chunk_lens is not None
+                 else jnp.ones((b, s), bool))
+        if block_table is not None:
+            page = cache["k"].shape[1]
+            n_pages = cache["k"].shape[0]
+            n_blocks = block_table.shape[1]
+            pages = jnp.take_along_axis(
+                block_table, jnp.clip(pos // page, 0, n_blocks - 1), axis=1)
+            pages = jnp.where(valid, pages, n_pages)      # OOB → dropped
+            off = pos % page
+            ck = cache["k"].at[pages, off].set(k)
+            cv = cache["v"].at[pages, off].set(v)
+            new_cache = {"k": ck, "v": cv}
+            o = ops.paged_prefill_attention(
+                q, ck, cv, block_table, idx + s, window=window,
+                softcap=cfg.attn_softcap)
+        else:
+            rows = jnp.arange(b)[:, None]
+            max_len = cache["k"].shape[1]
+            pos_w = jnp.where(valid, pos, max_len)        # OOB → dropped
+            ck = cache["k"].at[rows, pos_w].set(k)
+            cv = cache["v"].at[rows, pos_w].set(v)
+            new_cache = {"k": ck, "v": cv}
+            o = ops.multi_decode_attention(q, ck, cv, idx + s, window=window,
+                                           softcap=cfg.attn_softcap)
     elif mode == "verify":  # speculative scoring chunk: s == γ+1
         # Write the s chunk tokens at per-row positions idx..idx+s-1 and
         # attend with ONE multi-token scoring call, causal within the chunk.

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import (ArchConfig, BlockSpec, ATTN, MAMBA, MLSTM,
                                 SLSTM, HYBRID)
+from repro.kernels.decode_attention import (largest_divisor_leq as
+                                            _largest_divisor_leq)
 from repro.models import frontends
 from repro.models import layers as L
 
@@ -160,7 +162,8 @@ def map_cache_kinds(cfg: ArchConfig, caches, *, kv, state) -> Tuple:
 
 def _apply_block(p: Params, x: jax.Array, *, cfg: ArchConfig,
                  spec: BlockSpec, cos, sin, cache, cache_index, mode: str,
-                 block_table=None) -> Tuple[jax.Array, Any, jax.Array]:
+                 block_table=None, chunk_lens=None
+                 ) -> Tuple[jax.Array, Any, jax.Array]:
     if mode == "verify" and spec.kind != ATTN:
         # Recurrent mixers fold the whole chunk into one state — rejecting a
         # draft suffix would need per-position state snapshots, so rollback
@@ -170,12 +173,24 @@ def _apply_block(p: Params, x: jax.Array, *, cfg: ArchConfig,
         raise NotImplementedError(
             f"verify mode needs rollback-free attention blocks, got "
             f"{spec.kind!r}")
+    if mode == "prefill_append" and spec.kind != ATTN:
+        # Chunked prefill demands bit-stable chunk boundaries: attention KV
+        # appends commute with chunking (each position's KV is computed
+        # independently), but a recurrent scan split at a chunk boundary
+        # reassociates its state accumulation and drifts numerically —
+        # which breaks the chunked == unchunked token-for-token guarantee
+        # the engine advertises.  The engine gates chunked prefill on
+        # all-ATTN stacks; this is the model-level backstop.
+        raise NotImplementedError(
+            f"prefill_append mode needs attention blocks (bit-stable chunk "
+            f"boundaries), got {spec.kind!r}")
     h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
     if spec.kind == ATTN:
         h, new_cache = L.attention(p["mixer"], h, cfg=cfg, window=spec.window,
                                    cos=cos, sin=sin, cache=cache,
                                    cache_index=cache_index,
-                                   block_table=block_table, mode=mode)
+                                   block_table=block_table,
+                                   chunk_lens=chunk_lens, mode=mode)
     elif spec.kind == MAMBA:
         h, new_cache = L.mamba(p["mixer"], h, cfg=cfg, cache=cache, mode=mode)
     elif spec.kind == MLSTM:
@@ -210,8 +225,8 @@ REMAT_POLICIES = {
 
 def _run_stack(params: Params, cfg: ArchConfig, x: jax.Array,
                positions: jax.Array, *, mode: str, cache=None,
-               cache_index=None, block_table=None, remat: bool = False,
-               remat_policy: str = "nothing"):
+               cache_index=None, block_table=None, chunk_lens=None,
+               remat: bool = False, remat_policy: str = "nothing"):
     hd = cfg.resolved_head_dim
     cos, sin = L.rope_angles(
         positions, hd, cfg.rope_theta,
@@ -223,7 +238,8 @@ def _run_stack(params: Params, cfg: ArchConfig, x: jax.Array,
         def fn(p, x, c):
             return _apply_block(p, x, cfg=cfg, spec=spec, cos=cos, sin=sin,
                                 cache=c, cache_index=cache_index, mode=mode,
-                                block_table=block_table)
+                                block_table=block_table,
+                                chunk_lens=chunk_lens)
         if remat:
             # checkpoint at BLOCK granularity: backward recomputes one layer
             # at a time, so the live recompute working set is O(1 layer), not
@@ -268,11 +284,6 @@ def forward_train(params: Params, cfg: ArchConfig,
     return frontends.logits_from_hidden(params["embed"], cfg, x), aux
 
 
-def _largest_divisor_leq(n: int, cap: int) -> int:
-    for d in range(min(cap, n), 0, -1):
-        if n % d == 0:
-            return d
-    return 1
 
 
 def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
@@ -385,6 +396,45 @@ def verify_step(params: Params, cfg: ArchConfig, cache: Tuple,
                                  cache=cache, cache_index=index,
                                  block_table=block_table)
     return frontends.logits_from_hidden(params["embed"], cfg, x), new_cache
+
+
+def prefill_chunk_step(params: Params, cfg: ArchConfig, cache: Tuple,
+                       inputs: Dict[str, jax.Array], index: jax.Array,
+                       block_table: Optional[jax.Array] = None,
+                       chunk_lens: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, Tuple]:
+    """Advance each row's cache by up to C tokens in ONE fused step — the
+    chunked-prefill engine's workhorse.
+
+    ``inputs`` holds a fixed-shape (B, C) chunk per row, mixed-modality via
+    ``frontends.embed_chunk`` (region rows feed precomputed patch
+    embeddings selected by ``patch_mask``; token rows feed prompt/answer
+    ids); ``index``: (B,) int32 absolute cache slot of each row's first
+    chunk token; ``chunk_lens``: (B,) int32 valid-token counts — rows are
+    RAGGED, mixing C-token region chunks, 1-token prompt/decode rows,
+    partial tail chunks and idle rows (0).  KV for the valid tokens is
+    written at per-row (page, offset) through ``block_table`` (or scattered
+    densely); padding tokens' writes are steered out of bounds and dropped.
+
+    Returns (logits (B, V), new_cache): logits are materialised at ONE
+    position per row — the LAST VALID chunk token — via a (B, d) hidden
+    gather before the unembedding, so a C-token region chunk never pays a
+    C·vocab unembed it would throw away (only the final chunk of a prefill
+    stream, and decode/prompt rows, consume them).  Only defined for
+    attention-only stacks: chunk boundaries are bit-stable for KV appends,
+    so the chunked stream is token-for-token the unchunked stream."""
+    x, positions = frontends.embed_chunk(params["embed"], cfg, inputs, index)
+    x, _, new_cache = _run_stack(params, cfg, x, positions,
+                                 mode="prefill_append", cache=cache,
+                                 cache_index=index, block_table=block_table,
+                                 chunk_lens=chunk_lens)
+    if chunk_lens is None:
+        xh = x[:, -1]
+    else:
+        last = jnp.clip(chunk_lens - 1, 0, x.shape[1] - 1)
+        xh = jnp.take_along_axis(
+            x, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return frontends.logits_from_hidden(params["embed"], cfg, xh), new_cache
 
 
 def hidden_features(params: Params, cfg: ArchConfig,

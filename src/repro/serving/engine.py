@@ -43,6 +43,12 @@ class EngineConfig:
     #: speculative decoding: γ compact-model draft tokens verified per step
     #: (0 = off).  Needs a ``draft`` tier passed to ``InferenceEngine``.
     spec_gamma: int = 0
+    #: Sarathi-style chunked prefill: stream scene prefills into the paged
+    #: cache this many region tokens per fused step instead of one
+    #: synchronous admission call (0 = off; see EngineCoreConfig).
+    prefill_chunk: int = 0
+    #: token budget per fused chunked step (None → slots + prefill_chunk)
+    token_budget: Optional[int] = None
 
 
 class InferenceEngine:
@@ -70,7 +76,9 @@ class InferenceEngine:
                              cache_impl=self.ec.cache_impl,
                              page_size=self.ec.page_size,
                              prefix_cache_scenes=self.ec.prefix_cache_scenes,
-                             spec_gamma=self.ec.spec_gamma),
+                             spec_gamma=self.ec.spec_gamma,
+                             prefill_chunk=self.ec.prefill_chunk,
+                             token_budget=self.ec.token_budget),
             draft=draft)
 
     def warmup(self) -> None:

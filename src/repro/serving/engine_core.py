@@ -45,6 +45,7 @@ The KV cache behind the slot table comes in two implementations
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -81,6 +82,24 @@ class EngineCoreConfig:
     #: Requires the batched paged engine and attention-only stacks (paged
     #: rollback is only free for attention KV).
     spec_gamma: int = 0
+    #: Sarathi-style chunked prefill: admission stops running the N_r-token
+    #: scene prefill as one synchronous call (the engine's worst
+    #: head-of-line-blocking latency event) and instead streams it into the
+    #: paged KV cache ``prefill_chunk`` region tokens at a time, co-scheduled
+    #: with the in-flight decode rows inside ONE fused token-budget step —
+    #: decode never stops for admission.  0 = off (synchronous admission
+    #: stays the token-for-token oracle, exactly as ``step_impl="vmap"`` /
+    #: ``cache_impl="dense"`` / ``spec_gamma=0`` are oracles).  Values above
+    #: ``n_regions`` clamp.  Requires the batched paged engine and
+    #: attention-only stacks (KV appends are bit-stable across chunk
+    #: boundaries; recurrent scans are not).
+    prefill_chunk: int = 0
+    #: Token budget per fused step (chunked prefill only): each engine
+    #: iteration schedules at most this many tokens — every active decode
+    #: row first (1 each), then pending prompt suffixes, then region chunks
+    #: of streaming scenes (FIFO).  ``None`` → ``slots + prefill_chunk``.
+    #: Must exceed ``slots`` so prefill streams can never starve.
+    token_budget: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -99,6 +118,39 @@ class _Slot:
     #: rows (the distribution each committed token was argmaxed from), so
     #: ``generate_spec`` can honour ``generate``'s (tokens, probs) contract
     probs: Optional[List[np.ndarray]] = None
+    #: chunked-prefill state machine (``prefill_chunk > 0``): "prefill" —
+    #: this slot streams its scene's region chunks; "wait" — its scene is
+    #: streaming in another slot (shared pages mapped at publication);
+    #: "prompt" — prefix resident, the 1-token prompt suffix is pending;
+    #: "decode" — normal answer decoding (the only phase other engines use)
+    phase: str = "decode"
+    #: wall-clock request milestones (time-to-first-token accounting)
+    t_admit: float = 0.0
+    t_first: Optional[float] = None
+
+
+def _sel_scatter(slots: jax.Array, n_slots: int):
+    """The engine's one gather+select slot-scatter idiom.
+
+    ``slots``: (K,) target slot id per source row (out-of-range ids — the
+    padding convention — never match).  Returns ``(hit, put)`` where
+    ``hit`` is the (n_slots,) matched mask and ``put(full, new, axis)``
+    writes source rows of ``new`` into the matched rows of ``full`` along
+    ``axis``.  Formulated as gather + select rather than scatter because
+    XLA:CPU lowers true scatters an order of magnitude slower than the
+    equivalent gather: each destination row looks up which source row
+    targets it, if any."""
+    sel = slots[None, :] == jnp.arange(n_slots)[:, None]      # (S, K)
+    hit = sel.any(axis=1)
+    src = jnp.argmax(sel, axis=1)
+
+    def put(full, new, axis):
+        gathered = jnp.take(new, src, axis=axis)
+        m = hit.reshape((1,) * axis + (-1,)
+                        + (1,) * (full.ndim - axis - 1))
+        return jnp.where(m, gathered, full)
+
+    return hit, put
 
 
 def shared_core(tier, adapter_cfg: EO.EOAdapterConfig) -> "EngineCore":
@@ -170,6 +222,32 @@ class EngineCore:
         # spec engines reserve γ extra KV slots per row (rejected drafts
         # land there and are overwritten by the next chunk)
         self._spec_margin = self.cfg.spec_gamma
+
+        if self.cfg.prefill_chunk:
+            if self.cfg.prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1 when set")
+            if self.cfg.step_impl != "batched" or self.cache_impl != "paged":
+                raise ValueError("chunked prefill requires the batched "
+                                 "paged engine (chunking off is the oracle)")
+            if any(s.kind != ATTN for s in tier.cfg.block_pattern):
+                raise ValueError(
+                    "chunked prefill requires attention-only stacks: KV "
+                    "appends are bit-stable across chunk boundaries, "
+                    "recurrent scans reassociate their state accumulation "
+                    "and break the chunked == unchunked token guarantee")
+            self._chunk = min(self.cfg.prefill_chunk, adapter_cfg.n_regions)
+            self._token_budget = (self.cfg.token_budget
+                                  if self.cfg.token_budget is not None
+                                  else self.cfg.slots + self._chunk)
+            if self._token_budget <= self.cfg.slots:
+                raise ValueError(
+                    f"token_budget {self._token_budget} must exceed the "
+                    f"slot count {self.cfg.slots}: every active decode row "
+                    "takes one token per step, so a smaller budget would "
+                    "starve prefill streams forever")
+        else:
+            self._chunk = 0
+            self._token_budget = 0
 
         params, cfg, ac = tier.params, tier.cfg, adapter_cfg
 
@@ -252,25 +330,12 @@ class EngineCore:
 
         def _slot_scatter_many(slot_cache, slot_logits, slot_index,
                                cache, logits, slots, idx):
-            """Write K freshly-prefilled requests into slots ``slots`` in one
-            jitted update.  Formulated as gather + select rather than
-            scatter (XLA:CPU lowers scatters an order of magnitude slower
-            than the equivalent gather): each slot row looks up which
-            prefill row targets it, if any.  Padding rows carry an
-            out-of-range slot id and simply never match."""
-            sel = slots[None, :] == jnp.arange(n_slots)[:, None]  # (S, K)
-            hit = sel.any(axis=1)                                 # (S,)
-            src = jnp.argmax(sel, axis=1)                         # (S,)
-
-            def put(full, new):
-                # full: (n_super, S, ...); new: (n_super, K, ...)
-                gathered = jnp.take(new, src, axis=1)
-                m = hit.reshape((1, -1) + (1,) * (full.ndim - 2))
-                return jnp.where(m, gathered, full)
-
-            sc = jax.tree.map(put, slot_cache, cache)
-            sl = jnp.where(hit[:, None], jnp.take(logits, src, axis=0),
-                           slot_logits)
+            """Write K freshly-prefilled requests into slots ``slots`` in
+            one jitted update (the shared ``_sel_scatter`` idiom; padding
+            rows carry an out-of-range slot id and simply never match)."""
+            hit, put = _sel_scatter(slots, n_slots)
+            sc = jax.tree.map(lambda f, n: put(f, n, 1), slot_cache, cache)
+            sl = put(slot_logits, logits, 0)
             si = jnp.where(hit, idx.astype(slot_index.dtype), slot_index)
             return sc, sl, si
 
@@ -393,6 +458,77 @@ class EngineCore:
             self._prefix_scatter_j = jax.jit(_prefix_scatter)
             self._paged_admit_j = jax.jit(_paged_admit)
 
+        # -- chunked-prefill machinery (prefill_chunk > 0) ------------------
+        if self.cfg.prefill_chunk:
+            C = self._chunk
+
+            def _region_embed(images):
+                """V(x) only — the learned patch projection, a single small
+                matmul.  This is ALL the model work chunked admission does
+                synchronously; the N_r-token transformer prefill itself
+                streams through later fused steps."""
+                return EO.encode_regions(params, ac, images)
+
+            def _staging_scatter(staging, embs, slots):
+                """Write K freshly-projected region-embed rows into the
+                (slots, N_r, d) staging buffer (the shared ``_sel_scatter``
+                idiom; padding rows never match)."""
+                _, put = _sel_scatter(slots, n_slots)
+                return put(staging, embs, 0)
+
+            budget = self._token_budget
+
+            def _fused_step(slot_logits, slot_cache, block_table, staging,
+                            srow, tokens, pos, patch_mask, use_argmax,
+                            *, answer_vocab):
+                """ONE token-budget step over a FLAT token batch — the
+                fixed shape IS the budget.  Row ``j`` of the
+                (token_budget,) batch is one scheduled token of slot
+                ``srow[j]`` at cache position ``pos[j]``: decode rows feed
+                their own argmax (1 flat row each), prompt rows the
+                host-supplied prompt id, region rows the staged scene
+                embedding at ``pos`` (a scene's chunk occupies up to
+                ``prefill_chunk`` consecutive flat rows, whose KV writes
+                land before the reads — so chunk token t attends to its
+                same-step siblings < t through the cache, exactly as a
+                (B, C) chunk would).  Flat packing is what keeps decode
+                rows from paying chunk width: a fused step costs exactly
+                ``token_budget`` token-positions, never slots·C.  Padding
+                rows (srow == slots) write nothing (steered out of bounds
+                and dropped) and read garbage nobody consumes.  Logits
+                scatter back per slot for the ≤ 1 decode/prompt row each
+                slot contributes; the per-slot index vector is rebuilt by
+                the host (it owns the phase machine)."""
+                valid = srow < n_slots
+                sclamp = jnp.minimum(srow, n_slots - 1)
+                av_logits = slot_logits[:, :answer_vocab]
+                y1 = jnp.argmax(av_logits, axis=-1).astype(jnp.int32)
+                probs0 = jax.nn.softmax(av_logits, axis=-1)
+                tok = jnp.where(use_argmax, jnp.take(y1, sclamp), tokens)
+                feed = staging[sclamp, jnp.clip(pos, 0, n_regions - 1)]
+                bt_flat = jnp.take(block_table, sclamp, axis=0)
+                logits_f, new_cache = T.prefill_chunk_step(
+                    params["backbone"], cfg, slot_cache,
+                    {"tokens": tok[:, None], "patch_embeds": feed[:, None],
+                     "patch_mask": patch_mask},
+                    pos, block_table=bt_flat,
+                    chunk_lens=valid.astype(jnp.int32))
+                wants = valid & ~patch_mask          # decode + prompt rows
+                _, put = _sel_scatter(jnp.where(wants, srow, n_slots),
+                                      n_slots)
+                sl = put(slot_logits, logits_f, 0)
+                return tok, probs0, sl, new_cache
+
+            self._region_embed_j = jax.jit(_region_embed)
+            self._staging_scatter_j = jax.jit(_staging_scatter)
+            self._fused_step_j = jax.jit(_fused_step,
+                                         static_argnames=("answer_vocab",))
+            #: scene → dict(slot, pages, progress, order): region streams
+            #: currently being chunk-prefilled (FIFO by ``order``)
+            self._streaming: Dict[Any, Dict[str, Any]] = {}
+            self._stream_seq = 0
+            self._staging = None
+
         # -- speculative-decoding machinery (spec_gamma > 0) ----------------
         if self.cfg.spec_gamma:
             gam = self.cfg.spec_gamma
@@ -408,17 +544,10 @@ class EngineCore:
 
             def _draft_scatter(draft_cache, cache, slots):
                 """Gather+select scatter of K freshly-prefilled drafter rows
-                (same formulation as ``_slot_scatter_many``)."""
-                sel = slots[None, :] == jnp.arange(n_slots)[:, None]
-                hit = sel.any(axis=1)
-                src = jnp.argmax(sel, axis=1)
-
-                def put(full, new):
-                    gathered = jnp.take(new, src, axis=1)
-                    m = hit.reshape((1, -1) + (1,) * (full.ndim - 2))
-                    return jnp.where(m, gathered, full)
-
-                return jax.tree.map(put, draft_cache, cache)
+                (the shared ``_sel_scatter`` idiom)."""
+                _, put = _sel_scatter(slots, n_slots)
+                return jax.tree.map(lambda f, n: put(f, n, 1),
+                                    draft_cache, cache)
 
             def _verify_accept(chunk, slot_logits, slot_cache, slot_index,
                                active, block_table, answer_vocab):
@@ -503,9 +632,28 @@ class EngineCore:
                                                  active, block_table,
                                                  answer_vocab)
 
+            def _draft_feed(draft_cache, toks, idx):
+                """Mirror tokens committed OUTSIDE a spec step (the chunked
+                engine's fused steps advance decode rows through the plain
+                1-token path) into the drafter's cache at per-row ``idx``.
+                Without this the drafter would resume over zero-KV gaps
+                after a prefill burst and draft garbage — accept rate
+                would silently collapse; with it the drafter's cache holds
+                exactly the committed stream, as the spec-step scan
+                guarantees in the unchunked engine.  Rows with nothing
+                committed write a garbage token at position 0 of drafter
+                rows that are re-prefilled wholesale before their next
+                draft (transition prefill / admission), so nothing ever
+                reads it."""
+                _, dcache = T.decode_step(dparams["backbone"], dcfg,
+                                          draft_cache, {"tokens":
+                                                        toks[:, None]}, idx)
+                return dcache
+
             self._draft_prefill_j = jax.jit(_draft_prefill,
                                             static_argnames=("max_len",))
             self._draft_scatter_j = jax.jit(_draft_scatter)
+            self._draft_feed_j = jax.jit(_draft_feed)
             self._spec_step_j = jax.jit(_spec_step,
                                         static_argnames=("answer_vocab",))
             self._spec_verify_j = jax.jit(_spec_verify,
@@ -526,8 +674,26 @@ class EngineCore:
             "admitted": 0, "finished": 0, "mid_stream_refills": 0,
             "prefix_hits": 0, "prefix_misses": 0,
             "prefill_tokens": 0,        # tokens actually run through prefill
+            #: per-kind breakdown of the same counter, maintained by the ONE
+            #: accounting hook (``_note_prefill``) every prefill path calls:
+            #: "dense" (full [regions|prompt] dense admission), "prefix"
+            #: (unchunked regions-only scene prefill), "prompt" (1-token
+            #: prompt suffixes), "chunk" (region tokens streamed by the
+            #: chunked engine), "draft" (drafter-side prefills, spec only)
+            "prefill_by_kind": {},
             "encode_reuse": 0,          # serve-path scene-encode cache hits
             "occupancy_log": [],        # (step, active_slots_after_admit)
+            #: finished-request milestones (bounded):
+            #: {request_id, task, t_admit, t_first, t_done} wall-clock —
+            #: the serving bench derives TTFT / latency percentiles from it
+            "request_log": [],
+            #: per-step scheduling ledger (all step flavours): token counts
+            #: by kind, fused-step budget accounting, stall steps (a fused
+            #: step where a pending prefill stream got zero budget)
+            "sched": {"steps": 0, "fused_steps": 0, "decode_tokens": 0,
+                      "prompt_tokens": 0, "chunk_tokens": 0,
+                      "scheduled_tokens": 0, "stall_steps": 0,
+                      "budget": self._token_budget, "step_log": []},
         }
         if self.cfg.spec_gamma:
             self.stats["spec"] = {
@@ -610,11 +776,25 @@ class EngineCore:
         if self.cfg.spec_gamma and self._draft_cache is None:
             self._draft_cache = T.init_cache(self.draft.cfg, self.cfg.slots,
                                              self._draft_max_len)
+        if self.cfg.prefill_chunk and self._staging is None:
+            self._staging = jnp.zeros(
+                (self.cfg.slots, self.ac.n_regions, self.tier.cfg.d_model),
+                jnp.dtype(self.tier.cfg.dtype))
 
     def _block_table_dev(self) -> jax.Array:
         if self._bt_dev is None:
             self._bt_dev = jnp.asarray(self._bt_np)
         return self._bt_dev
+
+    def _note_prefill(self, kind: str, tokens: int) -> None:
+        """The ONE prefill-token accounting hook: every path that runs
+        tokens through a prefill — dense whole-prefix admission, unchunked
+        scene-prefix prefill, 1-token prompt suffixes, streamed region
+        chunks, drafter-side prefills — reports here, so the total and the
+        per-kind breakdown can never drift apart across paths again."""
+        self.stats["prefill_tokens"] += tokens
+        by_kind = self.stats["prefill_by_kind"]
+        by_kind[kind] = by_kind.get(kind, 0) + tokens
 
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if not s.active]
@@ -645,6 +825,36 @@ class EngineCore:
             sizes.add(b)
             b *= 2
         sizes.add(self.cfg.slots)
+        if self.cfg.prefill_chunk:
+            # chunked engines never run the synchronous admit trio: compile
+            # the region-embed + staging buckets, the fused token-budget
+            # step (an all-idle call — every row unscheduled, writes
+            # dropped, outputs discarded) and the plain/spec decode step
+            # the engine falls back to at steady state
+            for k in sorted(sizes):
+                images = jnp.zeros((k,) + shape, jnp.float32)
+                embs = self._region_embed_j(images)
+                drop = jnp.full((k,), self.cfg.slots, jnp.int32)
+                self._staging_scatter_j(self._staging, embs, drop)
+                if self.cfg.spec_gamma:
+                    _, dcache, _ = self._draft_prefill_j(
+                        images, jnp.zeros((k,), jnp.int32),
+                        max_len=self._draft_max_len)
+                    self._draft_scatter_j(self._draft_cache, dcache, drop)
+            if self.cfg.spec_gamma:
+                zs = jnp.zeros((self.cfg.slots,), jnp.int32)
+                self._draft_feed_j(self._draft_cache, zs, zs)
+            tb = self._token_budget
+            self._fused_step_j(self._slot_logits, self._slot_cache,
+                               self._block_table_dev(), self._staging,
+                               jnp.full((tb,), self.cfg.slots, jnp.int32),
+                               jnp.zeros((tb,), jnp.int32),
+                               jnp.zeros((tb,), jnp.int32),
+                               jnp.zeros((tb,), bool),
+                               jnp.zeros((tb,), bool),
+                               answer_vocab=self.cfg.answer_vocab)
+            self._step_once_compiled()
+            return
         for k in sorted(sizes):
             images = jnp.zeros((k,) + shape, jnp.float32)
             if self.cache_impl == "paged":
@@ -730,12 +940,15 @@ class EngineCore:
         ``_admit_many_paged``).  Returns the slot id per request."""
         if not requests:
             return []
-        free = self.free_slots()
+        t_admit = time.perf_counter()      # arrival at the engine: TTFT
+        free = self.free_slots()           # clocks start BEFORE any prefill
         if len(requests) > len(free):
             raise RuntimeError("no free slot")
         self._ensure_slot_tables()
         if self.cache_impl == "paged":
-            return self._admit_many_paged(requests, free)
+            if self.cfg.prefill_chunk:
+                return self._admit_many_chunked(requests, free, t_admit)
+            return self._admit_many_paged(requests, free, t_admit)
         k = len(requests)
         kpad = self._admit_pad(k, self.cfg.slots)
         assert kpad >= k, "more requests than slots"
@@ -758,14 +971,19 @@ class EngineCore:
             self._slot_scatter_many_j(self._slot_cache, self._slot_logits,
                                       self._slot_index, cache, logits,
                                       jnp.asarray(target, jnp.int32), idx)
-        self.stats["prefill_tokens"] += k * (self.ac.n_regions + 1)
-        self._record_admissions(target[:k], requests)
+        self._note_prefill("dense", k * (self.ac.n_regions + 1))
+        self._record_admissions(target[:k], requests, t_admit=t_admit)
         return target[:k]
 
     def _record_admissions(self, slot_ids: List[int],
                            requests: List[Request], scenes=None,
-                           private=None) -> None:
+                           private=None, phases=None,
+                           t_admit: Optional[float] = None) -> None:
         log = self.stats["occupancy_log"]
+        # t_admit is captured at admit_many ENTRY: stamping here would run
+        # AFTER the synchronous scene prefill and hide the very admission
+        # stall the TTFT instrumentation exists to expose
+        now = t_admit if t_admit is not None else time.perf_counter()
         for j, (s, request) in enumerate(zip(slot_ids, requests)):
             others_active = self.active_count()
             pending = None
@@ -783,7 +1001,9 @@ class EngineCore:
                 scene=scenes[j] if scenes else None,
                 private_pages=private[j] if private else None,
                 pending_drafts=pending,
-                probs=[] if wants_probs else None)
+                probs=[] if wants_probs else None,
+                phase=phases[j] if phases else "decode",
+                t_admit=now)
             self.stats["admitted"] += 1
             if self._step_no > 0 and others_active > 0:
                 self.stats["mid_stream_refills"] += 1
@@ -823,10 +1043,10 @@ class EngineCore:
             row = jax.tree.map(lambda x: x[:, i:i + 1], state_tree)
             self._prefix.put(scene, allocs[i], row)
         self.stats["prefix_misses"] += km
-        self.stats["prefill_tokens"] += km * self.ac.n_regions
+        self._note_prefill("prefix", km * self.ac.n_regions)
 
-    def _admit_many_paged(self, requests: List[Request],
-                          free: List[int]) -> List[int]:
+    def _admit_many_paged(self, requests: List[Request], free: List[int],
+                          t_admit: Optional[float] = None) -> List[int]:
         """Scene-shared admission: prefix pages are mapped read-only into
         each new request's block table (refcount++), and only the 1-token
         prompt suffix runs through the model — K queries over one scene
@@ -874,7 +1094,7 @@ class EngineCore:
                                 jnp.asarray(admit_slots),
                                 jnp.asarray(ptoks_pad, jnp.int32),
                                 prefix_state)
-        self.stats["prefill_tokens"] += k      # one prompt token per request
+        self._note_prefill("prompt", k)        # one prompt token per request
         if self.cfg.spec_gamma:
             # the drafter mirrors the slot table on its own dense cache: one
             # bucketed [regions | prompt] prefill for the admitted batch
@@ -887,8 +1107,94 @@ class EngineCore:
                 max_len=self._draft_max_len)
             self._draft_cache = self._draft_scatter_j(
                 self._draft_cache, dcache, jnp.asarray(admit_slots))
+            self._note_prefill("draft", k * (self.ac.n_regions + 1))
         self._record_admissions(target, requests, scenes=scenes,
-                                private=private)
+                                private=private, t_admit=t_admit)
+        return target
+
+    # -- chunked admission ----------------------------------------------
+    def _admit_many_chunked(self, requests: List[Request], free: List[int],
+                            t_admit: Optional[float] = None) -> List[int]:
+        """Stall-free admission: NO model forward runs here.  Each request
+        gets a slot, private pages, and a phase:
+
+        - scene resident in the prefix cache → ``"prompt"`` (shared pages
+          mapped read-only; its 1-token prompt suffix rides the next fused
+          step);
+        - scene currently streaming in another slot → ``"wait"`` (shared
+          pages mapped at publication);
+        - scene unseen → ``"prefill"``: this slot becomes the scene's
+          streamer — fresh shared pages are allocated and the region
+          embeddings (one small projection, the only jitted call here) are
+          staged; the N_r region tokens then stream into the pages
+          ``prefill_chunk`` at a time inside the fused token-budget steps,
+          co-scheduled with everyone else's decode tokens.
+
+        Scene-prefix sharing is preserved exactly: only the first query of
+        a scene streams the region chunks; fan-out queries map the pages
+        read-only (resident) or wait for the stream (in flight)."""
+        k = len(requests)
+        scenes = [scene_key(r) for r in requests]
+        batch_scenes = set(scenes)
+        new_streams, seen = [], set()
+        for s_, r in zip(scenes, requests):
+            if (s_ not in self._prefix and s_ not in self._streaming
+                    and s_ not in seen):
+                new_streams.append(s_)
+                seen.add(s_)
+        # whole-batch page budget up front; in-flight streams are protected
+        # alongside this batch's scenes (their pages are not yet resident,
+        # but their scenes must not be evicted-then-restreamed underneath)
+        # and their FUTURE publications need entry capacity reserved NOW —
+        # put() never checks capacity, so without the reservation two
+        # overlapping admissions could push the cache past its bound
+        self._prefix.evict_for(
+            k * self._private_per_slot
+            + len(new_streams) * self._n_shared_pages,
+            need_entries=len(new_streams) + len(self._streaming),
+            protect=batch_scenes | set(self._streaming))
+        target = free[:k]
+        stream_imgs, stream_slots = [], []
+        phases, private = [], []
+        for i, (r, s_) in enumerate(zip(requests, scenes)):
+            slot = target[i]
+            priv = self._pool.alloc(self._private_per_slot)
+            private.append(priv)
+            if s_ in self._prefix:
+                entry = self._prefix.acquire(s_)
+                self._bt_np[slot] = list(entry.pages) + priv
+                phases.append("prompt")
+            elif s_ in self._streaming:
+                # shared slots stay trash-parked until publication
+                self._bt_np[slot] = ([TRASH_PAGE] * self._n_shared_pages
+                                     + priv)
+                phases.append("wait")
+            else:
+                shared = self._pool.alloc(self._n_shared_pages)
+                self._streaming[s_] = {"slot": slot, "pages": shared,
+                                       "progress": 0,
+                                       "order": self._stream_seq}
+                self._stream_seq += 1
+                self._bt_np[slot] = shared + priv
+                phases.append("prefill")
+                stream_imgs.append(np.asarray(r.image))
+                stream_slots.append(slot)
+        self._bt_dev = None
+        self.stats["prefix_hits"] += k - len(new_streams)
+        self.stats["prefix_misses"] += len(new_streams)
+        if stream_slots:
+            km = len(stream_slots)
+            kpad = self._admit_pad(km, self.cfg.slots)
+            imgs = jnp.asarray(np.stack(
+                stream_imgs + [stream_imgs[-1]] * (kpad - km)))
+            embs = self._region_embed_j(imgs)
+            slots_pad = np.asarray(stream_slots
+                                   + [self.cfg.slots] * (kpad - km), np.int32)
+            self._staging = self._staging_scatter_j(self._staging, embs,
+                                                    jnp.asarray(slots_pad))
+        self._record_admissions(target, requests, scenes=scenes,
+                                private=private, phases=phases,
+                                t_admit=t_admit)
         return target
 
     def _release_slot(self, i: int) -> None:
@@ -901,15 +1207,43 @@ class EngineCore:
             self._bt_np[i] = TRASH_PAGE
             self._bt_dev = None
 
+    def _finish_slot(self, i: int,
+                     finished: List[Tuple[Request, np.ndarray]]) -> None:
+        """Shared finish path: emit the answer, log the request's
+        wall-clock milestones (admit / first token / done — the bench's
+        TTFT and latency-percentile source), stash spec probs if the
+        request asked for them, and free the slot."""
+        slot = self._slots[i]
+        finished.append((slot.request, np.asarray(slot.tokens, np.int32)))
+        log = self.stats["request_log"]
+        log.append({"request_id": slot.request.request_id,
+                    "task": slot.request.task, "t_admit": slot.t_admit,
+                    "t_first": slot.t_first,
+                    "t_done": time.perf_counter()})
+        if len(log) > self._occupancy_cap:
+            del log[:self._occupancy_cap // 2]
+        if slot.probs:
+            self._stash_spec_probs(slot)
+        self._release_slot(i)
+        self.stats["finished"] += 1
+
     def step(self) -> List[Tuple[Request, np.ndarray]]:
         """Advance every active slot; return finished requests.
 
         Non-speculative engines commit one token per slot; speculative
         engines (``spec_gamma > 0``) commit the longest verified draft
         prefix + 1 — up to γ+1 tokens per slot per step, token-for-token
-        identical to the greedy stream.  Finished slots free immediately —
-        callers refill them from their pending queue before the next
-        ``step`` (continuous batching)."""
+        identical to the greedy stream.  Chunked-prefill engines
+        (``prefill_chunk > 0``) take a fused token-budget step whenever any
+        slot is still prefilling — decode rows, prompt suffixes and region
+        chunks advance together in ONE call — and fall back to the plain
+        (or speculative) all-decode step otherwise, so steady-state decode
+        pays nothing for the chunked machinery.  Finished slots free
+        immediately — callers refill them from their pending queue before
+        the next ``step`` (continuous batching)."""
+        if self.cfg.prefill_chunk and any(
+                s.active and s.phase != "decode" for s in self._slots):
+            return self._step_chunked()
         if self.cfg.spec_gamma:
             return self._step_spec()
         if self.active_count() == 0:
@@ -923,17 +1257,216 @@ class EngineCore:
                               answer_vocab=self.cfg.answer_vocab)
         toks_np = np.asarray(toks)
         self._step_no += 1
+        now = time.perf_counter()
+        sched = self.stats["sched"]
+        sched["steps"] += 1
         finished: List[Tuple[Request, np.ndarray]] = []
         for i, slot in enumerate(self._slots):
             if not slot.active:
                 continue
             slot.tokens.append(int(toks_np[i]))
+            sched["decode_tokens"] += 1
+            if slot.t_first is None:
+                slot.t_first = now
             if len(slot.tokens) >= slot.l_ans:
-                finished.append((slot.request,
-                                 np.asarray(slot.tokens, np.int32)))
-                self._release_slot(i)
-                self.stats["finished"] += 1
+                self._finish_slot(i, finished)
         return finished
+
+    def _slot_pos(self, i: int) -> int:
+        """A slot's current logical cache index, from the phase machine
+        (the host is the source of truth in chunked mode)."""
+        slot = self._slots[i]
+        if not slot.active:
+            return 0
+        if slot.phase == "decode":
+            return self.ac.n_regions + 1 + len(slot.tokens)
+        if slot.phase == "prompt":
+            return self.ac.n_regions
+        if slot.phase == "prefill":
+            return self._streaming[slot.scene]["progress"]
+        return 0                                   # wait: nothing written
+
+    def _step_chunked(self) -> List[Tuple[Request, np.ndarray]]:
+        """ONE fused token-budget step (Sarathi-style chunked prefill).
+
+        The scheduler packs a FLAT (token_budget,) token batch: every
+        active decode row first (1 token each — in-flight answers are
+        never delayed by admission, the fairness guarantee), then pending
+        1-token prompt suffixes (they unlock decoding, i.e. TTFT), then
+        region chunks of streaming scenes in FIFO order, each up to
+        ``prefill_chunk`` consecutive flat tokens (budget / chunk
+        permitting).  All scheduled tokens advance in ONE ``_fused_step_j``
+        call whose cost is the budget, not slots·chunk; a scene whose
+        stream completes is published to the prefix cache and its
+        streamer + waiters move to the prompt phase (speculative engines
+        drafter-prefill rows the moment they reach the decode phase —
+        drafting starts when a slot finishes prefill)."""
+        self._ensure_slot_tables()
+        n_slots, C = self.cfg.slots, self._chunk
+        n_regions = self.ac.n_regions
+        tb = self._token_budget
+        srow = np.full((tb,), n_slots, np.int32)
+        tokens = np.zeros((tb,), np.int32)
+        pos = np.zeros((tb,), np.int32)
+        patch_mask = np.zeros((tb,), bool)
+        use_argmax = np.zeros((tb,), bool)
+        decode_rows, prompt_rows = [], []
+        for i, slot in enumerate(self._slots):
+            if not slot.active:
+                continue
+            if slot.phase == "decode":
+                decode_rows.append(i)
+            elif slot.phase == "prompt":
+                prompt_rows.append(i)
+        j = 0
+        decode_flat = {}
+        for i in decode_rows:
+            srow[j] = i
+            pos[j] = n_regions + 1 + len(self._slots[i].tokens)
+            use_argmax[j] = True
+            decode_flat[i] = j
+            j += 1
+        scheduled_prompt = []
+        for i in prompt_rows:
+            if j >= tb:
+                break
+            slot = self._slots[i]
+            srow[j] = i
+            pos[j] = n_regions
+            tokens[j] = self.ac.prompt_id(slot.request.task,
+                                          slot.request.prompt)
+            scheduled_prompt.append(i)
+            j += 1
+        streams = sorted(self._streaming.items(),
+                         key=lambda kv: kv[1]["order"])
+        stream_sched = []                          # (scene, tokens granted)
+        for s_, st in streams:
+            c = min(C, n_regions - st["progress"], tb - j)
+            if c <= 0:
+                continue
+            for t in range(c):
+                srow[j] = st["slot"]
+                pos[j] = st["progress"] + t
+                patch_mask[j] = True
+                j += 1
+            stream_sched.append((s_, c))
+
+        tok, probs0, self._slot_logits, self._slot_cache = \
+            self._fused_step_j(
+                self._slot_logits, self._slot_cache,
+                self._block_table_dev(), self._staging,
+                jnp.asarray(srow), jnp.asarray(tokens), jnp.asarray(pos),
+                jnp.asarray(patch_mask), jnp.asarray(use_argmax),
+                answer_vocab=self.cfg.answer_vocab)
+        toks_np = np.asarray(tok)
+        probs_np = None
+        if any(self._slots[i].probs is not None for i in decode_rows):
+            probs_np = np.asarray(probs0)
+        self._step_no += 1
+        now = time.perf_counter()
+
+        n_prompt = len(scheduled_prompt)
+        n_chunk = int(sum(c for _, c in stream_sched))
+        sched = self.stats["sched"]
+        sched["steps"] += 1
+        sched["fused_steps"] += 1
+        sched["decode_tokens"] += len(decode_rows)
+        sched["prompt_tokens"] += n_prompt
+        sched["chunk_tokens"] += n_chunk
+        sched["scheduled_tokens"] += len(decode_rows) + n_prompt + n_chunk
+        if self._streaming and n_chunk == 0:
+            sched["stall_steps"] += 1
+        slog = sched["step_log"]
+        slog.append((len(decode_rows), n_prompt, n_chunk))
+        if len(slog) > self._occupancy_cap:
+            del slog[:self._occupancy_cap // 2]
+        self._note_prefill("prompt", n_prompt)
+        self._note_prefill("chunk", n_chunk)
+
+        if self.cfg.spec_gamma and decode_rows:
+            # keep the drafter's mirrored cache tracking the committed
+            # stream: fused steps commit tokens through the plain path the
+            # drafter never sees, and a later spec step would otherwise
+            # draft over zero-KV gaps
+            dtoks = np.zeros((n_slots,), np.int32)
+            didx = np.zeros((n_slots,), np.int32)
+            for i in decode_rows:
+                jf = decode_flat[i]
+                dtoks[i] = toks_np[jf]
+                didx[i] = pos[jf]
+            self._draft_cache = self._draft_feed_j(
+                self._draft_cache, jnp.asarray(dtoks), jnp.asarray(didx))
+
+        finished: List[Tuple[Request, np.ndarray]] = []
+        for i in decode_rows:
+            slot = self._slots[i]
+            slot.tokens.append(int(toks_np[decode_flat[i]]))
+            if slot.t_first is None:
+                slot.t_first = now
+            if slot.probs is not None:
+                slot.probs.append(probs_np[i])
+            if len(slot.tokens) >= slot.l_ans:
+                self._finish_slot(i, finished)
+        newly_decoding = []
+        for i in scheduled_prompt:
+            self._slots[i].phase = "decode"
+            newly_decoding.append(i)
+        for s_, c in stream_sched:
+            st = self._streaming[s_]
+            st["progress"] += c
+            if st["progress"] < n_regions:
+                continue
+            # stream complete: publish the prefix (the alloc-time page
+            # reference becomes the cache's own, as in _prefill_prefixes)
+            # and move the streamer + every waiter to the prompt phase
+            del self._streaming[s_]
+            state_row = T.map_cache_kinds(
+                self.tier.cfg, [self._slot_cache], kv=lambda t: None,
+                state=lambda t, jj=st["slot"]: jax.tree.map(
+                    lambda x: x[:, jj:jj + 1], t))
+            self._prefix.put(s_, st["pages"], state_row)
+            for jj, slot in enumerate(self._slots):
+                if (slot.active and slot.scene == s_
+                        and slot.phase in ("prefill", "wait")):
+                    self._prefix.acquire(s_)
+                    if slot.phase == "wait":
+                        self._bt_np[jj, :self._n_shared_pages] = st["pages"]
+                        self._bt_dev = None
+                    slot.phase = "prompt"
+        # the host owns the phase machine: rebuild the per-slot index
+        # vector for the plain/spec steps that take over once prefill
+        # drains (fused steps themselves take positions per flat token)
+        self._slot_index = jnp.asarray(
+            [self._slot_pos(i) for i in range(n_slots)], jnp.int32)
+        if self.cfg.spec_gamma and newly_decoding:
+            self._draft_prefill_rows(newly_decoding)
+        return finished
+
+    def _draft_prefill_rows(self, rows: List[int]) -> None:
+        """Drafter-side [regions | prompt] prefill for rows that just
+        finished their chunked prefill — speculative drafting composes on
+        top of chunked admission by starting the moment a slot reaches the
+        decode phase (the compact model's prefill is cheap and was NOT run
+        at admission, which is what keeps chunked admission stall-free)."""
+        km = len(rows)
+        kpad = self._admit_pad(km, self.cfg.slots)
+        imgs = jnp.asarray(np.stack(
+            [np.asarray(self._slots[i].request.image) for i in rows]
+            + [np.asarray(self._slots[rows[-1]].request.image)]
+            * (kpad - km)))
+        ptoks = np.empty((kpad,), np.int32)
+        for j, i in enumerate(rows):
+            slot = self._slots[i]
+            ptoks[j] = self.ac.prompt_id(slot.request.task,
+                                         slot.request.prompt)
+        ptoks[km:] = ptoks[km - 1]
+        _, dcache, _ = self._draft_prefill_j(imgs, jnp.asarray(ptoks),
+                                             max_len=self._draft_max_len)
+        slots_pad = np.asarray(rows + [self.cfg.slots] * (kpad - km),
+                               np.int32)
+        self._draft_cache = self._draft_scatter_j(self._draft_cache, dcache,
+                                                  jnp.asarray(slots_pad))
+        self._note_prefill("draft", km * (self.ac.n_regions + 1))
 
     def _step_spec(self) -> List[Tuple[Request, np.ndarray]]:
         """Speculative all-slot step: draft γ tokens per row (piggybacked
@@ -993,9 +1526,12 @@ class EngineCore:
         if any(s.active and s.probs is not None for s in self._slots):
             probs_np = np.asarray(tok_probs)
         self._step_no += 1
+        now = time.perf_counter()
         sp["steps"] += 1
         sp["slot_steps"] += n_active
         sp["piggybacked"] += int(plen.sum())
+        sched = self.stats["sched"]
+        sched["steps"] += 1
         finished: List[Tuple[Request, np.ndarray]] = []
         for i, slot in enumerate(self._slots):
             if not slot.active:
@@ -1019,15 +1555,14 @@ class EngineCore:
                 if p is not None and pos < len(p) and p[pos] != t:
                     slot.pending_drafts = None  # satellite stream diverged
                 slot.tokens.append(t)
+                if slot.t_first is None:
+                    slot.t_first = now
                 if slot.probs is not None:
                     slot.probs.append(probs_np[i, j])
                 sp["emitted"] += 1
+                sched["decode_tokens"] += 1
             if len(slot.tokens) >= slot.l_ans:
-                finished.append((slot.request,
-                                 np.asarray(slot.tokens, np.int32)))
-                self._stash_spec_probs(slot)
-                self._release_slot(i)
-                self.stats["finished"] += 1
+                self._finish_slot(i, finished)
         return finished
 
     def _stash_spec_probs(self, slot: _Slot) -> None:
@@ -1039,6 +1574,28 @@ class EngineCore:
         self._spec_probs[slot.request.request_id] = np.stack(slot.probs)
         while len(self._spec_probs) > 64:
             self._spec_probs.popitem(last=False)
+
+    def scheduler_stats(self) -> Dict[str, Any]:
+        """Token-budget scheduler counters + derived rates.
+
+        Works for every engine flavour (the plain and speculative steps
+        report their decode tokens through the same ledger); the
+        fused-step fields — budget utilisation, per-kind token mix, stall
+        steps — are only non-trivial for chunked engines."""
+        sched = self.stats["sched"]
+        out = {k: v for k, v in sched.items() if k != "step_log"}
+        steps = max(sched["steps"], 1)
+        out["tokens_per_step"] = {
+            "decode": sched["decode_tokens"] / steps,
+            "prompt": sched["prompt_tokens"] / steps,
+            "chunk": sched["chunk_tokens"] / steps,
+        }
+        fused = sched["fused_steps"]
+        out["budget_utilization"] = (
+            sched["scheduled_tokens"] / (fused * sched["budget"])
+            if fused and sched["budget"] else 0.0)
+        out["prefill_by_kind"] = dict(self.stats["prefill_by_kind"])
+        return out
 
     def spec_stats(self) -> Dict[str, Any]:
         """Speculative-decoding counters + derived rates (empty when off)."""
@@ -1118,8 +1675,15 @@ class EngineCore:
             pages = 0.0
             for s in active:
                 entry = self._prefix.get(s.scene)
-                pages += (self._private_per_slot
-                          + self._n_shared_pages / max(entry.users, 1))
+                if entry is None:
+                    # chunked engines: the scene is still streaming (or this
+                    # slot is waiting on it) — charge the streamer the whole
+                    # shared group, waiters nothing yet
+                    share = (self._n_shared_pages
+                             if s.phase == "prefill" else 0)
+                else:
+                    share = self._n_shared_pages / max(entry.users, 1)
+                pages += self._private_per_slot + share
             out["kv_bytes_per_slot"] = int(page_bytes * pages / len(active))
         else:
             out["kv_bytes_per_slot"] = int(page_bytes * self._pages_per_slot)

@@ -1,0 +1,442 @@
+"""Chunked prefill fused into the decode step (Sarathi-style).
+
+Guarantee layers (none need trained weights — equivalence, fairness and
+accounting are training-independent, so everything here runs in the fast
+set):
+
+- model: a chain of ``T.prefill_chunk_step`` calls (region chunks + the
+  1-token prompt suffix) reproduces ``T.prefill``'s logits and decodes the
+  same token chain, for the paged cache the engine streams into — ragged
+  per-row chunk lengths included;
+- engine: the chunked engine serves mixed-task fan-out traffic
+  token-for-token identically to the unchunked admission oracle across
+  ``prefill_chunk`` ∈ {8, 32, full} and with ``spec_gamma`` on;
+- fairness: a prefill-heavy admission burst never delays in-flight decode
+  rows — every active decode slot commits exactly one token on every fused
+  step (the budget schedules decode rows first);
+- scheduling: per-step scheduled tokens never exceed the budget, prefill
+  streams never starve (no stall step while budget headroom exists), and
+  the unified prefill accounting ends at the same totals as the unchunked
+  path;
+- safety: published shared prefix pages stay bit-identical once fan-out
+  queries decode over them;
+- config: chunking demands the batched paged engine, attention-only
+  stacks, and a budget that can't starve prefill.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.spaceverse_pair import proxy_pair
+from repro.core import eo_adapter as EO
+from repro.core.cascade import TierModel
+from repro.data import synthetic
+from repro.models import transformer as T
+from repro.serving import (EngineConfig, EngineCore, EngineCoreConfig,
+                           InferenceEngine, Request)
+
+
+@pytest.fixture(scope="module")
+def system():
+    """Init-only satellite (draft) + ground tiers + data."""
+    sat_cfg, gs_cfg = proxy_pair("small")
+    ac = EO.EOAdapterConfig()
+    sat = TierModel(EO.init_adapter(jax.random.PRNGKey(0), sat_cfg, ac),
+                    sat_cfg)
+    gs = TierModel(EO.init_adapter(jax.random.PRNGKey(1), gs_cfg, ac),
+                   gs_cfg)
+    eo_cfg = synthetic.EOTaskConfig(image_size=ac.image_size, grid=ac.grid,
+                                    num_classes=ac.num_classes)
+    data = synthetic.make_dataset("cls", 16, seed=0, cfg=eo_cfg)
+    return sat, gs, ac, data
+
+
+# ---------------------------------------------------------------------------
+# model level: prefill_chunk_step chain == full prefill
+# ---------------------------------------------------------------------------
+
+def _paged_setup(cfg, b, max_len, page=8):
+    pages_per = -(-max_len // page)
+    n_pages = 1 + b * pages_per
+    cache = T.init_paged_cache(cfg, b, n_pages, page)
+    bt = jnp.asarray(np.arange(1, 1 + b * pages_per)
+                     .reshape(b, pages_per).astype(np.int32))
+    return cache, bt
+
+
+@pytest.mark.parametrize("chunk", [4, 7, 16])
+def test_prefill_chunk_chain_matches_full_prefill(system, chunk):
+    """Streaming [regions | prompt] through C-token prefill_chunk_steps
+    must land where one T.prefill call lands: same final logits (to fp32
+    reassociation noise) and the same greedy decode chain afterwards."""
+    _, gs, ac, _ = system
+    cfg, params = gs.cfg, gs.params["backbone"]
+    b, r = 2, ac.n_regions
+    max_len = r + 1 + 4
+    imgs = jnp.asarray(np.random.RandomState(0).rand(
+        b, ac.image_size, ac.image_size, ac.channels).astype(np.float32))
+    ptok = jnp.asarray([3, 5], jnp.int32)
+    logits_full, cache_full, _ = EO.prefill_tokens(gs.params, cfg, ac, imgs,
+                                                   ptok, max_len)
+
+    pcache, bt = _paged_setup(cfg, b, max_len)
+    emb = EO.encode_regions(gs.params, ac, imgs)
+    zeros_tok = jnp.zeros((b, chunk), jnp.int32)
+    for off in range(0, r, chunk):
+        c = min(chunk, r - off)
+        feed = jnp.zeros((b, chunk, cfg.d_model)).at[:, :c].set(
+            emb[:, off:off + c])
+        logits, pcache = T.prefill_chunk_step(
+            params, cfg, pcache,
+            {"tokens": zeros_tok, "patch_embeds": feed,
+             "patch_mask": jnp.ones((b,), bool)},
+            jnp.full((b,), off, jnp.int32), block_table=bt,
+            chunk_lens=jnp.full((b,), c, jnp.int32))
+    toks = zeros_tok.at[:, 0].set(ptok)
+    logits, pcache = T.prefill_chunk_step(
+        params, cfg, pcache,
+        {"tokens": toks, "patch_embeds": jnp.zeros((b, chunk, cfg.d_model)),
+         "patch_mask": jnp.zeros((b,), bool)},
+        jnp.full((b,), r, jnp.int32), block_table=bt,
+        chunk_lens=jnp.ones((b,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_full),
+                               rtol=1e-5, atol=1e-5)
+
+    # the committed greedy chain (what the engine guarantees) stays equal
+    lg_f, lg_c = logits_full, logits
+    for t in range(4):
+        tf = jnp.argmax(lg_f[:, :9], -1).astype(jnp.int32)
+        tc = jnp.argmax(lg_c[:, :9], -1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(tf), np.asarray(tc))
+        lg_f, cache_full = T.decode_step(params, cfg, cache_full,
+                                         {"tokens": tf[:, None]},
+                                         jnp.asarray(r + 1 + t, jnp.int32))
+        lg_c, pcache = T.decode_step(params, cfg, pcache,
+                                     {"tokens": tc[:, None]},
+                                     jnp.full((b,), r + 1 + t, jnp.int32),
+                                     block_table=bt)
+
+
+def test_prefill_chunk_step_ragged_rows(system):
+    """One fused call mixes a full region chunk, a 1-token prompt row and
+    an idle row (chunk_len 0): each row must behave exactly as its
+    dedicated-call counterpart — idle rows keep cache and index."""
+    _, gs, ac, _ = system
+    cfg, params = gs.cfg, gs.params["backbone"]
+    b, r, C = 3, ac.n_regions, 8
+    max_len = r + 1 + 4
+    imgs = jnp.asarray(np.random.RandomState(1).rand(
+        b, ac.image_size, ac.image_size, ac.channels).astype(np.float32))
+    emb = EO.encode_regions(gs.params, ac, imgs)
+    pcache, bt = _paged_setup(cfg, b, max_len)
+    # row 1 already holds its full region prefix (streamed in two chunks)
+    for off in range(0, r, C):
+        feed = jnp.zeros((b, C, cfg.d_model)).at[:, :C].set(
+            emb[:, off:off + C])
+        _, pcache = T.prefill_chunk_step(
+            params, cfg, pcache,
+            {"tokens": jnp.zeros((b, C), jnp.int32), "patch_embeds": feed,
+             "patch_mask": jnp.ones((b,), bool)},
+            jnp.full((b,), off, jnp.int32), block_table=bt,
+            chunk_lens=jnp.asarray([0, C, 0], jnp.int32))
+    before = [np.asarray(x) for x in jax.tree.leaves(pcache)]
+
+    # mixed call: row 0 streams its first region chunk, row 1 feeds its
+    # prompt, row 2 idles
+    feed = jnp.zeros((b, C, cfg.d_model)).at[:, :C].set(emb[:, :C])
+    toks = jnp.zeros((b, C), jnp.int32).at[1, 0].set(7)
+    logits, after = T.prefill_chunk_step(
+        params, cfg, pcache,
+        {"tokens": toks, "patch_embeds": feed,
+         "patch_mask": jnp.asarray([True, False, False])},
+        jnp.asarray([0, r, 0], jnp.int32), block_table=bt,
+        chunk_lens=jnp.asarray([C, 1, 0], jnp.int32))
+
+    # row 1's logits equal a dedicated 1-token prompt call on the same cache
+    want, _ = T.prefill_chunk_step(
+        params, cfg, pcache,
+        {"tokens": toks, "patch_embeds": jnp.zeros_like(feed),
+         "patch_mask": jnp.zeros((b,), bool)},
+        jnp.asarray([0, r, 0], jnp.int32), block_table=bt,
+        chunk_lens=jnp.asarray([0, 1, 0], jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits[1]), np.asarray(want[1]),
+                               rtol=1e-5, atol=1e-5)
+    # row 2 (idle) wrote nothing: its private pages are bit-identical
+    row2_pages = np.asarray(bt)[2]
+    for a, b_ in zip(jax.tree.leaves(after), before):
+        np.testing.assert_array_equal(np.asarray(a)[:, row2_pages],
+                                      b_[:, row2_pages])
+
+
+def test_prefill_append_rejects_recurrent_stacks():
+    """Chunk boundaries are only bit-stable for attention KV appends — the
+    model-level backstop mirrors the engine gate."""
+    from repro import configs
+    cfg = configs.get_config("hymba-1.5b", reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    cache = T.init_cache(cfg, 2, 16)
+    with pytest.raises(NotImplementedError):
+        T.prefill_chunk_step(params, cfg, cache,
+                             {"tokens": jnp.zeros((2, 4), jnp.int32)},
+                             jnp.zeros((2,), jnp.int32),
+                             chunk_lens=jnp.full((2,), 4, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# engine level: chunked == unchunked token-for-token
+# ---------------------------------------------------------------------------
+
+def _queue(data, n=10):
+    """Mixed fan-out: det (N_r tokens) next to vqa/cls (1 token), scene
+    sharing (several queries per image) and mid-stream refills."""
+    reqs = [Request(task="det", image=data["images"][0], prompt=0),
+            Request(task="cls", image=data["images"][0], prompt=0)]
+    reqs += [Request(task="vqa", image=data["images"][i % 4], prompt=i % 2)
+             for i in range(n - 3)]
+    reqs.append(Request(task="det", image=data["images"][1], prompt=1))
+    return reqs
+
+
+def _clone(reqs):
+    return [Request(task=r.task, image=r.image, prompt=r.prompt,
+                    request_id=r.request_id) for r in reqs]
+
+
+def _serve(core, reqs):
+    out = {}
+    q = list(reversed(reqs))
+    guard = 0
+    while q or core.active_count():
+        n = min(len(q), len(core.free_slots()))
+        if n:
+            core.admit_many([q.pop() for _ in range(n)])
+        for r, t in core.step():
+            out[r.request_id] = t.tolist()
+        guard += 1
+        assert guard < 5000, "engine failed to drain"
+    return out
+
+
+@pytest.mark.parametrize("chunk", [8, 32, "full"])
+def test_chunked_matches_unchunked_token_for_token(system, chunk):
+    """The tentpole equivalence: streaming scene prefills through fused
+    token-budget steps serves mixed traffic with exactly the synchronous
+    admission oracle's token streams."""
+    _, gs, ac, data = system
+    chunk = ac.n_regions if chunk == "full" else chunk
+    reqs = _queue(data)
+    base = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=3, answer_vocab=9))
+    o_base = _serve(base, reqs)
+    chunked = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                         EngineCoreConfig(slots=3, answer_vocab=9,
+                                          prefill_chunk=chunk))
+    o_chunked = _serve(chunked, _clone(reqs))
+    assert o_chunked == o_base
+    assert chunked.stats["finished"] == len(reqs)
+    # the unified accounting lands at the same total prefill tokens: the
+    # chunked engine streamed exactly what the oracle prefilled in one shot
+    assert (chunked.stats["prefill_tokens"] == base.stats["prefill_tokens"])
+    by_kind = chunked.stats["prefill_by_kind"]
+    assert by_kind["chunk"] == base.stats["prefill_by_kind"]["prefix"]
+    assert by_kind["prompt"] == base.stats["prefill_by_kind"]["prompt"]
+
+
+def test_chunked_with_spec_matches_greedy(system):
+    """Speculation composes on top of chunking: the drafter starts the
+    moment a slot finishes its chunked prefill, and the committed streams
+    stay exactly the greedy oracle's."""
+    sat, gs, ac, data = system
+    reqs = _queue(data)
+    base = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=3, answer_vocab=9))
+    o_base = _serve(base, reqs)
+    spec = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=3, answer_vocab=9, spec_gamma=3,
+                                       prefill_chunk=8), draft=sat)
+    o_spec = _serve(spec, _clone(reqs))
+    assert o_spec == o_base
+    sp = spec.spec_stats()
+    assert sp["steps"] > 0                     # spec steps did run
+    assert spec.scheduler_stats()["fused_steps"] > 0   # and fused steps too
+    assert spec.stats["prefill_by_kind"]["draft"] > 0
+
+
+def test_chunked_spec_drafter_tracks_fused_commits(system):
+    """Tokens committed by fused steps (the plain 1-token path the drafter
+    never scans through) must still land in the drafter's mirrored cache —
+    otherwise a later spec step drafts over zero-KV gaps and accept rate
+    silently collapses.  Pin: after a prefill burst advanced a decoding
+    slot through fused steps, the drafter's cache row holds non-zero KV at
+    every committed answer position."""
+    sat, gs, ac, data = system
+    core = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=2, answer_vocab=9, spec_gamma=2,
+                                       prefill_chunk=4, token_budget=7),
+                      draft=sat)
+    core.admit_many([Request(task="det", image=data["images"][0], prompt=0)])
+    while any(s.active and s.phase != "decode" for s in core._slots):
+        core.step()
+    core.step()                                # one spec step, all-decode
+    core.admit_many([Request(task="det", image=data["images"][1], prompt=1)])
+    committed0 = len(core._slots[0].tokens)
+    while any(s.active and s.phase != "decode" for s in core._slots):
+        core.step()                            # fused steps: slot 0 decodes
+    s0 = core._slots[0]
+    assert len(s0.tokens) > committed0         # fused steps did commit
+    kv = jax.tree.leaves(core._draft_cache)[0]  # (n_super, B, max_len, ...)
+    r = ac.n_regions
+    for t in range(len(s0.tokens)):
+        assert float(np.abs(np.asarray(kv[:, 0, r + 1 + t])).max()) > 0, \
+            f"drafter KV gap at committed token {t}"
+
+
+def test_chunked_inference_engine_front_door(system):
+    """EngineConfig(prefill_chunk=C) wires through InferenceEngine and
+    serves identically to the default engine."""
+    _, gs, ac, data = system
+    reqs = _queue(data, n=6)
+    base = InferenceEngine(gs.params, gs.cfg, ac,
+                           EngineConfig(slots=2, answer_vocab=9))
+    r_base = base.serve(list(reqs))
+    chunked = InferenceEngine(gs.params, gs.cfg, ac,
+                              EngineConfig(slots=2, answer_vocab=9,
+                                           prefill_chunk=8))
+    chunked.warmup()
+    r_chunked = chunked.serve(_clone(reqs))
+    by_id = lambda rs: {r.request_id: np.asarray(r.tokens).tolist()
+                        for r in rs}
+    assert by_id(r_base) == by_id(r_chunked)
+
+
+# ---------------------------------------------------------------------------
+# fairness / starvation / budget
+# ---------------------------------------------------------------------------
+
+def test_prefill_burst_never_stalls_decode_rows(system):
+    """The fairness guarantee: while a prefill-heavy admission burst
+    streams, every in-flight decode row commits exactly ONE token on every
+    fused step — admission cannot head-of-line-block decode."""
+    _, gs, ac, data = system
+    core = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=6, answer_vocab=9,
+                                       prefill_chunk=4))
+    # two det requests decode long answers...
+    core.admit_many([Request(task="det", image=data["images"][0], prompt=0),
+                     Request(task="det", image=data["images"][1], prompt=1)])
+    while any(s.active and s.phase != "decode" for s in core._slots):
+        core.step()
+    decoding = [i for i, s in enumerate(core._slots) if s.active]
+    assert len(decoding) == 2
+    # ...then a burst of 4 NEW scenes arrives (4 × N_r region tokens to
+    # stream) — the budget schedules the decode rows first on every step
+    core.admit_many([Request(task="vqa", image=data["images"][4 + j],
+                             prompt=j % 2) for j in range(4)])
+    for _ in range(6):
+        lens_before = [len(core._slots[i].tokens) for i in decoding]
+        if not any(s.active and s.phase != "decode" for s in core._slots):
+            break
+        core.step()
+        for i, before in zip(decoding, lens_before):
+            if core._slots[i].active:
+                assert len(core._slots[i].tokens) == before + 1, \
+                    "decode row skipped a token during the prefill burst"
+    assert core.scheduler_stats()["stall_steps"] == 0
+
+
+def test_budget_bounds_every_fused_step(system):
+    """No fused step schedules more tokens than the budget, and a tight
+    budget spreads one scene's prefill across more steps without changing
+    the total streamed tokens."""
+    _, gs, ac, data = system
+    reqs = _queue(data, n=8)
+    base = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=4, answer_vocab=9))
+    o_base = _serve(base, reqs)
+    tight = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                       EngineCoreConfig(slots=4, answer_vocab=9,
+                                        prefill_chunk=8, token_budget=6))
+    o_tight = _serve(tight, _clone(reqs))
+    assert o_tight == o_base
+    sched = tight.stats["sched"]
+    for decode, prompt, chunk in sched["step_log"]:
+        assert decode + prompt + chunk <= 6
+    stats = tight.scheduler_stats()
+    assert 0.0 < stats["budget_utilization"] <= 1.0
+    assert stats["prefill_by_kind"]["chunk"] == \
+        base.stats["prefill_by_kind"]["prefix"]
+
+
+def test_chunked_prefix_pages_stay_shared_and_unwritten(system):
+    """Fan-out over one scene: only the first query streams the region
+    chunks (one miss, the rest hits), and the published shared pages stay
+    bit-identical while the fan-out queries decode over them."""
+    _, gs, ac, data = system
+    core = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=4, answer_vocab=9,
+                                       prefill_chunk=8))
+    img = data["images"][0]
+    core.admit_many([Request(task="det", image=img, prompt=0),
+                     Request(task="vqa", image=img, prompt=0),
+                     Request(task="cls", image=img, prompt=0)])
+    assert core.stats["prefix_misses"] == 1
+    assert core.stats["prefix_hits"] == 2
+    while any(s.active and s.phase != "decode" for s in core._slots):
+        core.step()
+    pages = sorted({p for e in core._prefix._entries.values()
+                    for p in e.pages})
+    assert pages
+
+    def snap():
+        out = []
+        T.map_cache_kinds(
+            core.tier.cfg, [core._slot_cache],
+            kv=lambda t: out.append(jax.tree.map(
+                lambda x: np.asarray(x[:, pages]), t)),
+            state=lambda t: None)
+        return out
+
+    s0 = snap()
+    for _ in range(3):
+        core.step()
+    for a, b in zip(jax.tree.leaves(s0), jax.tree.leaves(snap())):
+        np.testing.assert_array_equal(a, b)
+    # exactly one stream ran: N_r chunk tokens + one prompt per request
+    assert core.stats["prefill_by_kind"]["chunk"] == ac.n_regions
+
+
+def test_chunked_warmup_precompiles_everything(system):
+    """After warmup, admission + fused steps + the steady-state fallback
+    trigger NO new compilations — the contact-window guarantee extended to
+    the chunked machinery."""
+    _, gs, ac, data = system
+    core = EngineCore(TierModel(gs.params, gs.cfg), ac,
+                      EngineCoreConfig(slots=2, answer_vocab=9,
+                                       prefill_chunk=8))
+    core.warmup()
+    fns = [core._fused_step_j, core._region_embed_j,
+           core._staging_scatter_j, core._slot_step_j]
+    sizes = [f._cache_size() for f in fns]
+    assert all(s > 0 for s in sizes)
+    _serve(core, _queue(data, n=5))
+    assert [f._cache_size() for f in fns] == sizes
+
+
+def test_chunked_config_validation(system):
+    sat, gs, ac, _ = system
+    tier = TierModel(gs.params, gs.cfg)
+    with pytest.raises(ValueError):               # dense cache
+        EngineCore(tier, ac, EngineCoreConfig(prefill_chunk=8,
+                                              cache_impl="dense"))
+    with pytest.raises(ValueError):               # vmap oracle
+        EngineCore(tier, ac, EngineCoreConfig(prefill_chunk=8,
+                                              step_impl="vmap"))
+    with pytest.raises(ValueError):               # starving budget
+        EngineCore(tier, ac, EngineCoreConfig(slots=4, prefill_chunk=8,
+                                              token_budget=4))
+    from repro import configs
+    cfg = configs.get_config("hymba-1.5b", reduced=True)
+    hy = TierModel(EO.init_adapter(jax.random.PRNGKey(0), cfg, ac), cfg)
+    with pytest.raises(ValueError):               # recurrent stack
+        EngineCore(hy, ac, EngineCoreConfig(prefill_chunk=8))

@@ -236,6 +236,72 @@ def test_paged_multi_token_scoring_parity(s, h, kh, hd, page, window, q_len):
 
 
 @pytest.mark.kernel_parity
+@pytest.mark.parametrize("q_len,q_blk", [(1, 8), (4, 2), (8, 8), (16, 4),
+                                         (6, 4)])
+@pytest.mark.parametrize("s,h,kh,hd,page,window", [
+    (64, 8, 2, 32, 8, 0),        # plain chunked prefill-append
+    (64, 4, 1, 64, 16, 24),      # + sliding window
+    (64, 4, 4, 16, 8, 0),        # MHA (group = 1)
+])
+def test_paged_prefill_attention_parity(s, h, kh, hd, page, window, q_len,
+                                        q_blk):
+    """The chunked-prefill kernel: a C-token prefix-append chunk per row,
+    scored with a TILED query-chunk grid (q_blk-token sub-blocks, incl. a
+    q_blk that does not divide C and falls back to a smaller divisor) vs
+    the gather-then-dense chunk-causal oracle.  Ragged lengths cover the
+    len-0 idle row, a row SHORTER than the chunk (early chunk tokens fully
+    masked — the m == NEG_INF corner), the chunk-only row (a fresh stream:
+    nothing before the chunk), a ragged mid-prefill tail and the full row;
+    shared-prefix pages alias across rows and the pools stay bit-identical
+    (the kernel never writes KV)."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    clen = jnp.asarray([0, max(q_len - 1, 1), q_len, q_len + s // 2, s],
+                       jnp.int32)
+    b = clen.shape[0]
+    n_logical = s // page
+    n_pages = 1 + 2 + b * n_logical
+    kp = _rand(k1, (n_pages, page, kh, hd), jnp.float32)
+    vp = _rand(k2, (n_pages, page, kh, hd), jnp.float32)
+    q = _rand(k3, (b, q_len, h, hd), jnp.float32)
+    bt = jnp.asarray(_block_tables(np.random.RandomState(0), b, n_logical,
+                                   n_pages, n_shared=2))
+    kp_before, vp_before = np.asarray(kp).copy(), np.asarray(vp).copy()
+    got = ops.paged_prefill_attention(q, kp, vp, bt, clen, window=window,
+                                      q_blk=q_blk, impl="pallas_interpret")
+    want = ops.paged_prefill_attention(q, kp, vp, bt, clen, window=window,
+                                       impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert np.all(np.asarray(got)[0] == 0)      # idle row → exact zeros
+    np.testing.assert_array_equal(np.asarray(kp), kp_before)
+    np.testing.assert_array_equal(np.asarray(vp), vp_before)
+
+
+@pytest.mark.kernel_parity
+def test_paged_prefill_matches_multi_decode_kernel():
+    """At the same q_len the tiled prefill-append kernel and the γ+1
+    verify kernel compute the same function — the tiling is pure structure
+    (per-sub-block scratch + skip bounds), not new semantics."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    s, h, kh, hd, page, t = 64, 4, 2, 32, 8, 8
+    clen = jnp.asarray([t, 21, 40, s], jnp.int32)
+    b = clen.shape[0]
+    n_logical = s // page
+    n_pages = 1 + 2 + b * n_logical
+    kp = _rand(k1, (n_pages, page, kh, hd), jnp.float32)
+    vp = _rand(k2, (n_pages, page, kh, hd), jnp.float32)
+    q = _rand(k3, (b, t, h, hd), jnp.float32)
+    bt = jnp.asarray(_block_tables(np.random.RandomState(2), b, n_logical,
+                                   n_pages, n_shared=2))
+    prefill = ops.paged_prefill_attention(q, kp, vp, bt, clen, q_blk=4,
+                                          impl="pallas_interpret")
+    verify = ops.paged_multi_decode_attention(q, kp, vp, bt, clen,
+                                              impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(prefill), np.asarray(verify),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.kernel_parity
 def test_multi_token_chunk_matches_sequential_single_token():
     """Chunk-causal semantics pinned against the single-token kernel: token
     t of a T-chunk must equal a 1-token call at cache_len - (T-1-t)."""
