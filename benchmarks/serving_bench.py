@@ -111,9 +111,11 @@ def _latency_stats(core: EngineCore, arrivals: Dict[int, float] = None
     log.  ``arrivals``: request_id → absolute arrival wall-clock; when
     given, TTFT/latency are measured from arrival (queue wait included),
     else from admission."""
+    guard = {"steady_recompiles":
+             core.scheduler_stats()["steady_recompiles"]}
     log = core.stats["request_log"]
     if not log:
-        return {"requests": 0}
+        return {"requests": 0, **guard}
     t0 = lambda r: (arrivals[r["request_id"]] if arrivals is not None
                     else r["t_admit"])
     ttft = np.asarray([r["t_first"] - t0(r) for r in log])
@@ -125,6 +127,7 @@ def _latency_stats(core: EngineCore, arrivals: Dict[int, float] = None
         "ttft_p99_ms": ms(np.percentile(ttft, 99)),
         "latency_p50_ms": ms(np.percentile(lat, 50)),
         "latency_p99_ms": ms(np.percentile(lat, 99)),
+        **guard,
     }
 
 
@@ -441,6 +444,13 @@ def bench_spec(*, slots: int, n_req: int, det_frac: float, gamma: int,
     outs_spec = [r.pop("outputs") for r in runs_spec]
     match = all(ob == os_ for ob, os_ in zip(outs_base, outs_spec))
     r_base, r_spec = median_run(runs_base), median_run(runs_spec)
+    # the guard counter is cumulative per engine: overwrite the median
+    # rep's snapshot with the end-of-bench total so nothing hides in an
+    # unpicked rep
+    r_base["steady_recompiles"] = \
+        base.scheduler_stats()["steady_recompiles"]
+    r_spec["steady_recompiles"] = \
+        spec.scheduler_stats()["steady_recompiles"]
     sp = spec.spec_stats()
     return {
         "slots": slots, "requests": n_req, "det_frac": det_frac,
@@ -714,6 +724,12 @@ def bench_chunked(*, slots: int, grid: int, bursts: int, new_scenes: int,
     med = lambda runs: sorted(
         runs, key=lambda r: r.get("vqa_ttft_p50_ms", 0.0))[len(runs) // 2]
     r_arr_stall, r_arr_chunk = med(runs_stall), med(runs_chunk)
+    # cumulative guard counters: report end-of-bench totals, not whichever
+    # rep the median picked
+    r_arr_stall["steady_recompiles"] = \
+        stall.scheduler_stats()["steady_recompiles"]
+    r_arr_chunk["steady_recompiles"] = \
+        chunked.scheduler_stats()["steady_recompiles"]
 
     sched = chunked.scheduler_stats()
     ratio = lambda a, b: round(a / max(b, 1e-9), 3)
@@ -745,6 +761,23 @@ def bench_chunked(*, slots: int, grid: int, bursts: int, new_scenes: int,
                       ("fused_steps", "stall_steps", "budget",
                        "budget_utilization", "tokens_per_step")},
     }
+
+
+def _collect_recompiles(obj, path=""):
+    """Every ``steady_recompiles`` counter anywhere in the record tree —
+    one per engine each workload drove — as (path, count) pairs."""
+    found = []
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p = f"{path}.{k}" if path else str(k)
+            if k == "steady_recompiles" and isinstance(v, (int, float)):
+                found.append((path or "run", int(v)))
+            else:
+                found.extend(_collect_recompiles(v, p))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            found.extend(_collect_recompiles(v, f"{path}[{i}]"))
+    return found
 
 
 HISTORY_CAP = 12
@@ -810,6 +843,11 @@ def main(argv=None) -> int:
                          "burst's (resident) scenes")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: prove the harness executes end-to-end")
+    ap.add_argument("--check-compiles", action="store_true",
+                    help="fail (exit 1) if any engine recompiled a jitted "
+                         "step function after warmup — the CompileGuard "
+                         "steady-state verdict across the plain, spec and "
+                         "chunked workloads")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
@@ -906,12 +944,20 @@ def main(argv=None) -> int:
         print(f"speedup (batched/vmap): {rec['speedup_tokens_per_s']}×")
     print(f"fan-out prefill-token ratio (dense/paged): "
           f"{rec['fanout_prefill_token_ratio']}×")
+    recompiles = _collect_recompiles(rec)
+    total_recompiles = sum(v for _, v in recompiles)
+    rec["steady_recompiles_total"] = total_recompiles
+    offenders = [f"{p}={v}" for p, v in recompiles if v]
+    print(f"steady-state recompiles after warmup: {total_recompiles}"
+          + (f"  ({', '.join(offenders)})" if offenders else ""))
+
     rec = _fold_history(args.out, rec)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
     print(f"wrote {args.out} (history: {len(rec['history'])} prior runs)")
+    compiles_ok = not (args.check_compiles and total_recompiles)
     return 0 if (outputs_match and spec["outputs_match"]
-                 and chunked["outputs_match"]) else 1
+                 and chunked["outputs_match"] and compiles_ok) else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+"""spacelint — repo-specific static analysis + runtime compile guard.
+
+The serving substrate's correctness and latency rest on conventions that
+plain Python will happily let you break: every ``*_pallas`` kernel needs a
+``ref.*`` oracle, an ``ops.*`` dispatcher and a ``kernel_parity`` test; the
+jitted step functions must never recompile at steady state; the engine hot
+loop must not host-sync device arrays.  A silent recompile or a hidden
+``.item()`` in the decode loop is invisible in tests and fatal inside a
+satellite contact window — so the conventions are machine-checked:
+
+- ``python -m repro.analysis.lint src tests benchmarks`` runs the AST rules
+  (SL001 host-sync-in-hot-path, SL002 kernel-contract coverage, SL003
+  jit-cache hygiene, SL004 mutable dataclass defaults).  Pure stdlib
+  ``ast`` — no jax import, safe as the first CI step.
+- ``repro.analysis.compile_guard.CompileGuard`` is the runtime half: armed
+  after ``EngineCore.warmup()`` it watches ``_cache_size()`` of every
+  registered jitted step function and reports (or raises on) steady-state
+  recompiles.
+
+See DESIGN.md §analysis for the invariant list, rule codes, the
+``# spacelint: disable=RULE (reason)`` policy and how to add a rule.
+"""
+from repro.analysis.common import Finding, RULES  # noqa: F401
+from repro.analysis.compile_guard import (CompileGuard,  # noqa: F401
+                                          SteadyStateRecompile)

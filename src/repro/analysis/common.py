@@ -1,0 +1,179 @@
+"""Shared spacelint infrastructure: findings, disable comments, file model.
+
+Rule modules implement ``check(file, project) -> iterable[Finding]`` and are
+registered in ``RULES`` (see ``lint.py``).  Everything here is stdlib-only
+(``ast`` + ``re``): the lint pass runs before dependencies are importable
+and must never crash on code it cannot resolve — rules skip silently when a
+construct is too dynamic to analyse.
+
+Disable policy: a finding on line L is suppressed by
+
+    # spacelint: disable=SL001 (reason the invariant is safe to break here)
+
+placed either at the end of line L or on a comment line directly above it.
+The parenthesised reason is MANDATORY — a disable without one (or with an
+unknown rule code) is itself an error, SL000, which cannot be disabled.
+``tests/test_lint.py`` pins that the repo lints clean, so every disable in
+tree is a reviewed, justified exception.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Set
+
+#: rule code -> one-line description (the CLI's --list-rules output; SL000
+#: is the meta-rule for malformed disable comments)
+RULES: Dict[str, str] = {
+    "SL000": "malformed spacelint disable (unknown code or missing reason)",
+    "SL001": "host sync (.item/int/float/bool/np.asarray on a device array) "
+             "inside an engine hot-path method",
+    "SL002": "pallas kernel without matching ref oracle / ops dispatch / "
+             "kernel_parity test, or scalar-prefetch arity mismatch",
+    "SL003": "jit-cache hygiene: jitted closure over mutable self state, or "
+             "unhashable/mutable static argument",
+    "SL004": "mutable (or shared-instance) dataclass field default",
+}
+
+_DISABLE_RE = re.compile(
+    r"#\s*spacelint:\s*disable=([A-Za-z0-9_,\s]+?)"
+    r"\s*(?:\((?P<reason>[^()]*(?:\([^()]*\)[^()]*)*)\))?\s*$")
+#: a comment that *looks like* a directive attempt ("spacelint:") but is not
+#: a well-formed disable is an SL000 — mere prose mentions are fine
+_DIRECTIVE_RE = re.compile(r"#\s*spacelint\s*:", re.IGNORECASE)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+class SourceFile:
+    """One parsed source file plus its disable-comment table."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree: Optional[ast.Module] = None
+        self.parse_error: Optional[Finding] = None
+        try:
+            self.tree = ast.parse(text)
+        except SyntaxError as e:  # surfaced as a finding, never a crash
+            self.parse_error = Finding(path, e.lineno or 1, e.offset or 0,
+                                       "SL000",
+                                       f"file does not parse: {e.msg}")
+        #: line number -> codes disabled for that line and the next
+        self.disables: Dict[int, Set[str]] = {}
+        self.disable_errors: List[Finding] = []
+        self._parse_disables()
+
+    def _comments(self):
+        """(line, text) for every real COMMENT token — tokenizing (rather
+        than regexing raw lines) keeps string literals and docstrings that
+        merely *mention* spacelint from parsing as directives."""
+        try:
+            for tok in tokenize.generate_tokens(
+                    io.StringIO(self.text).readline):
+                if tok.type == tokenize.COMMENT:
+                    yield tok.start[0], tok.string
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            return  # unparseable files already carry an SL000
+
+    def _parse_disables(self) -> None:
+        for i, comment in self._comments():
+            if "spacelint" not in comment.lower():
+                continue
+            m = _DISABLE_RE.search(comment)
+            if not m:
+                if _DIRECTIVE_RE.search(comment):
+                    self.disable_errors.append(Finding(
+                        self.path, i, 0, "SL000",
+                        "unrecognised spacelint comment (expected "
+                        "'# spacelint: disable=SLxxx (reason)')"))
+                continue
+            codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+            reason = (m.group("reason") or "").strip()
+            unknown = sorted(c for c in codes
+                             if c not in RULES or c == "SL000")
+            if unknown:
+                self.disable_errors.append(Finding(
+                    self.path, i, 0, "SL000",
+                    f"disable names unknown/undisableable rule(s) "
+                    f"{', '.join(unknown)}"))
+            if not reason:
+                self.disable_errors.append(Finding(
+                    self.path, i, 0, "SL000",
+                    "disable is missing its '(reason)' justification"))
+                continue
+            self.disables[i] = codes
+
+    def allows(self, code: str, line: int) -> bool:
+        """True if ``code`` is disabled for ``line`` (same-line comment, or
+        a disable on the line directly above)."""
+        return (code in self.disables.get(line, ())
+                or code in self.disables.get(line - 1, ()))
+
+
+class Project:
+    """All scanned files — the cross-file context SL002/SL004 need."""
+
+    def __init__(self, files: Iterable[SourceFile]):
+        self.files: List[SourceFile] = list(files)
+        self.by_path: Dict[str, SourceFile] = {f.path: f for f in self.files}
+        self._frozen_dataclasses: Optional[Set[str]] = None
+
+    def frozen_dataclass_names(self) -> Set[str]:
+        """Class names declared ``@dataclass(frozen=True)`` anywhere in the
+        scanned set (SL004 allows shared *immutable* instance defaults)."""
+        if self._frozen_dataclasses is None:
+            names: Set[str] = set()
+            for f in self.files:
+                if f.tree is None:
+                    continue
+                for node in ast.walk(f.tree):
+                    if isinstance(node, ast.ClassDef) and any(
+                            _is_frozen_dataclass_decorator(d)
+                            for d in node.decorator_list):
+                        names.add(node.name)
+            self._frozen_dataclasses = names
+        return self._frozen_dataclasses
+
+
+def is_dataclass_decorator(d: ast.expr) -> bool:
+    """Matches ``@dataclass``, ``@dataclasses.dataclass`` and their
+    called forms ``@dataclass(...)``."""
+    if isinstance(d, ast.Call):
+        d = d.func
+    return (isinstance(d, ast.Name) and d.id == "dataclass") or (
+        isinstance(d, ast.Attribute) and d.attr == "dataclass")
+
+
+def _is_frozen_dataclass_decorator(d: ast.expr) -> bool:
+    if not isinstance(d, ast.Call) or not is_dataclass_decorator(d.func):
+        return False
+    return any(kw.arg == "frozen"
+               and isinstance(kw.value, ast.Constant)
+               and kw.value.value is True for kw in d.keywords)
+
+
+def dotted_name(node: ast.expr) -> str:
+    """'np.asarray' for Attribute chains, 'int' for Names, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""

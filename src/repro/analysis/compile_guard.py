@@ -1,0 +1,119 @@
+"""Runtime compile guard: no recompiles after warmup.
+
+The static rules catch the patterns that *cause* steady-state recompiles;
+this is the backstop that catches the fact of one.  ``EngineCore``
+registers its jitted step entry points, arms the guard at the end of
+``warmup()`` (every admission bucket and step flavour is compiled by then),
+and calls ``check()`` after each step.  A registered function whose
+``_cache_size()`` grows past its armed baseline is a steady-state
+recompile: under pytest that raises ``SteadyStateRecompile`` immediately
+(pointing at the offending entry point); in production it increments a
+counter surfaced through ``scheduler_stats()['steady_recompiles']`` and
+``serving_bench.py --check-compiles``.
+
+Mode resolution: ``SPACELINT_COMPILE_GUARD`` ∈ {``raise``, ``count``,
+``off``} wins if set; otherwise ``raise`` when running under pytest
+(``PYTEST_CURRENT_TEST`` present), ``count`` elsewhere.
+
+Also usable standalone as a context manager around any traffic window::
+
+    with CompileGuard({"step": engine._decode_j}) as guard:
+        drive_traffic(engine)
+    assert guard.steady_recompiles == 0
+
+Stdlib-only: relies solely on the ``_cache_size()`` hook jax exposes on
+jitted callables — no jax import, so ``repro.analysis`` stays importable
+without the runtime stack.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Mapping, Optional
+
+
+class SteadyStateRecompile(RuntimeError):
+    """A jitted step function recompiled after warmup."""
+
+
+def _resolve_mode(mode: Optional[str]) -> str:
+    if mode is not None:
+        return mode
+    env = os.environ.get("SPACELINT_COMPILE_GUARD", "").strip().lower()
+    if env in ("raise", "count", "off"):
+        return env
+    return "raise" if "PYTEST_CURRENT_TEST" in os.environ else "count"
+
+
+class CompileGuard:
+    """Watches ``_cache_size()`` of registered jitted functions."""
+
+    def __init__(self, fns: Optional[Mapping[str, Callable]] = None, *,
+                 mode: Optional[str] = None):
+        self._fns: Dict[str, Callable] = {}
+        self._baseline: Dict[str, int] = {}
+        self._armed = False
+        self._mode_override = mode
+        self.steady_recompiles = 0
+        for name, fn in (fns or {}).items():
+            self.register(name, fn)
+
+    # -- wiring ---------------------------------------------------------
+    def register(self, name: str, fn: Callable) -> None:
+        """Track ``fn`` (must expose ``_cache_size()``; anything else —
+        e.g. a plain python fallback — is skipped silently)."""
+        if callable(getattr(fn, "_cache_size", None)):
+            self._fns[name] = fn
+            if self._armed:
+                self._baseline[name] = fn._cache_size()
+
+    @property
+    def mode(self) -> str:
+        return _resolve_mode(self._mode_override)
+
+    @property
+    def armed(self) -> bool:
+        return self._armed
+
+    def arm(self) -> None:
+        """Snapshot current cache sizes; growth beyond this is a finding.
+        Re-arming (e.g. after a deliberate re-warmup) resets baselines and
+        keeps the running counter."""
+        self._baseline = {n: f._cache_size() for n, f in self._fns.items()}
+        self._armed = True
+
+    def disarm(self) -> None:
+        self._armed = False
+
+    # -- checking -------------------------------------------------------
+    def check(self, context: str = "") -> int:
+        """Compare cache sizes to the armed baseline.  Returns the number
+        of NEW compilations observed this call (each counted once)."""
+        if not self._armed or self.mode == "off":
+            return 0
+        grew = []
+        new = 0
+        for name, fn in self._fns.items():
+            size = fn._cache_size()
+            base = self._baseline.get(name, size)
+            if size > base:
+                grew.append(f"{name}: {base} -> {size}")
+                new += size - base
+                self._baseline[name] = size  # count each recompile once
+        if not grew:
+            return 0
+        self.steady_recompiles += new
+        if self.mode == "raise":
+            where = f" during {context}" if context else ""
+            raise SteadyStateRecompile(
+                f"steady-state recompile{where}: {'; '.join(grew)} — every "
+                "shape/static combination must be covered by warmup()")
+        return new
+
+    # -- context-manager form -------------------------------------------
+    def __enter__(self) -> "CompileGuard":
+        self.arm()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.check("guarded block exit")

@@ -1,0 +1,76 @@
+"""SL004 — mutable (or shared-instance) dataclass field defaults.
+
+The runtime half of this bug class — ``x: list = []`` — Python's dataclass
+machinery already rejects at class-creation time.  What it does NOT catch is
+the shared-*instance* default:
+
+    @dataclasses.dataclass
+    class TrainConfig:
+        compression: CompressionConfig = CompressionConfig()   # one object!
+
+Every ``TrainConfig()`` aliases the same ``CompressionConfig`` instance; a
+mutation through one config leaks into all of them, and (worse for us) a
+config object used as a jit static arg is identity-hashed, so "equal"
+configs built from the shared default vs. a fresh instance key different
+compile-cache entries.  The fix is ``field(default_factory=...)``.
+
+Flagged defaults: list/dict/set literals and ``list()/dict()/set()``
+calls (belt-and-braces over the runtime check), and constructor calls
+``SomeClass()`` unless ``SomeClass`` is a ``@dataclass(frozen=True)``
+visible anywhere in the scanned tree (immutable sharing is harmless).
+``field(...)``/``dataclasses.field(...)`` defaults are the fix, not a
+finding.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.common import (Finding, Project, SourceFile,
+                                   dotted_name, is_dataclass_decorator)
+
+CODE = "SL004"
+
+_MUTABLE_CALLS = frozenset({"list", "dict", "set", "bytearray"})
+
+
+def _classify(default: ast.expr, project: Project) -> Optional[str]:
+    if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+        return "a mutable literal"
+    if not isinstance(default, ast.Call):
+        return None
+    name = dotted_name(default.func)
+    tail = name.rsplit(".", 1)[-1]
+    if tail == "field":  # dataclasses.field(default_factory=...) is the fix
+        return None
+    if tail in _MUTABLE_CALLS:
+        return f"`{name}()` (fresh mutable object shared by every instance)"
+    if tail[:1].isupper():
+        if tail in project.frozen_dataclass_names():
+            return None
+        return (f"a shared `{name}` instance — every dataclass instance "
+                "aliases this one object")
+    return None
+
+
+def check(file: SourceFile, project: Project) -> Iterator[Finding]:
+    if file.tree is None:
+        return
+    for node in ast.walk(file.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if not any(is_dataclass_decorator(d) for d in node.decorator_list):
+            continue
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and stmt.value is not None):
+                continue
+            why = _classify(stmt.value, project)
+            if why is None:
+                continue
+            fname = (stmt.target.id
+                     if isinstance(stmt.target, ast.Name) else "?")
+            yield Finding(
+                file.path, stmt.value.lineno, stmt.value.col_offset, CODE,
+                f"field `{node.name}.{fname}` defaults to {why} — use "
+                "`dataclasses.field(default_factory=...)`")

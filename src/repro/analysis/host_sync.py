@@ -1,0 +1,223 @@
+"""SL001 — host sync inside an engine hot-path method.
+
+The serving hot loop (``EngineCore.step`` and friends) must stay a chain of
+async device dispatches: one deliberate device→host fetch per step is the
+budget, and anything else — a stray ``.item()``, an ``int(...)`` on a
+device scalar, an ``np.asarray`` on per-slot state — blocks the host on the
+device pipeline and serialises the whole engine.  The paper's contact-window
+latency story dies on exactly this kind of silent stall.
+
+Detection is a small forward dataflow over each hot method:
+
+- **suspects** (values that live on device) seed from parameters annotated
+  ``jax.Array``, loads of the engine's device-resident attributes
+  (``self._slot_cache`` …), and calls whose callee is ``jnp.*``/``jax.*``
+  or a jitted entry point (the ``self.*_j`` naming convention, plus
+  ``*_dev`` helpers);
+- suspicion propagates through assignments and tuple unpacking;
+- a name assigned *from* a flagged conversion (``x = np.asarray(dev)``)
+  becomes host data — downstream ``int(x[i])`` loops are exactly the
+  "hoist the fetch, iterate on host" idiom this rule wants to enforce.
+
+Flagged on suspects: ``.item()``, ``int()/float()/bool()``,
+``np.asarray``/``np.array``.  Shape/ndim/size metadata and ``len()`` are
+host-side statics and never flag.  The one justified per-step fetch carries
+``# spacelint: disable=SL001 (…)``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Set
+
+from repro.analysis.common import Finding, Project, SourceFile, dotted_name
+
+CODE = "SL001"
+
+#: classes whose methods are in scope
+ENGINE_CLASS_RE = re.compile(r"Engine")
+#: hot-path method names: the step/schedule/admission surface
+HOT_METHOD_RE = re.compile(
+    r"^(step|_step\w*|admit\w*|_admit\w*|_record_admissions"
+    r"|_prefill_prefixes|_draft_prefill_rows|encode_cached|_slot_pos"
+    r"|_finish_slot|_release_slot|_?schedule\w*)$")
+
+#: device-resident ``self.`` attributes of the engine (repo convention)
+DEVICE_ATTRS = frozenset({
+    "_slot_logits", "_slot_cache", "_slot_index", "_active_dev",
+    "_bt_dev", "_staging", "_draft_cache",
+})
+#: attribute reads that are host metadata, never a device fetch
+_METADATA_ATTRS = frozenset({"shape", "ndim", "size", "dtype", "sharding"})
+_CONVERTERS = frozenset({"int", "float", "bool"})
+_NP_SYNCS = frozenset({"np.asarray", "np.array", "np.copy",
+                       "numpy.asarray", "numpy.array", "numpy.copy"})
+
+
+def _is_jax_annotation(node: ast.expr) -> bool:
+    try:
+        text = ast.unparse(node)
+    except Exception:
+        return False
+    return "jax.Array" in text or "jnp.ndarray" in text
+
+
+class _HotMethod(ast.NodeVisitor):
+    """Single forward pass over one hot method's statements."""
+
+    def __init__(self, file: SourceFile, fn: ast.FunctionDef):
+        self.file = file
+        self.fn = fn
+        self.suspects: Set[str] = set()
+        self.findings: list = []
+        args = fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if a.annotation is not None and _is_jax_annotation(a.annotation):
+                self.suspects.add(a.arg)
+
+    # -- suspicion ------------------------------------------------------
+    def _call_returns_device(self, call: ast.Call) -> bool:
+        name = dotted_name(call.func)
+        if name.startswith(("jnp.", "jax.")):
+            return True
+        if name.startswith("self."):
+            tail = name.rsplit(".", 1)[-1]
+            return tail.endswith("_j") or tail.endswith("_dev")
+        return False
+
+    def _is_suspect(self, node: ast.expr) -> bool:
+        """Does ``node`` (transitively) read a device value?  Descent stops
+        at host-metadata attributes and ``len()`` calls."""
+        if isinstance(node, ast.Attribute):
+            if node.attr in _METADATA_ATTRS:
+                return False
+            if (isinstance(node.value, ast.Name) and node.value.id == "self"
+                    and node.attr in DEVICE_ATTRS):
+                return True
+            return self._is_suspect(node.value)
+        if isinstance(node, ast.Name):
+            return node.id in self.suspects
+        if isinstance(node, ast.Call):
+            if self._call_returns_device(node):
+                return True
+            fname = dotted_name(node.func)
+            # conversions return HOST data — the sync is flagged at the
+            # conversion site itself, not on every downstream use
+            if fname == "len" or fname in _CONVERTERS or fname in _NP_SYNCS:
+                return False
+            return any(self._is_suspect(a) for a in node.args) or any(
+                self._is_suspect(kw.value) for kw in node.keywords)
+        if isinstance(node, ast.Subscript):
+            return self._is_suspect(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self._is_suspect(node.left) or self._is_suspect(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self._is_suspect(node.operand)
+        if isinstance(node, ast.Compare):
+            return self._is_suspect(node.left) or any(
+                self._is_suspect(c) for c in node.comparators)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self._is_suspect(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self._is_suspect(node.body)
+                    or self._is_suspect(node.orelse))
+        if isinstance(node, ast.Starred):
+            return self._is_suspect(node.value)
+        return False
+
+    # -- violation scan -------------------------------------------------
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.findings.append(Finding(
+            self.file.path, node.lineno, node.col_offset, CODE,
+            f"{what} in hot-path method "
+            f"`{self.fn.name}` blocks the host on the device stream — "
+            "hoist it out of the per-step path or justify with a disable"))
+
+    def _scan_calls(self, node: ast.AST) -> None:
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            fname = dotted_name(call.func)
+            if (isinstance(call.func, ast.Attribute)
+                    and call.func.attr == "item"
+                    and self._is_suspect(call.func.value)):
+                self._flag(call, "`.item()` on a device array")
+            elif (fname in _CONVERTERS and call.args
+                    and self._is_suspect(call.args[0])):
+                self._flag(call, f"`{fname}()` on a device value")
+            elif (fname in _NP_SYNCS and call.args
+                    and self._is_suspect(call.args[0])):
+                self._flag(call, f"`{fname}` on a device array")
+
+    # -- statement walk (source order keeps the dataflow causal) --------
+    def _handle_assign(self, targets, value: ast.expr) -> None:
+        rhs_name = dotted_name(value.func) if isinstance(value, ast.Call) \
+            else ""
+        # x = np.asarray(dev) is the flagged (or disabled) fetch; x itself
+        # is host data from here on
+        converts = rhs_name in _NP_SYNCS or rhs_name in _CONVERTERS
+        suspect = not converts and self._is_suspect(value)
+        for t in targets:
+            names = [t]
+            if isinstance(t, (ast.Tuple, ast.List)):
+                names = list(t.elts)
+            for n in names:
+                if isinstance(n, ast.Starred):
+                    n = n.value
+                if isinstance(n, ast.Name):
+                    if suspect:
+                        self.suspects.add(n.id)
+                    else:
+                        self.suspects.discard(n.id)
+
+    _BODY_FIELDS = ("body", "orelse", "finalbody")
+
+    def run(self) -> None:
+        self._visit_body(self.fn.body)
+
+    def _visit_body(self, body) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue  # nested defs have their own dataflow; out of scope
+            # scan only this statement's own expressions (header for
+            # compound statements) — nested bodies are visited below, once,
+            # after the surrounding dataflow state is up to date
+            for field, value in ast.iter_fields(stmt):
+                if field in self._BODY_FIELDS or field == "handlers":
+                    continue
+                for part in (value if isinstance(value, list) else [value]):
+                    if isinstance(part, ast.AST):
+                        self._scan_calls(part)
+            if isinstance(stmt, ast.Assign):
+                self._handle_assign(stmt.targets, stmt.value)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                self._handle_assign([stmt.target], stmt.value)
+            elif isinstance(stmt, ast.AugAssign):
+                self._handle_assign([stmt.target], stmt.value)
+            elif isinstance(stmt, ast.For) and isinstance(stmt.iter,
+                                                          ast.AST):
+                # loop variable inherits suspicion from the iterable
+                self._handle_assign([stmt.target], stmt.iter)
+            for attr in self._BODY_FIELDS:
+                inner = getattr(stmt, attr, None)
+                if inner:
+                    self._visit_body(inner)
+            for h in getattr(stmt, "handlers", []) or []:
+                self._visit_body(h.body)
+
+
+def check(file: SourceFile, project: Project) -> Iterator[Finding]:
+    del project
+    if file.tree is None:
+        return
+    for node in ast.walk(file.tree):
+        if not (isinstance(node, ast.ClassDef)
+                and ENGINE_CLASS_RE.search(node.name)):
+            continue
+        for item in node.body:
+            if (isinstance(item, ast.FunctionDef)
+                    and HOT_METHOD_RE.match(item.name)):
+                visitor = _HotMethod(file, item)
+                visitor.run()
+                yield from visitor.findings

@@ -1,0 +1,182 @@
+"""SL003 — jit-cache hygiene.
+
+Steady-state serving assumes every jitted entry point compiles during
+``warmup()`` and never again.  Two Python-side patterns silently break that:
+
+- **jit over mutable ``self``**: ``@jax.jit`` on a method, or
+  ``jax.jit(self.f)``, or jitting an inner function that reads ``self.x``.
+  The traced closure snapshots whatever ``self`` held at trace time — later
+  mutations are either ignored (stale cache, wrong results) or, with
+  ``self`` as a traced arg, retrigger tracing per call.  The repo idiom is
+  to close over *locals* pulled out of ``self`` before the ``def`` (see
+  ``EngineCore.__init__``), which this rule deliberately accepts.
+- **mutable/unhashable static args**: a parameter listed in
+  ``static_argnames``/``static_argnums`` whose default is a list/dict/set
+  or a mutable config instance either raises ``unhashable`` at call time
+  or — worse, for objects with identity hash — keys the compile cache on
+  object identity and recompiles per instance.
+
+Both are invisible to unit tests that build one engine and call it once;
+they only show up as recompile storms under real traffic (which the
+runtime ``CompileGuard`` catches — this rule is the static early warning).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from repro.analysis.common import Finding, Project, SourceFile, dotted_name
+
+CODE = "SL003"
+
+_MUTABLE_BUILTIN_CALLS = frozenset({"list", "dict", "set", "bytearray"})
+
+
+def _is_jit_name(name: str) -> bool:
+    return name in ("jit", "jax.jit") or name.endswith(".jit")
+
+
+def _jit_target(call: ast.Call) -> Optional[ast.expr]:
+    """For ``jax.jit(fn, ...)`` or ``functools.partial(jax.jit, ...)(fn)``
+    return the jitted function expression."""
+    if _is_jit_name(dotted_name(call.func)) and call.args:
+        return call.args[0]
+    return None
+
+
+def _jit_call_in_decorators(fn: ast.FunctionDef) -> Optional[ast.expr]:
+    """Return the decorator node if ``fn`` is decorated with jax.jit
+    (bare, called, or via functools.partial(jax.jit, ...))."""
+    for d in fn.decorator_list:
+        name = dotted_name(d if not isinstance(d, ast.Call) else d.func)
+        if _is_jit_name(name):
+            return d
+        if isinstance(d, ast.Call) and name.endswith("partial") and d.args:
+            if _is_jit_name(dotted_name(d.args[0])):
+                return d
+    return None
+
+
+def _reads_self(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and node.id == "self":
+            return True
+    return False
+
+
+def _static_names(call: ast.Call) -> List[str]:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            v = kw.value
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            return [e.value for e in elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)]
+    return []
+
+
+def _mutable_default(node: ast.expr, frozen: Set[str]) -> Optional[str]:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return "a mutable literal"
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        tail = name.rsplit(".", 1)[-1]
+        if tail in _MUTABLE_BUILTIN_CALLS:
+            return f"`{name}()`"
+        # Config-style constructor: hashable only by identity unless the
+        # class is a frozen dataclass we can see.
+        if tail[:1].isupper() and tail not in frozen:
+            return f"a `{name}` instance (identity-hashed)"
+    return None
+
+
+def _param_defaults(fn: ast.FunctionDef):
+    """Yield (param_name, default_node) pairs."""
+    a = fn.args
+    pos = a.posonlyargs + a.args
+    for arg, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        yield arg.arg, default
+    for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+        if default is not None:
+            yield arg.arg, default
+
+
+def _functions_by_name(tree: ast.Module):
+    out = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            out.setdefault(node.name, node)
+    return out
+
+
+def check(file: SourceFile, project: Project) -> Iterator[Finding]:
+    if file.tree is None:
+        return
+    frozen = project.frozen_dataclass_names()
+    fns = _functions_by_name(file.tree)
+
+    for node in ast.walk(file.tree):
+        # --- decorated definitions -----------------------------------
+        if isinstance(node, ast.FunctionDef):
+            deco = _jit_call_in_decorators(node)
+            if deco is not None:
+                args = node.args
+                first = (args.posonlyargs + args.args)
+                if first and first[0].arg == "self":
+                    yield Finding(
+                        file.path, node.lineno, node.col_offset, CODE,
+                        f"`@jax.jit` on method `{node.name}` traces through "
+                        "mutable `self` — jit a function over explicit "
+                        "arguments (or close over locals) instead")
+                elif _reads_self(node):
+                    yield Finding(
+                        file.path, node.lineno, node.col_offset, CODE,
+                        f"jitted function `{node.name}` closes over `self` "
+                        "— the trace snapshots mutable state; close over "
+                        "locals hoisted before the def instead")
+                if isinstance(deco, ast.Call):
+                    yield from _check_static_args(file, deco, node, frozen)
+
+        # --- call-form jax.jit(fn, ...) ------------------------------
+        if isinstance(node, ast.Call):
+            target = _jit_target(node)
+            if target is None:
+                continue
+            tname = dotted_name(target)
+            if tname.startswith("self."):
+                yield Finding(
+                    file.path, node.lineno, node.col_offset, CODE,
+                    f"`jax.jit({tname})` jits a bound method — the closure "
+                    "captures mutable `self`; jit a pure function and pass "
+                    "state explicitly")
+                continue
+            inner = fns.get(tname) if tname else None
+            if inner is not None:
+                if _reads_self(inner) and not (
+                        (inner.args.posonlyargs + inner.args.args)
+                        and (inner.args.posonlyargs
+                             + inner.args.args)[0].arg == "self"):
+                    yield Finding(
+                        file.path, node.lineno, node.col_offset, CODE,
+                        f"jitted function `{tname}` closes over `self` — "
+                        "the trace snapshots mutable state; close over "
+                        "locals hoisted before the def instead")
+                yield from _check_static_args(file, node, inner, frozen)
+
+
+def _check_static_args(file: SourceFile, jit_call: ast.Call,
+                       fn: ast.FunctionDef,
+                       frozen: Set[str]) -> Iterator[Finding]:
+    statics = set(_static_names(jit_call))
+    if not statics:
+        return
+    for pname, default in _param_defaults(fn):
+        if pname not in statics:
+            continue
+        why = _mutable_default(default, frozen)
+        if why is not None:
+            yield Finding(
+                file.path, default.lineno, default.col_offset, CODE,
+                f"static arg `{pname}` of jitted `{fn.name}` defaults to "
+                f"{why} — unhashable or identity-hashed statics recompile "
+                "per object (or fail at call time)")

@@ -1,0 +1,273 @@
+"""SL002 — kernel-contract coverage and scalar-prefetch arity.
+
+Repo convention: every Pallas kernel is a triple plus a proof.  A function
+``X_pallas`` (containing the ``pl.pallas_call``) must come with
+
+- ``ref.X``      — the jnp oracle in ``kernels/ref.py``,
+- ``ops.X``      — the impl dispatcher in ``kernels/ops.py``,
+- a test marked ``@pytest.mark.kernel_parity`` that exercises ``ops.X``
+  (or ``X_pallas`` directly) — CI runs these in a dedicated interpret-mode
+  step, so an unmarked parity sweep is invisible to that gate.
+
+The second half is structural: Pallas resolves kernel parameters purely by
+position — scalar-prefetch refs, then one ref per in_spec, per output, per
+scratch shape — and a miscount doesn't fail loudly, it shifts every ref by
+one and produces garbage indexing.  So for each ``pallas_call`` whose
+operands are statically visible we check
+
+- every BlockSpec index-map lambda takes ``len(grid) + num_scalar_prefetch``
+  positional args (a ``*rest`` vararg may absorb the tail),
+- the kernel body's positional parameter count equals
+  ``num_scalar_prefetch + len(in_specs) + n_outputs + len(scratch_shapes)``
+  (resolving the local ``kernel = functools.partial(_fn, **cfg)`` idiom;
+  positionally-bound partial args are subtracted).
+
+Anything too dynamic to resolve is skipped, never guessed at.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.common import Finding, Project, SourceFile, dotted_name
+
+CODE = "SL002"
+
+
+# --------------------------------------------------------------------------
+# module-level harvesting
+# --------------------------------------------------------------------------
+
+def _module_functions(file: SourceFile) -> Dict[str, ast.FunctionDef]:
+    out: Dict[str, ast.FunctionDef] = {}
+    if file.tree is not None:
+        for node in file.tree.body:
+            if isinstance(node, ast.FunctionDef):
+                out[node.name] = node
+    return out
+
+
+def _module_assign_names(file: SourceFile) -> Set[str]:
+    """Top-level ``name = ...`` bindings (``ssm_decode_step = ref....``)."""
+    names: Set[str] = set()
+    if file.tree is not None:
+        for node in file.tree.body:
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+    return names
+
+
+def _kernel_parity_references(project: Project) -> Set[str]:
+    """Dotted names referenced inside ``@pytest.mark.kernel_parity`` tests."""
+    refs: Set[str] = set()
+    for f in project.files:
+        if f.tree is None or "test" not in f.path.rsplit("/", 1)[-1]:
+            continue
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            if not any("kernel_parity" in dotted_name(d)
+                       for d in node.decorator_list):
+                continue
+            for sub in ast.walk(node):
+                name = dotted_name(sub) if isinstance(
+                    sub, (ast.Attribute, ast.Name)) else ""
+                if name:
+                    refs.add(name)
+    return refs
+
+
+def _has_test_files(project: Project) -> bool:
+    return any(f.path.rsplit("/", 1)[-1].startswith("test_")
+               for f in project.files)
+
+
+# --------------------------------------------------------------------------
+# static pallas_call model
+# --------------------------------------------------------------------------
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _spec_count(node: Optional[ast.expr]) -> Optional[int]:
+    """Length of a literal list/tuple of specs; 1 for a bare spec; None if
+    not statically visible."""
+    if node is None:
+        return 0
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return len(node.elts)
+    if isinstance(node, ast.Call):
+        return 1
+    return None
+
+
+def _const_int(node: Optional[ast.expr]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def _lambda_arity(lam: ast.Lambda) -> Tuple[int, bool]:
+    a = lam.args
+    return len(a.posonlyargs) + len(a.args), a.vararg is not None
+
+
+def _positional_param_count(fn: ast.FunctionDef) -> int:
+    a = fn.args
+    return len(a.posonlyargs) + len(a.args)
+
+
+def _resolve_kernel(arg: ast.expr, enclosing: ast.FunctionDef,
+                    module_fns: Dict[str, ast.FunctionDef]
+                    ) -> Tuple[Optional[ast.FunctionDef], int]:
+    """Resolve the pallas_call kernel argument to a module FunctionDef.
+    Returns (fn, n_positionally_bound) — partial(...) keyword bindings land
+    in keyword-only params / **kw and don't shift positions."""
+    if isinstance(arg, ast.Name):
+        # the `kernel = functools.partial(_fn, ...)` idiom: find the last
+        # local assignment to that name inside the enclosing function
+        target: Optional[ast.expr] = None
+        for node in ast.walk(enclosing):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id == arg.id:
+                        target = node.value
+        if target is None:
+            return module_fns.get(arg.id), 0
+        arg = target
+    if isinstance(arg, ast.Call) and dotted_name(arg.func).endswith("partial"):
+        if not arg.args:
+            return None, 0
+        inner = arg.args[0]
+        if isinstance(inner, ast.Name):
+            return module_fns.get(inner.id), len(arg.args) - 1
+        return None, 0
+    if isinstance(arg, ast.Name):
+        return module_fns.get(arg.id), 0
+    return None, 0
+
+
+def _check_pallas_call(file: SourceFile, call: ast.Call,
+                       enclosing: ast.FunctionDef,
+                       module_fns: Dict[str, ast.FunctionDef]
+                       ) -> Iterator[Finding]:
+    # gather grid parameters either from the call itself or from a
+    # PrefetchScalarGridSpec assigned to the grid_spec= argument
+    grid_holder: Optional[ast.Call] = None
+    n_prefetch = 0
+    spec_src = _kw(call, "grid_spec")
+    if spec_src is not None:
+        if isinstance(spec_src, ast.Name):
+            wanted = spec_src.id
+            for node in ast.walk(enclosing):
+                if isinstance(node, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == wanted
+                        for t in node.targets):
+                    spec_src = node.value
+        if (isinstance(spec_src, ast.Call)
+                and "PrefetchScalarGridSpec" in dotted_name(spec_src.func)):
+            grid_holder = spec_src
+            n = _const_int(_kw(spec_src, "num_scalar_prefetch"))
+            if n is None:
+                return  # dynamic prefetch count — cannot check
+            n_prefetch = n
+        else:
+            return  # unrecognised grid_spec object
+    else:
+        grid_holder = call
+
+    grid = _kw(grid_holder, "grid")
+    grid_ndim = (len(grid.elts)
+                 if isinstance(grid, (ast.Tuple, ast.List)) else None)
+    n_in = _spec_count(_kw(grid_holder, "in_specs"))
+    n_out = _spec_count(_kw(grid_holder, "out_specs"))
+    n_scratch = _spec_count(_kw(grid_holder, "scratch_shapes"))
+
+    # 1. index-map lambda arity: len(grid) positional grid indices plus one
+    #    ref per scalar-prefetch operand
+    if grid_ndim is not None:
+        want = grid_ndim + n_prefetch
+        for spec_kw in ("in_specs", "out_specs"):
+            holder = _kw(grid_holder, spec_kw)
+            if holder is None:
+                continue
+            for lam in ast.walk(holder):
+                if not isinstance(lam, ast.Lambda):
+                    continue
+                got, has_vararg = _lambda_arity(lam)
+                ok = got == want or (has_vararg and got <= want)
+                if not ok:
+                    yield Finding(
+                        file.path, lam.lineno, lam.col_offset, CODE,
+                        f"index-map lambda takes {got} positional arg(s) "
+                        f"but the grid supplies {want} "
+                        f"({grid_ndim} grid indices + {n_prefetch} "
+                        "scalar-prefetch ref(s))")
+
+    # 2. kernel body positional parameter count
+    if None in (n_in, n_out, n_scratch) or not call.args:
+        return
+    fn, n_bound = _resolve_kernel(call.args[0], enclosing, module_fns)
+    if fn is None:
+        return
+    got = _positional_param_count(fn) - n_bound
+    want = n_prefetch + n_in + n_out + n_scratch
+    if got != want:
+        yield Finding(
+            file.path, call.lineno, call.col_offset, CODE,
+            f"kernel `{fn.name}` takes {got} positional ref(s) but this "
+            f"pallas_call supplies {want} ({n_prefetch} prefetch + "
+            f"{n_in} in + {n_out} out + {n_scratch} scratch) — refs are "
+            "matched by position, a miscount shifts every operand")
+
+
+# --------------------------------------------------------------------------
+# rule entry point (project-wide; anchored on the kernels files)
+# --------------------------------------------------------------------------
+
+def check_project(project: Project) -> Iterator[Finding]:
+    ref_file = next((f for f in project.files
+                     if f.path.endswith("kernels/ref.py")), None)
+    ops_file = next((f for f in project.files
+                     if f.path.endswith("kernels/ops.py")), None)
+    ref_names = set(_module_functions(ref_file)) if ref_file else set()
+    ops_names = (set(_module_functions(ops_file))
+                 | _module_assign_names(ops_file)) if ops_file else set()
+    parity_refs = (_kernel_parity_references(project)
+                   if _has_test_files(project) else None)
+
+    for f in project.files:
+        if f.tree is None or "/kernels/" not in f.path.replace("\\", "/"):
+            continue
+        module_fns = _module_functions(f)
+        for fn in module_fns.values():
+            calls = [c for c in ast.walk(fn)
+                     if isinstance(c, ast.Call)
+                     and dotted_name(c.func).endswith("pallas_call")]
+            for c in calls:
+                yield from _check_pallas_call(f, c, fn, module_fns)
+            if not fn.name.endswith("_pallas") or not calls:
+                continue
+            base = fn.name[:-len("_pallas")]
+            if ref_file is not None and base not in ref_names:
+                yield Finding(f.path, fn.lineno, fn.col_offset, CODE,
+                              f"kernel `{fn.name}` has no `ref.{base}` "
+                              "oracle in kernels/ref.py")
+            if ops_file is not None and base not in ops_names:
+                yield Finding(f.path, fn.lineno, fn.col_offset, CODE,
+                              f"kernel `{fn.name}` has no `ops.{base}` "
+                              "dispatcher in kernels/ops.py")
+            if parity_refs is not None and not (
+                    f"ops.{base}" in parity_refs
+                    or fn.name in parity_refs
+                    or any(r.endswith(f".{fn.name}") for r in parity_refs)):
+                yield Finding(f.path, fn.lineno, fn.col_offset, CODE,
+                              f"kernel `{fn.name}` is not exercised by any "
+                              "@pytest.mark.kernel_parity test (via "
+                              f"`ops.{base}` or `{fn.name}`)")

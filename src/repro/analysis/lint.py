@@ -1,0 +1,116 @@
+"""spacelint CLI — ``python -m repro.analysis.lint [paths...]``.
+
+Walks the given paths (default: ``src tests benchmarks``) for ``*.py``
+files, runs every rule, applies ``# spacelint: disable=`` suppressions and
+prints surviving findings as ``path:line:col: CODE message``.  Exit status
+is the finding count clamped to 1 — i.e. 0 iff clean — so it slots into CI
+before pytest.  Stdlib-only on purpose: it must run (and fail fast) in an
+environment where jax itself is not importable.
+
+Adding a rule: write ``repro/analysis/<rule>.py`` exposing either
+``check(file, project)`` (per-file) or ``check_project(project)``
+(cross-file), register its code in ``common.RULES`` and the module in
+``_PER_FILE`` / ``_PROJECT`` below, and pin both directions (fires /
+doesn't fire) with fixtures in ``tests/test_lint.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Iterable, List
+
+from repro.analysis import (dataclass_defaults, host_sync, jit_hygiene,
+                            kernel_contract)
+from repro.analysis.common import RULES, Finding, Project, SourceFile
+
+_PER_FILE = (host_sync, jit_hygiene, dataclass_defaults)
+_PROJECT = (kernel_contract,)
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules"}
+
+
+def iter_python_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in _SKIP_DIRS and not d.startswith("."))
+            out.extend(os.path.join(root, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return out
+
+
+def load_project(paths: Iterable[str]) -> Project:
+    files = []
+    for path in iter_python_files(paths):
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                text = fh.read()
+        except OSError as e:
+            files.append(SourceFile(path, ""))
+            files[-1].disable_errors.append(
+                Finding(path, 1, 0, "SL000", f"unreadable file: {e}"))
+            continue
+        files.append(SourceFile(path, text))
+    return Project(files)
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in project.files:
+        # SL000 findings (parse errors, malformed disables) bypass allows():
+        # a broken disable must not be able to disable itself
+        if f.parse_error is not None:
+            findings.append(f.parse_error)
+        findings.extend(f.disable_errors)
+        for rule in _PER_FILE:
+            for finding in rule.check(f, project):
+                if not f.allows(finding.code, finding.line):
+                    findings.append(finding)
+    for rule in _PROJECT:
+        for finding in rule.check_project(project):
+            src = project.by_path.get(finding.path)
+            if src is None or not src.allows(finding.code, finding.line):
+                findings.append(finding)
+    return sorted(findings)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repo-specific JAX/Pallas serving-invariant linter")
+    ap.add_argument("paths", nargs="*", default=["src", "tests", "benchmarks"],
+                    help="files or directories to lint "
+                         "(default: src tests benchmarks)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print rule codes and descriptions, then exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code in sorted(RULES):
+            print(f"{code}  {RULES[code]}")
+        return 0
+
+    missing = [p for p in args.paths if not os.path.exists(p)]
+    if missing:
+        print(f"spacelint: no such path(s): {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+
+    project = load_project(args.paths)
+    findings = run(project)
+    for f in findings:
+        print(f.render())
+    n = len(findings)
+    print(f"spacelint: {n} finding(s) across "
+          f"{len(project.files)} file(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

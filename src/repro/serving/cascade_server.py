@@ -103,7 +103,8 @@ class CascadeServer:
         # decisions — and the golden test — are unchanged)
         res = self._executor(pipeline).run_serve(
             self._policy(), req.task, images, prompts, self.cc.answer_vocab,
-            allow_offload=self.link_up, scene=scene_key(req))
+            allow_offload=self.link_up, scene=scene_key(req),
+            prompt_id=req.prompt)
         exit_stage = int(np.asarray(res.exit_stage)[0])
         offload = bool(np.asarray(res.offload)[0])
 

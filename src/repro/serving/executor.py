@@ -146,7 +146,8 @@ class CascadeExecutor:
     # ------------------------------------------------------------------
     def run_serve(self, policy: CascadePolicy, task: str, images, prompts,
                   answer_vocab: int, allow_offload: bool = True,
-                  scene: Optional[Any] = None) -> ExecutionResult:
+                  scene: Optional[Any] = None,
+                  prompt_id: Optional[int] = None) -> ExecutionResult:
         """Batch-of-one execution with real early exits (the server's mode).
 
         Decisions take effect: onboard decoding aborts at the exit stage and
@@ -165,8 +166,11 @@ class CascadeExecutor:
 
         rf = tf = vis = None
         if policy.needs_encode:
+            # prompt_id rides along so the memo key is built from host
+            # metadata instead of fetching the device prompt row (SL001)
             rf, tf, vis = self.sat_core.encode_cached(task, images, prompts,
-                                                      scene=scene)
+                                                      scene=scene,
+                                                      prompt_id=prompt_id)
 
         mask0, s0 = policy.decide_initial(task, 1, vis)
         exit_stage = 0 if bool(np.asarray(mask0)[0]) else -1

@@ -38,6 +38,15 @@ class Request:
     #: never correctness (the verifier commits only its own greedy tokens).
     draft_tokens: Optional[np.ndarray] = None
 
+    def __post_init__(self):
+        # Drafts are admission metadata read token-by-token on the host.
+        # Normalising to a flat host int32 array HERE (the one-time request
+        # boundary) keeps a device array from ever reaching
+        # ``_record_admissions`` — which would host-sync in the hot path.
+        if self.draft_tokens is not None:
+            self.draft_tokens = np.asarray(self.draft_tokens,
+                                           np.int32).reshape(-1)
+
 
 def scene_key(req: Request) -> Any:
     """Stable per-scene key: ``req.scene_id`` when the producer assigned one

@@ -29,7 +29,11 @@ class TrainConfig:
     remat: bool = True
     remat_policy: str = "nothing"    # see transformer.REMAT_POLICIES
     ce_chunks: int = 8
-    compression: GC.CompressionConfig = GC.CompressionConfig()
+    # default_factory, not a shared class-level instance (SL004): frozen
+    # makes the sharing harmless today, but nothing pins CompressionConfig
+    # frozen — the factory keeps this safe if that ever changes
+    compression: GC.CompressionConfig = dataclasses.field(
+        default_factory=GC.CompressionConfig)
 
 
 def make_loss_fn(cfg: ArchConfig, train_cfg: "TrainConfig") -> Callable:

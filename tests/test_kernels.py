@@ -27,6 +27,7 @@ TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
     (2, 100, 1, 7, 48),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.kernel_parity
 def test_region_score_sweep(b, r, nv, ne, d, dtype):
     k1, k2 = jax.random.split(KEY)
     v = _rand(k1, (b, r, nv, d), dtype)
@@ -62,6 +63,7 @@ def test_region_score_matches_manual_cosine():
 ])
 @pytest.mark.parametrize("window,softcap", [(0, None), (64, None),
                                             (0, 50.0), (96, 30.0)])
+@pytest.mark.kernel_parity
 def test_flash_attention_sweep(sq, h, kh, hd, window, softcap):
     k1, k2, k3 = jax.random.split(KEY, 3)
     q = _rand(k1, (2, sq, h, hd), jnp.float32)
@@ -403,6 +405,7 @@ def test_decode_matches_flash_last_row():
 @pytest.mark.parametrize("s,h,dk,dv,chunk", [
     (128, 4, 16, 16, 32), (256, 2, 8, 24, 64), (64, 1, 32, 8, 16),
 ])
+@pytest.mark.kernel_parity
 def test_ssm_scan_sweep(s, h, dk, dv, chunk):
     ks = jax.random.split(KEY, 4)
     q = _rand(ks[0], (2, s, h, dk), jnp.float32)
@@ -435,6 +438,28 @@ def test_ssm_chunked_equals_sequential():
                                rtol=1e-3, atol=1e-3)
     np.testing.assert_allclose(np.asarray(f_chunk), np.asarray(st),
                                rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# slstm_scan (sLSTM recurrence)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.kernel_parity
+@pytest.mark.parametrize("b,s,heads,p", [(2, 16, 2, 8), (1, 33, 4, 4),
+                                         (3, 8, 1, 16)])
+def test_slstm_scan_parity(b, s, heads, p):
+    d = heads * p
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, 11))
+    gates_x = _rand(k1, (b, s, 4 * d), jnp.float32)
+    r = _rand(k2, (heads, p, 4 * p), jnp.float32) * 0.2
+    h1, st1 = ops.slstm_scan(gates_x, r, impl="pallas_interpret")
+    h2, st2 = ops.slstm_scan(gates_x, r, impl="ref")
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-4, atol=2e-4)
+    assert len(st1) == len(st2) == 4
+    for got, want in zip(st1, st2):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
 
 
 def test_ssm_state_continuation():

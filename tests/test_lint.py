@@ -1,0 +1,439 @@
+"""spacelint: every rule must fire on its fixture and stay quiet on the
+compliant twin — and the repo itself must lint clean (the acceptance bar
+for merging new code, enforced here rather than by convention)."""
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import lint as L
+from repro.analysis.common import Project, SourceFile
+from repro.analysis.compile_guard import CompileGuard, SteadyStateRecompile
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_on(sources):
+    """sources: {path: snippet} -> list of findings (disables applied)."""
+    files = [SourceFile(p, textwrap.dedent(s)) for p, s in sources.items()]
+    return L.run(Project(files))
+
+
+def codes(sources):
+    return [f.code for f in run_on(sources)]
+
+
+# ---------------------------------------------------------------------------
+# SL000 — disable-comment policy
+# ---------------------------------------------------------------------------
+
+def test_sl000_unknown_code_and_missing_reason():
+    src = """
+    x = 1  # spacelint: disable=SL999 (no such rule)
+    y = 2  # spacelint: disable=SL001
+    """
+    assert codes({"a.py": src}) == ["SL000", "SL000"]
+
+
+def test_sl000_unparseable_directive():
+    assert codes({"a.py": "x = 1  # spacelint: disabled-ish\n"}) == ["SL000"]
+
+
+def test_sl000_prose_mention_and_strings_are_fine():
+    src = '''
+    # spacelint rules live in repro/analysis
+    doc = "try # spacelint: disable=SL001 in a string"
+    '''
+    assert codes({"a.py": src}) == []
+
+
+def test_syntax_error_is_sl000_not_a_crash():
+    assert codes({"a.py": "def broken(:\n"}) == ["SL000"]
+
+
+# ---------------------------------------------------------------------------
+# SL001 — host sync in engine hot paths
+# ---------------------------------------------------------------------------
+
+_SL001_HOT = """
+import numpy as np
+
+class EngineCore:
+    def step(self):
+        toks = self._slot_step_j(self._slot_logits)
+        out = []
+        for i in range(4):
+            out.append(int(toks[i]))
+        return out
+"""
+
+_SL001_HOISTED = """
+import numpy as np
+
+class EngineCore:
+    def step(self):
+        toks = self._slot_step_j(self._slot_logits)
+        # spacelint: disable=SL001 (the one deliberate per-step fetch)
+        toks_np = np.asarray(toks)
+        return [int(toks_np[i]) for i in range(4)]
+"""
+
+
+def test_sl001_fires_on_per_token_sync_in_step():
+    assert "SL001" in codes({"engine.py": _SL001_HOT})
+
+
+def test_sl001_hoisted_fetch_with_disable_is_clean():
+    # np.asarray(device) is the flagged sync; once disabled, the host copy
+    # is host data — downstream int() must NOT re-fire
+    assert codes({"engine.py": _SL001_HOISTED}) == []
+
+
+def test_sl001_ignores_metadata_and_cold_paths():
+    src = """
+    import numpy as np
+
+    class EngineCore:
+        def step(self):
+            toks = self._slot_step_j(self._slot_logits)
+            return toks.shape[0] + len(self._slots)
+
+        def cold_report(self):
+            return float(self._slot_logits.sum())
+
+    def helper(x):
+        return int(x)
+    """
+    assert codes({"engine.py": src}) == []
+
+
+def test_sl001_admission_host_arrays_do_not_flag():
+    src = """
+    import numpy as np
+
+    class EngineCore:
+        def admit_many(self, requests):
+            images = np.stack([np.asarray(r.image) for r in requests])
+            return images
+    """
+    assert codes({"engine.py": src}) == []
+
+
+def test_sl001_device_attr_and_annotation_seeds():
+    src = """
+    import numpy as np
+
+    class SpecEngine:
+        def _step_spec(self, pend: jax.Array):
+            a = np.asarray(self._draft_cache)
+            b = float(pend)
+            return a, b
+    """
+    assert codes({"engine.py": src}) == ["SL001", "SL001"]
+
+
+# ---------------------------------------------------------------------------
+# SL002 — kernel contract + prefetch arity
+# ---------------------------------------------------------------------------
+
+_KERNEL_OK = """
+import functools
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+def _foo_kernel(len_ref, a_ref, o_ref, acc_ref):
+    pass
+
+def foo_pallas(x, lens):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((1, 1), lambda i, j, lens: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, lens: (i, j)),
+        scratch_shapes=[pltpu.VMEM((8,), None)],
+    )
+    kernel = functools.partial(_foo_kernel)
+    return pl.pallas_call(kernel, grid_spec=grid_spec)(lens, x)
+"""
+
+_REF_OK = "def foo(x, lens):\n    return x\n"
+_OPS_OK = "def foo(x, lens, impl=None):\n    return x\n"
+_TEST_OK = """
+import pytest
+from repro.kernels import ops
+
+@pytest.mark.kernel_parity
+def test_foo_parity():
+    ops.foo(1, 2)
+"""
+
+_CONTRACT = {
+    "src/repro/kernels/foo.py": _KERNEL_OK,
+    "src/repro/kernels/ref.py": _REF_OK,
+    "src/repro/kernels/ops.py": _OPS_OK,
+    "tests/test_foo.py": _TEST_OK,
+}
+
+
+def test_sl002_full_triple_is_clean():
+    assert codes(_CONTRACT) == []
+
+
+@pytest.mark.parametrize("drop,expect", [
+    ("src/repro/kernels/ref.py", "oracle"),
+    ("src/repro/kernels/ops.py", "dispatcher"),
+])
+def test_sl002_missing_contract_half(drop, expect):
+    sources = {p: ("" if p == drop else s) for p, s in _CONTRACT.items()}
+    found = run_on(sources)
+    assert [f.code for f in found] == ["SL002"]
+    assert expect in found[0].message
+
+
+def test_sl002_unmarked_parity_test_does_not_count():
+    sources = dict(_CONTRACT)
+    sources["tests/test_foo.py"] = _TEST_OK.replace(
+        "@pytest.mark.kernel_parity\n", "")
+    found = run_on(sources)
+    assert [f.code for f in found] == ["SL002"]
+    assert "kernel_parity" in found[0].message
+
+
+def test_sl002_prefetch_arity_mismatches():
+    bad = _KERNEL_OK.replace(
+        "in_specs=[pl.BlockSpec((1, 1), lambda i, j, lens: (i, j))]",
+        "in_specs=[pl.BlockSpec((1, 1), lambda i, j: (i, j))]").replace(
+        "def _foo_kernel(len_ref, a_ref, o_ref, acc_ref):",
+        "def _foo_kernel(len_ref, a_ref, o_ref):")
+    sources = dict(_CONTRACT)
+    sources["src/repro/kernels/foo.py"] = bad
+    msgs = [f.message for f in run_on(sources) if f.code == "SL002"]
+    assert any("index-map lambda takes 2" in m for m in msgs)
+    assert any("takes 3 positional ref(s)" in m for m in msgs)
+
+
+def test_sl002_vararg_lambda_absorbs_prefetch_tail():
+    src = _KERNEL_OK.replace("lambda i, j, lens:", "lambda i, j, *_:")
+    sources = dict(_CONTRACT)
+    sources["src/repro/kernels/foo.py"] = src
+    assert codes(sources) == []
+
+
+# ---------------------------------------------------------------------------
+# SL003 — jit-cache hygiene
+# ---------------------------------------------------------------------------
+
+def test_sl003_jit_on_method_and_bound_method():
+    src = """
+    import jax
+
+    class Engine:
+        @jax.jit
+        def f(self, x):
+            return x
+
+        def __init__(self):
+            self.g_j = jax.jit(self.g)
+    """
+    assert codes({"a.py": src}) == ["SL003", "SL003"]
+
+
+def test_sl003_closure_over_self():
+    src = """
+    import jax
+
+    class Engine:
+        def __init__(self):
+            def _step(x):
+                return x + self.bias
+            self.step_j = jax.jit(_step)
+    """
+    assert codes({"a.py": src}) == ["SL003"]
+
+
+def test_sl003_closure_over_locals_is_the_idiom():
+    src = """
+    import jax
+
+    class Engine:
+        def __init__(self, params):
+            bias = params["bias"]
+            def _step(x):
+                return x + bias
+            self.step_j = jax.jit(_step)
+    """
+    assert codes({"a.py": src}) == []
+
+
+def test_sl003_mutable_static_default():
+    src = """
+    import jax
+
+    def f(x, cfg=RuntimeConfig()):
+        return x
+
+    f_j = jax.jit(f, static_argnames=("cfg",))
+    """
+    assert codes({"a.py": src}) == ["SL003"]
+
+
+def test_sl003_frozen_dataclass_static_default_is_fine():
+    src = """
+    import dataclasses
+    import jax
+
+    @dataclasses.dataclass(frozen=True)
+    class Frozen:
+        n: int = 1
+
+    def f(x, cfg=Frozen()):
+        return x
+
+    f_j = jax.jit(f, static_argnames=("cfg",))
+    """
+    assert codes({"a.py": src}) == []
+
+
+# ---------------------------------------------------------------------------
+# SL004 — dataclass defaults
+# ---------------------------------------------------------------------------
+
+def test_sl004_shared_instance_default():
+    src = """
+    import dataclasses
+
+    class SubConfig:
+        pass
+
+    @dataclasses.dataclass
+    class Config:
+        sub: SubConfig = SubConfig()
+    """
+    assert codes({"configs/a.py": src}) == ["SL004"]
+
+
+def test_sl004_mutable_literal_default():
+    src = """
+    import dataclasses
+
+    @dataclasses.dataclass
+    class Config:
+        xs: list = []
+    """
+    assert codes({"configs/a.py": src}) == ["SL004"]
+
+
+def test_sl004_factory_and_frozen_instance_are_fine():
+    src = """
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class Sub:
+        n: int = 1
+
+    @dataclasses.dataclass
+    class Config:
+        xs: list = dataclasses.field(default_factory=list)
+        sub: Sub = Sub()
+        n: int = 3
+    """
+    assert codes({"configs/a.py": src}) == []
+
+
+# ---------------------------------------------------------------------------
+# the repo itself + the CLI
+# ---------------------------------------------------------------------------
+
+def test_repo_lints_clean(capsys):
+    paths = [os.path.join(REPO_ROOT, d)
+             for d in ("src", "tests", "benchmarks")]
+    rc = L.main(paths)
+    out = capsys.readouterr().out
+    assert rc == 0, f"repo must lint clean:\n{out}"
+
+
+def test_cli_nonzero_on_seeded_violation(tmp_path, capsys):
+    bad = tmp_path / "engine.py"
+    bad.write_text(textwrap.dedent(_SL001_HOT))
+    assert L.main([str(bad)]) == 1
+    assert "SL001" in capsys.readouterr().out
+
+
+def test_cli_clean_file_exits_zero(tmp_path):
+    good = tmp_path / "ok.py"
+    good.write_text("x = 1\n")
+    assert L.main([str(good)]) == 0
+
+
+def test_cli_list_rules(capsys):
+    assert L.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in ("SL000", "SL001", "SL002", "SL003", "SL004"):
+        assert code in out
+
+
+# ---------------------------------------------------------------------------
+# CompileGuard (runtime half)
+# ---------------------------------------------------------------------------
+
+class FakeJit:
+    def __init__(self):
+        self.n = 0
+
+    def _cache_size(self):
+        return self.n
+
+
+def test_guard_raises_on_steady_state_recompile():
+    fn = FakeJit()
+    guard = CompileGuard({"step": fn}, mode="raise")
+    fn.n = 3            # warmup compiles
+    guard.arm()
+    guard.check("step") # stable -> fine
+    fn.n = 4
+    with pytest.raises(SteadyStateRecompile, match="step: 3 -> 4"):
+        guard.check("step")
+
+
+def test_guard_counts_in_production_mode_each_compile_once():
+    fn = FakeJit()
+    guard = CompileGuard({"step": fn}, mode="count")
+    guard.arm()
+    fn.n = 2
+    assert guard.check() == 2
+    assert guard.check() == 0           # already accounted
+    fn.n = 3
+    guard.check()
+    assert guard.steady_recompiles == 3
+
+
+def test_guard_unarmed_and_off_are_noops():
+    fn = FakeJit()
+    guard = CompileGuard({"step": fn}, mode="raise")
+    fn.n = 5
+    assert guard.check() == 0           # never armed
+    guard.arm()
+    fn.n = 9
+    off = CompileGuard({"step": fn}, mode="off")
+    off.arm()
+    fn.n = 12
+    assert off.check() == 0
+
+
+def test_guard_skips_objects_without_cache_size():
+    guard = CompileGuard(mode="count")
+    guard.register("plain", lambda x: x)   # silently ignored
+    guard.arm()
+    assert guard.check() == 0
+
+
+def test_guard_context_manager():
+    fn = FakeJit()
+    with pytest.raises(SteadyStateRecompile):
+        with CompileGuard({"step": fn}, mode="raise"):
+            fn.n = 1
+
+
+def test_guard_pytest_env_defaults_to_raise():
+    # PYTEST_CURRENT_TEST is set while this test runs
+    assert CompileGuard().mode == "raise"
