@@ -52,6 +52,17 @@ rows), and an interleaved-median steady-state decode comparison (the
 chunked engine falls back to the identical compiled step — parity
 required).
 
+A fifth workload benchmarks **overload control** under sustained
+over-capacity arrivals (offered load ≈ 2× the measured service rate,
+~80% bulk det / 20% urgent vqa): the overload-controlled engine (bounded
+priority admission queue + page-aware check-then-commit admission +
+drop-and-recompute preemption) against the pre-overload baseline — an
+unbounded host FIFO in front of ``admit_many``.  The record carries
+per-class TTFT from arrival, queue peaks, preemption/rejection counts and
+the urgent-p99 speedup; every completed answer (preempted-then-resumed
+included) is asserted token-for-token equal to the uncontended dense
+oracle and the controlled engine's pool must drain leak-free.
+
 Every workload now reports **TTFT and per-request p50/p99 latency** next
 to aggregate tokens/s, derived from the engine's own request log
 (admit / first-token / done wall-clock milestones per request).
@@ -763,6 +774,218 @@ def bench_chunked(*, slots: int, grid: int, bursts: int, new_scenes: int,
     }
 
 
+# ---------------------------------------------------------------------------
+# overload control: sustained over-capacity arrivals, mixed priorities
+# ---------------------------------------------------------------------------
+
+def _overload_stream(ac: EO.EOAdapterConfig, n: int, urgent_frac: float,
+                     seed: int) -> List[Request]:
+    """Saturation traffic, the paper's disaster-monitoring mix: mostly bulk
+    det mapping work (long N_r-token answers, ``PRIORITY_BULK``) with
+    urgent vqa queries interspersed (1-token answers,
+    ``PRIORITY_URGENT``) — the class whose TTFT must hold at saturation.
+    One fresh scene per request: every admission carries its full
+    worst-case page demand."""
+    from repro.serving.request import PRIORITY_BULK, PRIORITY_URGENT
+    eo_cfg = synthetic.EOTaskConfig(image_size=ac.image_size, grid=ac.grid,
+                                    num_classes=ac.num_classes)
+    data = synthetic.make_dataset("cls", max(n, 2), seed=seed, cfg=eo_cfg)
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        img = data["images"][i % len(data["images"])]
+        if rng.rand() < urgent_frac:
+            reqs.append(Request(task="vqa", image=img, prompt=i % 2,
+                                scene_id=f"ov-{i}",
+                                priority=PRIORITY_URGENT))
+        else:
+            reqs.append(Request(task="det", image=img, prompt=0,
+                                scene_id=f"ov-{i}", priority=PRIORITY_BULK))
+    return reqs
+
+
+def _clone_overload(stream: List[Request], tag: str) -> List[Request]:
+    out = []
+    for r in stream:
+        c = Request(task=r.task, image=r.image, prompt=r.prompt,
+                    scene_id=f"{tag}-{r.scene_id}", priority=r.priority)
+        c.request_id = r.request_id
+        out.append(c)
+    return out
+
+
+def _drive_overload(core: EngineCore, stream: List[Request],
+                    interval: float, controlled: bool) -> Dict[str, object]:
+    """Serve requests arriving every ``interval`` seconds.
+
+    ``controlled`` engines take arrivals through ``submit_many`` (bounded
+    priority queue, explicit rejections polled via ``take_rejected``); the
+    baseline models the pre-overload deployment — an UNBOUNDED host-side
+    FIFO in front of ``admit_many``, which is exactly the failure mode the
+    layer replaces.  TTFT is measured from ARRIVAL, so queue wait — either
+    queue — is charged."""
+    from repro.serving.request import PRIORITY_BULK, PRIORITY_URGENT
+    pending = [(i * interval, r) for i, r in enumerate(stream)]
+    arrivals: Dict[int, float] = {}
+    due: List[Request] = []
+    outputs: Dict[int, list] = {}
+    rejected = []
+    fifo_peak = 0
+    core.stats["request_log"].clear()
+    t0 = time.perf_counter()
+    while (pending or due or core.active_count() > 0
+           or core.queue_depth() > 0):
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            rel, r = pending.pop(0)
+            arrivals[r.request_id] = t0 + rel
+            due.append(r)
+        if due and controlled:
+            core.submit_many(due)
+            due = []
+        elif due:
+            n = min(len(due), len(core.free_slots()))
+            if n:
+                core.admit_many(due[:n])
+                del due[:n]
+            fifo_peak = max(fifo_peak, len(due))
+        if core.active_count() > 0 or core.queue_depth() > 0:
+            for req, toks in core.step():
+                outputs[req.request_id] = toks.tolist()
+            if controlled:
+                rejected += core.take_rejected()
+        elif pending:
+            time.sleep(max(min(pending[0][0] - now, 1e-3), 0.0))
+    jax.block_until_ready(core._slot_logits)
+    dt = time.perf_counter() - t0
+
+    ms = lambda x: round(float(x) * 1e3, 3)
+    log = core.stats["request_log"]
+    rec: Dict[str, object] = {
+        "completed": len(outputs),
+        "rejected": len(rejected),
+        "wall_s": round(dt, 4),
+        "completed_per_s": round(len(outputs) / dt, 2),
+        "queue_peak": (core.scheduler_stats()["overload"]["queue_peak"]
+                       if controlled else fifo_peak),
+        "steady_recompiles":
+            core.scheduler_stats()["steady_recompiles"],
+    }
+    for name, prio in (("urgent", PRIORITY_URGENT), ("bulk", PRIORITY_BULK)):
+        ttft = [r["t_first"] - arrivals[r["request_id"]] for r in log
+                if r.get("priority", 0) == prio
+                and r["request_id"] in arrivals]
+        if ttft:
+            rec[f"{name}_completed"] = len(ttft)
+            rec[f"{name}_ttft_p50_ms"] = ms(np.percentile(ttft, 50))
+            rec[f"{name}_ttft_p99_ms"] = ms(np.percentile(ttft, 99))
+    rec["outputs"] = outputs
+    rec["rejected_ids"] = sorted(r.request_id for r, _ in rejected)
+    return rec
+
+
+def bench_overload(*, slots: int, n_req: int, urgent_frac: float,
+                   queue_cap: int, seed: int, smoke: bool
+                   ) -> Dict[str, object]:
+    """Sustained over-capacity serving (offered load ≈ 2× measured service
+    rate), overload control ON vs OFF.
+
+    The controlled engine must degrade gracefully — bounded queue, explicit
+    rejections, urgent p99 TTFT held by priority admission + preemption —
+    while the baseline's unbounded FIFO makes every class's tail grow with
+    the backlog.  Every completed answer (preempted-then-resumed included)
+    is asserted token-for-token equal to the uncontended dense oracle, and
+    the controlled engine's pool must drain to the cache-only state."""
+    import jax.numpy as jnp
+    from repro.serving.admission import OverloadConfig
+    from repro.serving.kv_pool import TRASH_PAGE
+    sat_cfg, _ = proxy_pair("small")
+    ac = EO.EOAdapterConfig()
+    params = EO.init_adapter(jax.random.PRNGKey(seed), sat_cfg, ac)
+    tier = TierModel(params, sat_cfg)
+    base = EngineCore(tier, ac,
+                      EngineCoreConfig(slots=slots, answer_vocab=9))
+    ctrl = EngineCore(tier, ac,
+                      EngineCoreConfig(slots=slots, answer_vocab=9,
+                                       overload=OverloadConfig(
+                                           queue_cap=queue_cap)))
+    base.warmup()
+    ctrl.warmup()
+    stream = _overload_stream(ac, n_req, urgent_frac, seed)
+
+    # uncontended dense oracle per request (batched per task)
+    dense = EngineCore(tier, ac,
+                       EngineCoreConfig(slots=2, answer_vocab=9,
+                                        cache_impl="dense"))
+    oracle: Dict[int, list] = {}
+    by_task: Dict[str, List[Request]] = {}
+    for r in stream:
+        by_task.setdefault(r.task, []).append(r)
+    for task, rs in by_task.items():
+        images = jnp.asarray(np.stack([np.asarray(r.image) for r in rs]))
+        prompts = jnp.asarray(np.array([r.prompt for r in rs], np.int32))
+        toks, _ = dense.generate(task, images, prompts, 9)
+        for r, t in zip(rs, np.asarray(toks)):
+            oracle[r.request_id] = t.tolist()
+
+    # service-rate probe: the baseline serves the stream flat-out, which
+    # calibrates the arrival interval to 2× the measured capacity
+    probe = _drive_overload(base, _clone_overload(stream, "p"),
+                            interval=0.0, controlled=False)
+    probe.pop("outputs")
+    interval = 0.5 * probe["wall_s"] / max(n_req, 1)
+
+    r_base = _drive_overload(base, _clone_overload(stream, "b"),
+                             interval, controlled=False)
+    r_ctrl = _drive_overload(ctrl, _clone_overload(stream, "c"),
+                             interval, controlled=True)
+
+    outs_base = r_base.pop("outputs")
+    outs_ctrl = r_ctrl.pop("outputs")
+    r_base.pop("rejected_ids")
+    rejected_ids = set(r_ctrl.pop("rejected_ids"))
+    match = (all(outs_base[rid] == oracle[rid] for rid in outs_base)
+             and all(outs_ctrl[rid] == oracle[rid] for rid in outs_ctrl))
+    assert match, "overload outputs diverged from the uncontended oracle"
+    # explicit accounting: every submitted request either completed or was
+    # explicitly rejected — nothing silently vanished
+    assert set(outs_ctrl) | rejected_ids == {r.request_id for r in stream}
+    # bounded queue + pool drained to the cache-only state
+    assert r_ctrl["queue_peak"] <= queue_cap
+    st = ctrl._prefix.stats()
+    assert st["entries_in_use"] == 0
+    assert ctrl._pool.pages_in_use == st["shared_pages"]
+    assert (ctrl._bt_np == TRASH_PAGE).all()
+
+    ol = ctrl.scheduler_stats()["overload"]
+    ratio = lambda a, b: round(a / max(b, 1e-9), 3)
+    rec = {
+        "slots": slots, "requests": n_req, "urgent_frac": urgent_frac,
+        "queue_cap": queue_cap,
+        "arrival_interval_s": round(interval, 5),
+        "service_probe_wall_s": probe["wall_s"],
+        "baseline": r_base,
+        "controlled": r_ctrl,
+        "urgent_ttft_p50_speedup": ratio(
+            r_base.get("urgent_ttft_p50_ms", 0.0),
+            r_ctrl.get("urgent_ttft_p50_ms", 1e9)),
+        "urgent_ttft_p99_speedup": ratio(
+            r_base.get("urgent_ttft_p99_ms", 0.0),
+            r_ctrl.get("urgent_ttft_p99_ms", 1e9)),
+        "preemptions": ol["preemptions"],
+        "admissions_deferred": ol["admissions_deferred"],
+        "rejections": ol["rejections"],
+        "readmit_wait_ms": ol["readmit_wait_ms"],
+        "outputs_match": match,
+    }
+    if not smoke:
+        # the acceptance bar: priority admission + preemption must hold the
+        # urgent tail at least 2× better than FIFO under 2× offered load
+        # (skipped in CI smoke, where single-request timings are noise)
+        assert rec["urgent_ttft_p99_speedup"] >= 2.0, rec
+    return rec
+
+
 def _collect_recompiles(obj, path=""):
     """Every ``steady_recompiles`` counter anywhere in the record tree —
     one per engine each workload drove — as (path, count) pairs."""
@@ -841,6 +1064,14 @@ def main(argv=None) -> int:
     ap.add_argument("--chunk-fanout", type=int, default=8,
                     help="urgent vqa queries per burst over the previous "
                          "burst's (resident) scenes")
+    ap.add_argument("--overload-slots", type=int, default=8)
+    ap.add_argument("--overload-requests", type=int, default=96)
+    ap.add_argument("--overload-urgent-frac", type=float, default=0.2,
+                    help="share of PRIORITY_URGENT vqa in the saturation "
+                         "mix (the rest is PRIORITY_BULK det)")
+    ap.add_argument("--overload-queue-cap", type=int, default=16,
+                    help="bounded admission-queue capacity of the "
+                         "controlled engine")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: prove the harness executes end-to-end")
     ap.add_argument("--check-compiles", action="store_true",
@@ -858,6 +1089,8 @@ def main(argv=None) -> int:
         args.spec_gamma, args.spec_train_steps = 2, 0
         args.chunk_slots, args.chunk_grid = 3, 8
         args.chunk_bursts, args.chunk_new_scenes, args.chunk_fanout = 3, 1, 2
+        args.overload_slots, args.overload_requests = 3, 20
+        args.overload_queue_cap = 4
 
     impls = ["batched", "vmap"] if args.impl == "both" else [args.impl]
     results = {}
@@ -922,6 +1155,24 @@ def main(argv=None) -> int:
           f"{chunked['steady_decode_ratio']}")
     print(f"chunked outputs == stall: {chunked['outputs_match']}")
 
+    # -- overload control: sustained over-capacity, mixed priorities -------
+    overload = bench_overload(slots=args.overload_slots,
+                              n_req=args.overload_requests,
+                              urgent_frac=args.overload_urgent_frac,
+                              queue_cap=args.overload_queue_cap,
+                              seed=args.seed, smoke=args.smoke)
+    ob, oc = overload["baseline"], overload["controlled"]
+    print(f"[overload q={overload['queue_cap']}] 2x saturation: urgent TTFT "
+          f"p99 {oc.get('urgent_ttft_p99_ms', 0):.1f}ms vs "
+          f"{ob.get('urgent_ttft_p99_ms', 0):.1f}ms FIFO "
+          f"({overload['urgent_ttft_p99_speedup']}×; p50 "
+          f"{overload['urgent_ttft_p50_speedup']}×)  "
+          f"queue peak {oc['queue_peak']}/{overload['queue_cap']} vs "
+          f"{ob['queue_peak']} unbounded  "
+          f"preempt {overload['preemptions']}  "
+          f"rejected {oc['rejected']}/{overload['requests']}")
+    print(f"overload outputs == oracle: {overload['outputs_match']}")
+
     rec = {
         "config": {"slots": args.slots, "steps": args.steps,
                    "warmup": args.warmup, "det_frac": args.det_frac,
@@ -936,6 +1187,7 @@ def main(argv=None) -> int:
             / max(fanout["paged"]["prefill_tokens"], 1), 3),
         "spec": spec,
         "chunked": chunked,
+        "overload": overload,
     }
     if "batched" in results and "vmap" in results:
         rec["speedup_tokens_per_s"] = round(
@@ -957,7 +1209,8 @@ def main(argv=None) -> int:
     print(f"wrote {args.out} (history: {len(rec['history'])} prior runs)")
     compiles_ok = not (args.check_compiles and total_recompiles)
     return 0 if (outputs_match and spec["outputs_match"]
-                 and chunked["outputs_match"] and compiles_ok) else 1
+                 and chunked["outputs_match"] and overload["outputs_match"]
+                 and compiles_ok) else 1
 
 
 if __name__ == "__main__":

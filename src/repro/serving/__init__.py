@@ -11,9 +11,13 @@
 - ``CascadeServer``    — two-tier request server (thin executor adapter)
 """
 from repro.serving.request import (Request, Response, TIERS,  # noqa: F401
-                                   scene_key)
+                                   PRIORITY_BULK, PRIORITY_NORMAL,
+                                   PRIORITY_URGENT, scene_key)
 from repro.serving.kv_pool import (KVPagePool, PrefixCache,  # noqa: F401
                                    TRASH_PAGE)
+from repro.serving.admission import (ADMITTED, QUEUED,  # noqa: F401
+                                     REJECTED, AdmissionQueue,
+                                     OverloadConfig)
 from repro.serving.engine_core import (EngineCore, EngineCoreConfig,  # noqa: F401
                                        shared_core)
 from repro.serving.policy import (AIRGPolicy, CascadePolicy,  # noqa: F401

@@ -101,10 +101,16 @@ class CascadeServer:
         # scene key → per-scene encode reuse on the shared core (queries
         # fanning out over one capture re-use V(x)/E(T); deterministic, so
         # decisions — and the golden test — are unchanged)
+        # priority/deadline ride the whole path: stamped on the offload
+        # payload's metadata and into the GS engine's request, so an
+        # overload-controlled ground core can rank this request against
+        # its other in-flight work.  Advisory — decisions and token
+        # streams (and the golden test) are unchanged.
         res = self._executor(pipeline).run_serve(
             self._policy(), req.task, images, prompts, self.cc.answer_vocab,
             allow_offload=self.link_up, scene=scene_key(req),
-            prompt_id=req.prompt)
+            prompt_id=req.prompt, priority=req.priority,
+            deadline_s=req.deadline_s)
         exit_stage = int(np.asarray(res.exit_stage)[0])
         offload = bool(np.asarray(res.offload)[0])
 

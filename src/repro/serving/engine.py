@@ -27,6 +27,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import eo_adapter as EO
 from repro.core.cascade import TierModel
+from repro.serving.admission import OverloadConfig
 from repro.serving.engine_core import EngineCore, EngineCoreConfig
 from repro.serving.request import Request, Response
 
@@ -49,6 +50,13 @@ class EngineConfig:
     prefill_chunk: int = 0
     #: token budget per fused chunked step (None → slots + prefill_chunk)
     token_budget: Optional[int] = None
+    #: explicit KV pool size in pages (None → worst-case bound; smaller
+    #: values model real capacity pressure — see EngineCoreConfig)
+    pool_pages: Optional[int] = None
+    #: overload control: page-pool-aware admission, bounded priority queue,
+    #: deadline expiry and priority preemption (None = off, the legacy
+    #: admit-whenever-a-slot-frees contract; see serving/admission.py)
+    overload: Optional[OverloadConfig] = None
 
 
 class InferenceEngine:
@@ -78,8 +86,14 @@ class InferenceEngine:
                              prefix_cache_scenes=self.ec.prefix_cache_scenes,
                              spec_gamma=self.ec.spec_gamma,
                              prefill_chunk=self.ec.prefill_chunk,
-                             token_budget=self.ec.token_budget),
+                             token_budget=self.ec.token_budget,
+                             pool_pages=self.ec.pool_pages,
+                             overload=self.ec.overload),
             draft=draft)
+        #: (request, reason) pairs dropped by the last overload-controlled
+        #: ``serve`` call — rejected requests get no Response (there is no
+        #: answer to wrap), so drivers read the drop list here
+        self.last_rejected: List[Tuple[Request, str]] = []
 
     def warmup(self) -> None:
         """Pre-compile the slot path (decode step + every admission bucket)
@@ -104,18 +118,39 @@ class InferenceEngine:
         Requests are admitted whenever a slot is free — including slots that
         finished on the *previous* decode step while the rest of the batch is
         still mid-answer — so mixed-length traffic (1-token VQA/CLS answers
-        next to N_r-token detection answers) keeps every slot busy."""
+        next to N_r-token detection answers) keeps every slot busy.
+
+        With ``EngineConfig(overload=...)`` admission instead goes through
+        the engine's own overload queue: requests are submitted once and the
+        engine admits them page-pool-aware in priority order (preempting /
+        rejecting under sustained saturation).  Rejected requests return no
+        Response — ``self.last_rejected`` holds their (request, reason)
+        pairs after the call."""
         out: List[Response] = []
-        queue = deque(requests)
         core = self.core
+
+        def emit(req: Request, toks: np.ndarray) -> None:
+            pred = toks[0] if req.task in ("vqa", "cls") else toks
+            out.append(Response(
+                request_id=req.request_id, tokens=toks, pred=pred,
+                tier=self.tier, exit_stage=-1, latency_s=0.0,
+                tx_bytes=0.0))
+
+        if self.ec.overload is not None:
+            self.last_rejected = []
+            core.submit_many(list(requests))
+            self.last_rejected.extend(core.take_rejected())
+            while core.queue_depth() or core.active_count() > 0:
+                for req, toks in core.step():
+                    emit(req, toks)
+                self.last_rejected.extend(core.take_rejected())
+            return out
+
+        queue = deque(requests)
         while queue or core.active_count() > 0:
             n = min(len(queue), len(core.free_slots()))
             if n:
                 core.admit_many([queue.popleft() for _ in range(n)])
             for req, toks in core.step():
-                pred = toks[0] if req.task in ("vqa", "cls") else toks
-                out.append(Response(
-                    request_id=req.request_id, tokens=toks, pred=pred,
-                    tier=self.tier, exit_stage=-1, latency_s=0.0,
-                    tx_bytes=0.0))
+                emit(req, toks)
         return out

@@ -57,6 +57,11 @@ from repro.analysis.compile_guard import CompileGuard
 from repro.configs.base import ATTN
 from repro.core import eo_adapter as EO
 from repro.models import transformer as T
+from repro.serving.admission import (ADMITTED, QUEUED, REJECTED,
+                                     REASON_EXPIRED, REASON_INFEASIBLE,
+                                     REASON_QUEUE_FULL,
+                                     AdmissionQueue, OverloadConfig,
+                                     QueueEntry)
 from repro.serving.kv_pool import KVPagePool, PrefixCache, TRASH_PAGE
 from repro.serving.request import Request, scene_key
 
@@ -101,6 +106,20 @@ class EngineCoreConfig:
     #: of streaming scenes (FIFO).  ``None`` → ``slots + prefill_chunk``.
     #: Must exceed ``slots`` so prefill streams can never starve.
     token_budget: Optional[int] = None
+    #: Explicit KV pool size in pages (paged only).  ``None`` → the
+    #: worst-case bound (every slot a distinct scene + the resident-scene
+    #: allowance), under which admission can never run out of pages.
+    #: Smaller values model real capacity pressure: admission becomes
+    #: genuinely page-bound, which is what overload control arbitrates.
+    #: Must cover at least one slot's pages + the trash page.
+    pool_pages: Optional[int] = None
+    #: Overload control (None = off, the legacy contract: ``admit_many``
+    #: admits unconditionally and callers queue in front of the engine).
+    #: When set, ``submit_many``/``step`` run page-pool-aware admission
+    #: with a bounded priority queue, deadline expiry and (optionally)
+    #: lowest-priority preemption — see ``serving/admission.py`` and
+    #: DESIGN.md §serving "Overload control".
+    overload: Optional[OverloadConfig] = None
 
 
 @dataclasses.dataclass
@@ -375,6 +394,14 @@ class EngineCore:
             # refcounted by slot + cache) + `scenes` cache-only prefixes
             self._n_pages = (1 + n_slots * self._pages_per_slot
                              + scenes * self._n_shared_pages)
+            if self.cfg.pool_pages is not None:
+                floor = 1 + self._pages_per_slot
+                if self.cfg.pool_pages < floor:
+                    raise ValueError(
+                        f"pool_pages {self.cfg.pool_pages} below the "
+                        f"single-slot floor {floor} (trash page + one "
+                        "slot's worst-case pages)")
+                self._n_pages = self.cfg.pool_pages
             self._pool = KVPagePool(self._n_pages, ps)
             self._prefix = PrefixCache(self._pool,
                                        capacity=n_slots + scenes)
@@ -714,6 +741,28 @@ class EngineCore:
                       "scheduled_tokens": 0, "stall_steps": 0,
                       "budget": self._token_budget, "step_log": []},
         }
+        if self.cfg.pool_pages is not None and self.cache_impl != "paged":
+            raise ValueError("pool_pages only applies to the paged cache")
+        # -- overload control (None = legacy admit-unconditionally) ---------
+        self._admq: Optional[AdmissionQueue] = None
+        if self.cfg.overload is not None:
+            self._admq = AdmissionQueue(self.cfg.overload.queue_cap)
+            self._submit_seq = 0
+            #: request_id → {t_submit, seq, deferred, preempts}: alive from
+            #: submit to finish/reject (bounded by queue_cap + slots)
+            self._submit_meta: Dict[int, Dict[str, Any]] = {}
+            #: (request, reason) drained by ``take_rejected`` — late
+            #: rejections (expiry, overflow by a later push) happen inside
+            #: ``step``, after ``submit_many`` already returned
+            self._rejected: List[Tuple[Request, str]] = []
+            self.stats["overload"] = {
+                "submitted": 0, "admissions_deferred": 0,
+                "preemptions": 0,
+                "rejections": {REASON_QUEUE_FULL: 0, REASON_EXPIRED: 0},
+                #: seconds between a preemption and the re-admission of the
+                #: same request (bounded log; scheduler_stats summarises)
+                "readmit_wait_s": [],
+            }
         if self.cfg.spec_gamma:
             self.stats["spec"] = {
                 "steps": 0,             # speculative engine steps
@@ -1050,17 +1099,15 @@ class EngineCore:
             del log[:self._occupancy_cap // 2]
 
     # -- paged admission ------------------------------------------------
-    def _prefill_prefixes(self, miss: List[Tuple[Any, Request]],
-                          protect) -> None:
+    def _prefill_prefixes(self, miss: List[Tuple[Any, Request]]) -> None:
         """Region-prefill the scenes in ``miss`` (one batched bucketed call),
         scatter their KV into freshly allocated shared pages, and make them
         resident in the prefix cache with their recurrent-state snapshots.
-        ``protect``: scenes of the whole admission batch — already-resident
-        prefixes the batch is about to acquire must survive this eviction."""
+        The caller has already budgeted the pages and entries (the one
+        up-front ``evict_for`` of ``_admit_many_paged``), so nothing here
+        can fail — this is the commit phase of check-then-commit."""
         km = len(miss)
         n_shared = self._n_shared_pages
-        self._prefix.evict_for(km * n_shared, need_entries=km,
-                               protect=protect)
         kpad = self._admit_pad(km, self.cfg.slots)
         images = jnp.asarray(np.stack(
             [np.asarray(r.image) for _, r in miss]
@@ -1096,14 +1143,20 @@ class EngineCore:
             if s_ not in self._prefix and s_ not in seen:
                 miss.append((s_, r))
                 seen.add(s_)
+        # check-then-commit (admission atomicity): ONE eviction call budgets
+        # the whole batch — shared pages + cache entries for the missing
+        # scenes AND every request's private pages — before anything is
+        # allocated, scattered or made resident.  A MemoryError here leaves
+        # the engine byte-identical to before the call; past this line no
+        # allocation can fail, so a batch can never leak refcounts or leave
+        # partially mapped prefix pages behind.
+        self._prefix.evict_for(
+            k * self._private_per_slot
+            + len(miss) * self._n_shared_pages,
+            need_entries=len(miss), protect=batch_scenes)
         if miss:
-            self._prefill_prefixes(miss, protect=batch_scenes)
+            self._prefill_prefixes(miss)
         self.stats["prefix_hits"] += k - len(miss)
-
-        # whole-batch private-page budget up front (protecting this batch's
-        # scenes), so no per-request allocation can fail mid-admission
-        self._prefix.evict_for(k * self._private_per_slot, need_entries=0,
-                               protect=batch_scenes)
         target = free[:k]
         ptoks = np.empty((k,), np.int32)
         states, private = [], []
@@ -1202,7 +1255,11 @@ class EngineCore:
                 self._bt_np[slot] = list(entry.pages) + priv
                 phases.append("prompt")
             elif s_ in self._streaming:
-                # shared slots stay trash-parked until publication
+                # shared slots stay trash-parked until publication; a
+                # higher-priority waiter raises the stream's priority (its
+                # TTFT now depends on this stream finishing)
+                st = self._streaming[s_]
+                st["priority"] = max(st["priority"], r.priority)
                 self._bt_np[slot] = ([TRASH_PAGE] * self._n_shared_pages
                                      + priv)
                 phases.append("wait")
@@ -1210,7 +1267,8 @@ class EngineCore:
                 shared = self._pool.alloc(self._n_shared_pages)
                 self._streaming[s_] = {"slot": slot, "pages": shared,
                                        "progress": 0,
-                                       "order": self._stream_seq}
+                                       "order": self._stream_seq,
+                                       "priority": r.priority}
                 self._stream_seq += 1
                 self._bt_np[slot] = shared + priv
                 phases.append("prefill")
@@ -1253,16 +1311,250 @@ class EngineCore:
         slot = self._slots[i]
         finished.append((slot.request, np.asarray(slot.tokens, np.int32)))
         log = self.stats["request_log"]
+        # overload engines log queue wait too: t_submit is when the request
+        # entered submit_many (≤ t_admit); per-priority TTFT is measured
+        # from it, so time parked under saturation is charged, not hidden
+        meta = (self._submit_meta.pop(slot.request.request_id, None)
+                if self._admq is not None else None)
         log.append({"request_id": slot.request.request_id,
                     "task": slot.request.task, "t_admit": slot.t_admit,
                     "t_first": slot.t_first,
-                    "t_done": time.perf_counter()})
+                    "t_done": time.perf_counter(),
+                    "priority": slot.request.priority,
+                    "t_submit": (meta["t_submit"] if meta is not None
+                                 else slot.t_admit),
+                    "preempts": (meta["preempts"] if meta is not None
+                                 else 0)})
         if len(log) > self._occupancy_cap:
             del log[:self._occupancy_cap // 2]
         if slot.probs:
             self._stash_spec_probs(slot)
         self._release_slot(i)
         self.stats["finished"] += 1
+
+    # ------------------------------------------------------------------
+    # overload control (cfg.overload set): page-pool-aware admission with
+    # a bounded priority queue, deadline expiry and priority preemption
+    # ------------------------------------------------------------------
+    def page_demand(self, request: Request) -> int:
+        """Worst-case page demand of admitting ``request`` right now: its
+        private pages (prompt + max answer + spec γ slack — the fixed
+        per-slot reservation) plus the shared scene prefix if the scene is
+        neither resident nor currently streaming.  Dense caches reserve
+        worst-case slices per slot at construction, so their demand is 0
+        (admission is slot-gated only)."""
+        if self.cache_impl != "paged":
+            return 0
+        s_ = scene_key(request)
+        streams = self._streaming if self.cfg.prefill_chunk else {}
+        shared = (0 if s_ in self._prefix or s_ in streams
+                  else self._n_shared_pages)
+        return self._private_per_slot + shared
+
+    def _fits(self, entries: List[QueueEntry]) -> bool:
+        """Pure page/entry feasibility check for admitting ``entries`` as
+        one batch: would the up-front ``evict_for`` of the admit path
+        succeed?  Headroom = free pages + zero-user unprotected prefix
+        pages; nothing is evicted or allocated here — requests that do not
+        fit stay parked instead of tearing down cache state they may never
+        use (check-then-commit, the admission-atomicity contract)."""
+        if self.cache_impl != "paged":
+            return True
+        k = len(entries)
+        scenes = [scene_key(e.request) for e in entries]
+        streams = self._streaming if self.cfg.prefill_chunk else {}
+        new = {s_ for s_ in scenes
+               if s_ not in self._prefix and s_ not in streams}
+        protect = set(scenes) | set(streams)
+        need_pages = (k * self._private_per_slot
+                      + len(new) * self._n_shared_pages)
+        # mirror the admit paths' eviction budget exactly: in-flight
+        # streams reserve entry capacity for their future publications
+        need_entries = len(new) + len(streams)
+        if (self._pool.free_pages + self._prefix.evictable_pages(protect)
+                < need_pages):
+            return False
+        resident = len(self._prefix) - self._prefix.evictable_entries(protect)
+        return resident + need_entries <= self._prefix.capacity
+
+    def queue_depth(self) -> int:
+        return len(self._admq) if self._admq is not None else 0
+
+    def take_rejected(self) -> List[Tuple[Request, str]]:
+        """Drain (request, reason) pairs rejected since the last call.
+        Rejections can happen after ``submit_many`` returned ``QUEUED`` —
+        deadline expiry at pump time, or eviction by a later higher-priority
+        push — so drivers poll this next to ``step``'s finished list to
+        learn which requests will never complete."""
+        if self._admq is None:
+            return []
+        out, self._rejected = self._rejected, []
+        return out
+
+    def submit_many(self, requests: List[Request],
+                    now: Optional[float] = None) -> Dict[int, str]:
+        """Overload-controlled admission entry: returns an outcome per
+        request id — ``"admitted"`` (in a slot now), ``"queued"`` (parked
+        in the bounded priority queue; admitted, preempted-for or rejected
+        later) or ``"rejected"`` (queue overflow / already expired).
+        Requires ``EngineCoreConfig.overload``; ``admit_many`` remains the
+        legacy unconditional path and is what the queue pump commits
+        through."""
+        if self._admq is None:
+            raise ValueError("submit_many requires EngineCoreConfig."
+                             "overload (admit_many is the legacy path)")
+        now = time.perf_counter() if now is None else now
+        ol = self.stats["overload"]
+        out: Dict[int, str] = {}
+        for r in requests:
+            ol["submitted"] += 1
+            meta = {"t_submit": now, "seq": self._submit_seq,
+                    "deferred": False, "preempts": 0, "t_preempt": None}
+            self._submit_meta[r.request_id] = meta
+            self._submit_seq += 1
+            entry = QueueEntry(request=r, seq=meta["seq"], t_submit=now)
+            dropped = self._admq.push(entry)
+            if dropped is entry:
+                # queue full of equal-or-better work — drain whatever fits
+                # into free slots first, then retry once before giving up,
+                # so a burst submitted to an idle engine isn't rejected by
+                # the queue bound that exists for *saturation*
+                self._pump_queue(now)
+                dropped = self._admq.push(entry)
+            if dropped is not None:
+                self._reject(dropped, REASON_QUEUE_FULL)
+                if dropped is entry:
+                    out[r.request_id] = REJECTED
+                    continue
+            out[r.request_id] = QUEUED
+        self._pump_queue(now)
+        active = {s.request.request_id for s in self._slots if s.active}
+        queued = {e.request.request_id for e in self._admq}
+        for r in requests:
+            rid = r.request_id
+            if out[rid] == REJECTED:
+                continue
+            if rid in active:
+                out[rid] = ADMITTED
+            elif rid in queued:
+                meta = self._submit_meta[rid]
+                if not meta["deferred"]:
+                    meta["deferred"] = True
+                    ol["admissions_deferred"] += 1
+            else:
+                out[rid] = REJECTED     # expired/evicted inside the pump
+        return out
+
+    def _reject(self, entry: QueueEntry, reason: str) -> None:
+        ol = self.stats["overload"]
+        ol["rejections"][reason] = ol["rejections"].get(reason, 0) + 1
+        self._submit_meta.pop(entry.request.request_id, None)
+        self._rejected.append((entry.request, reason))
+        if len(self._rejected) > self._occupancy_cap:
+            del self._rejected[:self._occupancy_cap // 2]
+
+    def _pump_queue(self, now: Optional[float] = None) -> None:
+        """Admit the longest strictly-priority-ordered queue prefix that
+        fits (slots AND pages); when the head cannot fit and outranks an
+        in-flight request, preempt the lowest-priority slot and retry.
+        Strict head-of-line by priority: lower-priority entries never jump
+        a parked urgent request, so backfill can't starve it of the very
+        pages it is waiting for."""
+        if self._admq is None or len(self._admq) == 0:
+            return
+        now = time.perf_counter() if now is None else now
+        for e in self._admq.expire(now):
+            self._reject(e, REASON_EXPIRED)
+        ov = self.cfg.overload
+        while len(self._admq):
+            free = len(self.free_slots())
+            batch: List[QueueEntry] = []
+            for e in self._admq:
+                if len(batch) >= free:
+                    break
+                if not self._fits(batch + [e]):
+                    break
+                batch.append(e)
+            if batch:
+                for _ in batch:
+                    self._admq.pop()
+                self._admit_submitted(batch, now)
+                continue
+            head = self._admq.peek()
+            if (ov.preempt and head is not None
+                    and self._preempt_one(head.request.priority, now)):
+                continue
+            if head is not None and self.active_count() == 0 \
+                    and not self._fits([head]):
+                # idle engine, everything evictable counted, still no fit:
+                # this request can NEVER be admitted — parking it would
+                # wedge the strict-priority head forever
+                self._admq.pop()
+                self._reject(head, REASON_INFEASIBLE)
+                continue
+            break
+
+    def _admit_submitted(self, entries: List[QueueEntry], now: float
+                         ) -> None:
+        """Commit phase of the pump: ``_fits`` proved the batch feasible,
+        so the legacy admit path (whose one up-front ``evict_for`` can now
+        be satisfied by construction) runs unchanged — same buckets, same
+        compiled shapes, zero new executables for overload traffic."""
+        self.admit_many([e.request for e in entries])
+        ol = self.stats["overload"]
+        for e in entries:
+            meta = self._submit_meta.get(e.request.request_id)
+            if meta is not None and meta["t_preempt"] is not None:
+                wait = ol["readmit_wait_s"]
+                wait.append(now - meta["t_preempt"])
+                meta["t_preempt"] = None
+                if len(wait) > self._occupancy_cap:
+                    del wait[:self._occupancy_cap // 2]
+
+    def _preempt_one(self, above_priority: int, now: float) -> bool:
+        """Preempt ONE in-flight slot whose priority is strictly below
+        ``above_priority``: drop-and-recompute — free its private pages,
+        release its prefix mapping, and re-enqueue the request at the front
+        of its priority class (its original submit seq preserves aging).
+        Greedy decoding is deterministic and the scene prefix stays (or is
+        re-prefilled) in the cache, so the re-admitted request's token
+        stream is identical to the uncontended one.  Victims: the
+        lowest-priority slot, ties broken by least decode progress (least
+        recompute lost).  Only slots that own their prefix mapping
+        (decode/prompt phases) are eligible — a chunked streamer's pages
+        are what its waiters wait on, and "wait"/"prefill" slots have not
+        acquired the prefix the release path would unmap."""
+        victims = [(s.request.priority, len(s.tokens or ()), i)
+                   for i, s in enumerate(self._slots)
+                   if s.active and s.phase in ("decode", "prompt")
+                   and s.request.priority < above_priority]
+        if not victims:
+            return False
+        victims.sort()
+        i = victims[0][2]
+        req = self._slots[i].request
+        t_admit = self._slots[i].t_admit
+        ol = self.stats["overload"]
+        ol["preemptions"] += 1
+        meta = self._submit_meta.get(req.request_id)
+        if meta is None:
+            # admitted through the legacy path (admit_many callers can mix
+            # with submit traffic); synthesise meta so aging still works
+            meta = {"t_submit": t_admit, "seq": self._submit_seq,
+                    "deferred": False, "preempts": 0, "t_preempt": None}
+            self._submit_meta[req.request_id] = meta
+            self._submit_seq += 1
+        meta["preempts"] += 1
+        meta["t_preempt"] = now
+        self._release_slot(i)
+        dropped = self._admq.push(QueueEntry(
+            request=req, seq=meta["seq"], t_submit=meta["t_submit"],
+            preempts=meta["preempts"]))
+        if dropped is not None:
+            # queue full of work at least this valuable: the victim (or the
+            # displaced entry) is the least valuable in the system — drop it
+            self._reject(dropped, REASON_QUEUE_FULL)
+        return True
 
     def step(self) -> List[Tuple[Request, np.ndarray]]:
         """Advance every active slot; return finished requests.
@@ -1277,7 +1569,11 @@ class EngineCore:
         (or speculative) all-decode step otherwise, so steady-state decode
         pays nothing for the chunked machinery.  Finished slots free
         immediately — callers refill them from their pending queue before
-        the next ``step`` (continuous batching)."""
+        the next ``step`` (continuous batching).  Overload-controlled
+        engines additionally pump their own admission queue first, so
+        slots freed by the previous step refill before advancing."""
+        if self._admq is not None:
+            self._pump_queue()
         if self.cfg.prefill_chunk and any(
                 s.active and s.phase != "decode" for s in self._slots):
             return self._step_chunked()
@@ -1357,6 +1653,16 @@ class EngineCore:
                 decode_rows.append(i)
             elif slot.phase == "prompt":
                 prompt_rows.append(i)
+        # SLO-aware budget split: decode rows always come first (every
+        # admitted answer keeps advancing — the fairness invariant), but
+        # WITHIN the prompt and chunk classes the budget is granted by
+        # priority, so at saturation an urgent request's TTFT-critical
+        # tokens (its prompt suffix, its scene's region chunks) are never
+        # queued behind bulk work.  Ties keep slot/FIFO order, so engines
+        # whose traffic is all one priority schedule byte-identically to
+        # the pre-overload scheduler.
+        prompt_rows.sort(
+            key=lambda i: (-self._slots[i].request.priority, i))
         j = 0
         decode_flat = {}
         for i in decode_rows:
@@ -1377,7 +1683,7 @@ class EngineCore:
             scheduled_prompt.append(i)
             j += 1
         streams = sorted(self._streaming.items(),
-                         key=lambda kv: kv[1]["order"])
+                         key=lambda kv: (-kv[1]["priority"], kv[1]["order"]))
         stream_sched = []                          # (scene, tokens granted)
         for s_, st in streams:
             c = min(C, n_regions - st["progress"], tb - j)
@@ -1640,6 +1946,39 @@ class EngineCore:
             sched["scheduled_tokens"] / (fused * sched["budget"])
             if fused and sched["budget"] else 0.0)
         out["prefill_by_kind"] = dict(self.stats["prefill_by_kind"])
+        if self._admq is not None:
+            ol = self.stats["overload"]
+            # per-priority TTFT measured from SUBMIT time (queue wait is
+            # charged): the graceful-degradation claim is exactly that the
+            # urgent class's tail holds while bulk's degrades
+            by_prio: Dict[int, List[float]] = {}
+            for e in self.stats["request_log"]:
+                if e.get("t_first") is None:
+                    continue
+                t0 = e.get("t_submit", e["t_admit"])
+                by_prio.setdefault(e.get("priority", 0), []).append(
+                    e["t_first"] - t0)
+            ttft = {
+                p: {"n": len(v),
+                    "p50_ms": float(np.percentile(v, 50)) * 1e3,
+                    "p99_ms": float(np.percentile(v, 99)) * 1e3}
+                for p, v in sorted(by_prio.items())}
+            wait = ol["readmit_wait_s"]
+            out["overload"] = {
+                "queue_depth": len(self._admq),
+                "queue_peak": self._admq.depth_peak,
+                "submitted": ol["submitted"],
+                "admissions_deferred": ol["admissions_deferred"],
+                "preemptions": ol["preemptions"],
+                "rejections": dict(ol["rejections"]),
+                "rejected_total": sum(ol["rejections"].values()),
+                "readmit_wait_ms": {
+                    "n": len(wait),
+                    "mean": float(np.mean(wait)) * 1e3 if wait else 0.0,
+                    "p50": (float(np.percentile(wait, 50)) * 1e3
+                            if wait else 0.0)},
+                "ttft_by_priority": ttft,
+            }
         # compile-guard verdict: jit compilations observed after warmup()
         # armed the guard (0 at healthy steady state; see repro.analysis)
         out["steady_recompiles"] = self._compile_guard.steady_recompiles
@@ -1659,7 +1998,9 @@ class EngineCore:
 
     def generate_spec(self, task: str, images: jax.Array,
                       prompts: jax.Array, answer_vocab: int,
-                      draft_tokens=None) -> Tuple[jax.Array, jax.Array]:
+                      draft_tokens=None, priority: int = 0,
+                      deadline_s: Optional[float] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
         """Batch-of-one greedy answer through the SPECULATIVE slot path —
         the GS-side entry the executor uses for offloaded requests, so the
         satellite's piggybacked answer tokens can seed the verify chunks
@@ -1677,7 +2018,8 @@ class EngineCore:
                 "step)")
         req = Request(task=task, image=np.asarray(images)[0],
                       prompt=int(np.asarray(prompts)[0]),
-                      draft_tokens=draft_tokens)
+                      draft_tokens=draft_tokens, priority=priority,
+                      deadline_s=deadline_s)
         req._wants_probs = True
         self.admit_many([req])
         while True:

@@ -147,7 +147,9 @@ class CascadeExecutor:
     def run_serve(self, policy: CascadePolicy, task: str, images, prompts,
                   answer_vocab: int, allow_offload: bool = True,
                   scene: Optional[Any] = None,
-                  prompt_id: Optional[int] = None) -> ExecutionResult:
+                  prompt_id: Optional[int] = None,
+                  priority: int = 0,
+                  deadline_s: Optional[float] = None) -> ExecutionResult:
         """Batch-of-one execution with real early exits (the server's mode).
 
         Decisions take effect: onboard decoding aborts at the exit stage and
@@ -159,7 +161,15 @@ class CascadeExecutor:
         ``serving.request.scene_key``) lets queries fanning out over one
         captured scene reuse the satellite encode V(x)/E(T) through the
         shared core's scene-keyed memo instead of re-encoding per request —
-        the encode is deterministic, so decisions are unchanged."""
+        the encode is deterministic, so decisions are unchanged.
+
+        ``priority`` / ``deadline_s`` (``Request.priority`` /
+        ``Request.deadline_s``) ride the whole offload path: they are
+        stamped onto the downlink payload's metadata (the GS side reads
+        them off the wire) and forwarded into the GS engine's request, so
+        an overload-controlled ground core can preempt bulk work for an
+        urgent offload.  Purely advisory metadata — decisions and token
+        streams are unchanged by them."""
         assert images.shape[0] == 1, "serve mode is per-request"
         l_ans = self.ac.answer_len(task)
         plan = policy.stage_plan(task, l_ans)
@@ -219,6 +229,7 @@ class CascadeExecutor:
         fallback_full = False
         if offload:
             gs_view = policy.gs_view(self.pipeline, task, images, rf, tf)
+            self.pipeline.attach_urgency(gs_view, priority, deadline_s)
             if self.gs_core.cfg.spec_gamma:
                 # speculative GS inference: the satellite's partial answer
                 # (decoded before the offload verdict) rides the downlink as
@@ -226,7 +237,8 @@ class CascadeExecutor:
                 drafts = self.pipeline.attach_draft(gs_view, sat_tokens)
                 gs_toks, gs_probs = self.gs_core.generate_spec(
                     task, gs_view.images, prompts, answer_vocab,
-                    draft_tokens=drafts)
+                    draft_tokens=drafts, priority=priority,
+                    deadline_s=deadline_s)
             else:
                 gs_toks, gs_probs = self.gs_core.generate(
                     task, gs_view.images, prompts, answer_vocab)

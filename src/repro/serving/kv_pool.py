@@ -167,6 +167,24 @@ class PrefixCache:
         self.pool.free(e.pages)
 
     # ------------------------------------------------------------------
+    def evictable_pages(self, protect: Optional[Iterable[Any]] = None
+                        ) -> int:
+        """Pages that ``evict_for`` COULD free right now: the shared pages
+        of zero-user entries outside ``protect``.  A pure probe — admission
+        control uses ``pool.free_pages + evictable_pages()`` as the page
+        headroom a request's worst-case demand is checked against, without
+        actually evicting anything for a request that may not be admitted."""
+        protected = frozenset(protect or ())
+        return sum(len(e.pages) for s, e in self._entries.items()
+                   if e.users == 0 and s not in protected)
+
+    def evictable_entries(self, protect: Optional[Iterable[Any]] = None
+                          ) -> int:
+        """Entry slots ``evict_for`` could free (same probe, capacity axis)."""
+        protected = frozenset(protect or ())
+        return sum(1 for s, e in self._entries.items()
+                   if e.users == 0 and s not in protected)
+
     def evict_for(self, need_pages: int, need_entries: int = 1,
                   protect: Optional[Iterable[Any]] = None) -> None:
         """Evict zero-user entries (LRU first) until the pool has

@@ -106,6 +106,23 @@ class OffloadPipeline:
         view.meta["draft_bytes"] = int(toks.size * 4)
         return toks
 
+    # -- urgency metadata ---------------------------------------------------
+    def attach_urgency(self, view: GSView, priority: int = 0,
+                       deadline_s: Optional[float] = None) -> GSView:
+        """Stamp the request's scheduling urgency onto the downlink payload.
+
+        The ground station sees only what rides the link: for it to honour
+        the satellite's priority classes (an overload-controlled GS engine
+        preempting bulk work for a disaster-monitoring offload), the
+        priority and remaining deadline must be metadata of the payload
+        itself, exactly like the piggybacked drafts.  A couple of ints next
+        to MBs of pixels — recorded here for accounting honesty, read back
+        by whoever builds the GS-side ``Request``."""
+        view.meta["priority"] = int(priority)
+        if deadline_s is not None:
+            view.meta["deadline_s"] = float(deadline_s)
+        return view
+
     # -- transmission -------------------------------------------------------
     def payload_bytes(self, task: str, bytes_frac) -> np.ndarray:
         """Modelled raw-image downlink bytes scaled by achieved compression."""

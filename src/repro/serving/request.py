@@ -17,6 +17,15 @@ _ids = itertools.count()
 #: the Eq. 2/Eq. 3 pipeline and answered by the GS model W^g.
 TIERS = ("satellite", "ground")
 
+#: Priority classes (higher = more urgent).  Plain ints so producers can
+#: insert intermediate levels; these names are the conventional three the
+#: overload bench and the cascade server use.  ``PRIORITY_URGENT`` is the
+#: disaster-monitoring / near-real-time class the paper's deployment story
+#: needs to keep responsive under saturation.
+PRIORITY_BULK = 0
+PRIORITY_NORMAL = 1
+PRIORITY_URGENT = 2
+
 
 @dataclasses.dataclass
 class Request:
@@ -37,6 +46,16 @@ class Request:
     #: answer positions; purely advisory: wrong drafts cost accept rate,
     #: never correctness (the verifier commits only its own greedy tokens).
     draft_tokens: Optional[np.ndarray] = None
+    #: Scheduling priority (higher = more urgent; see ``PRIORITY_*``).  Only
+    #: read by overload-controlled engines: plain ``admit_many`` traffic is
+    #: FIFO regardless, so the default changes nothing for existing callers.
+    priority: int = PRIORITY_BULK
+    #: Optional staleness bound in seconds from submission: an overload
+    #: queue drops the request (outcome ``"rejected"``, reason
+    #: ``"expired"``) instead of admitting it once the answer could no
+    #: longer arrive in time.  ``None`` → never expires while queued.
+    #: Already-admitted requests always run to completion.
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         # Drafts are admission metadata read token-by-token on the host.

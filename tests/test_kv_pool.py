@@ -137,6 +137,97 @@ def test_pool_state_machine_hypothesis():
     run()
 
 
+def test_overload_state_machine_hypothesis():
+    """Randomised admit/preempt/re-admit/reject/finish interleavings over
+    the pool + prefix cache, following the overload layer's
+    check-then-commit discipline (ISSUE 7): an admission runs only when the
+    pure headroom probe (``free + evictable_pages(protect)``) says it fits,
+    a rejection touches nothing, and preemption is drop-and-recompute
+    (private pages freed, prefix released, scene parked for re-admission).
+    After every action: pages_in_use == private + shared, per-scene users
+    match the model, shared pages hold 1 + users references, and the trash
+    page is never allocated."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    PRIV, SHARED, SLOTS, CAP = 2, 3, 3, 3
+
+    @hyp.given(st.lists(st.tuples(
+        st.sampled_from(["admit", "preempt", "readmit", "finish"]),
+        st.integers(0, 11)), max_size=80))
+    @hyp.settings(deadline=None, max_examples=60)
+    def run(ops):
+        pool = KVPagePool(n_pages=17, page_size=4)
+        cache = PrefixCache(pool, capacity=CAP)
+        active = []                             # (scene, private_pages)
+        parked = []                             # queued / preempted scenes
+
+        def fits(scene):
+            if len(active) >= SLOTS:
+                return False
+            protect = {s for s, _ in active} | {scene}
+            new = 0 if scene in cache else 1
+            need = PRIV + new * SHARED
+            if pool.free_pages + cache.evictable_pages(protect) < need:
+                return False
+            resident = len(cache) - cache.evictable_entries(protect)
+            return resident + new <= cache.capacity
+
+        def admit(scene):
+            """Commit phase: by construction of ``fits`` this cannot raise
+            (the admission-atomicity contract at the allocator layer)."""
+            if not fits(scene):
+                return False
+            protect = {s for s, _ in active} | {scene}
+            new = 0 if scene in cache else 1
+            cache.evict_for(PRIV + new * SHARED, need_entries=new,
+                            protect=protect)
+            if scene not in cache:
+                cache.put(scene, pool.alloc(SHARED), None)
+            cache.acquire(scene)
+            active.append((scene, pool.alloc(PRIV)))
+            return True
+
+        for op, arg in ops:
+            if op == "admit":
+                scene = f"s{arg % 5}"
+                if not admit(scene):            # reject path: pure no-op
+                    parked.append(scene)
+            elif op == "preempt" and active:
+                s_, pages = active.pop(arg % len(active))
+                pool.free(pages)
+                cache.release(s_)
+                parked.append(s_)
+            elif op == "readmit" and parked:
+                s_ = parked.pop(arg % len(parked))
+                if not admit(s_):
+                    parked.append(s_)
+            elif op == "finish" and active:
+                s_, pages = active.pop(arg % len(active))
+                pool.free(pages)
+                cache.release(s_)
+            # conservation after every action
+            priv = sum(len(p) for _, p in active)
+            shared = cache.stats()["shared_pages"]
+            assert pool.pages_in_use == priv + shared
+            users = {}
+            for s_, _ in active:
+                users[s_] = users.get(s_, 0) + 1
+            assert {s_: e.users for s_, e in cache._entries.items()
+                    if e.users} == users
+            for s_, e in cache._entries.items():
+                for p in e.pages:
+                    assert p != TRASH_PAGE
+                    assert pool.refcount(p) == 1 + e.users
+        # drain: finish everything, pool returns to the cache-only state
+        for s_, pages in active:
+            pool.free(pages)
+            cache.release(s_)
+        assert pool.pages_in_use == cache.stats()["shared_pages"]
+        assert cache.stats()["entries_in_use"] == 0
+
+    run()
+
+
 # ---------------------------------------------------------------------------
 # engine level: paged vs dense equivalence + prefix sharing
 # ---------------------------------------------------------------------------

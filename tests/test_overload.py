@@ -1,0 +1,382 @@
+"""Overload control: page-pool-aware admission, priority preemption and
+graceful degradation (ISSUE 7).
+
+Four layers of guarantees:
+
+- admission: ``submit_many`` returns explicit per-request outcomes
+  (admitted / queued / rejected), the queue is bounded with priority
+  displacement, page-pool pressure defers admission instead of raising
+  ``MemoryError`` mid-batch, and deadlines expire at pump time;
+- preemption: an urgent arrival that cannot fit preempts the
+  lowest-priority in-flight slot (drop-and-recompute), and every admitted
+  request — the preempted-then-resumed one included — stays token-for-token
+  equal to the uncontended dense oracle;
+- atomicity: a failed admission (``MemoryError`` from the legacy
+  unconditional path) leaks no pool pages, no prefix users and no slots —
+  the check-then-commit regression of the single up-front ``evict_for``;
+- accounting: ``scheduler_stats()["overload"]`` reports queue depth/peak,
+  deferrals, preemptions, rejections by reason, re-admission latency and
+  per-priority TTFT, and the pool drains to the cache-only state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.spaceverse_pair import proxy_pair
+from repro.core import eo_adapter as EO
+from repro.core.cascade import TierModel
+from repro.data import synthetic
+from repro.serving import (ADMITTED, QUEUED, REJECTED, EngineConfig,
+                           EngineCore, EngineCoreConfig, InferenceEngine,
+                           OverloadConfig, PRIORITY_BULK, PRIORITY_URGENT,
+                           Request)
+from repro.serving.admission import (AdmissionQueue, QueueEntry,
+                                     REASON_EXPIRED, REASON_QUEUE_FULL)
+from repro.serving.kv_pool import TRASH_PAGE
+
+
+@pytest.fixture(scope="module")
+def sat_system():
+    sat_cfg, _ = proxy_pair("small")
+    ac = EO.EOAdapterConfig()
+    params = EO.init_adapter(jax.random.PRNGKey(0), sat_cfg, ac)
+    eo_cfg = synthetic.EOTaskConfig(image_size=ac.image_size, grid=ac.grid,
+                                    num_classes=ac.num_classes)
+    data = synthetic.make_dataset("cls", 16, seed=0, cfg=eo_cfg)
+    return params, sat_cfg, ac, data
+
+
+def _core(params, cfg, ac, *, slots=2, queue_cap=8, **kw):
+    return EngineCore(TierModel(params, cfg), ac,
+                      EngineCoreConfig(slots=slots, answer_vocab=9,
+                                       overload=OverloadConfig(
+                                           queue_cap=queue_cap), **kw))
+
+
+def _drain(core, max_steps=400):
+    """Step until idle; return {request_id: tokens} and rejections."""
+    done, rejected = {}, list(core.take_rejected())
+    for _ in range(max_steps):
+        for r, t in core.step():
+            done[r.request_id] = np.asarray(t).tolist()
+        rejected += core.take_rejected()
+        if core.active_count() == 0 and core.queue_depth() == 0:
+            return done, rejected
+    raise AssertionError("engine did not drain")
+
+
+def _oracle(params, cfg, ac, req):
+    core = EngineCore(TierModel(params, cfg), ac,
+                      EngineCoreConfig(slots=1, answer_vocab=9,
+                                       cache_impl="dense"))
+    toks, _ = core.generate(req.task,
+                            jnp.asarray(np.asarray(req.image)[None]),
+                            jnp.asarray(np.array([req.prompt], np.int32)), 9)
+    return np.asarray(toks)[0].tolist()
+
+
+def _assert_drained_pool(core):
+    st = core._prefix.stats()
+    assert st["entries_in_use"] == 0
+    assert core._pool.pages_in_use == st["shared_pages"]
+    for e in core._prefix._entries.values():
+        assert all(core._pool.refcount(p) == 1 for p in e.pages)
+    assert (core._bt_np == TRASH_PAGE).all()
+
+
+# ---------------------------------------------------------------------------
+# admission queue unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_admission_queue_priority_order_and_displacement():
+    q = AdmissionQueue(3)
+    mk = lambda rid, prio, seq: QueueEntry(
+        request=Request(task="cls", image=np.zeros((8, 8, 3)), prompt=0,
+                        request_id=rid, priority=prio),
+        seq=seq, t_submit=0.0)
+    assert q.push(mk(0, PRIORITY_BULK, 0)) is None
+    assert q.push(mk(1, PRIORITY_BULK, 1)) is None
+    assert q.push(mk(2, PRIORITY_URGENT, 2)) is None
+    # urgent jumps the bulk entries but FIFO holds within a class
+    assert [e.request.request_id for e in q] == [2, 0, 1]
+    # full queue: an outranking push displaces the back entry...
+    dropped = q.push(mk(3, PRIORITY_URGENT, 3))
+    assert dropped is not None and dropped.request.request_id == 1
+    # ...and a non-outranking push bounces straight back
+    late = mk(4, PRIORITY_BULK, 4)
+    assert q.push(late) is late
+    assert q.depth_peak == 3 and len(q) == 3
+
+
+def test_admission_queue_expiry():
+    q = AdmissionQueue(4)
+    e = QueueEntry(request=Request(task="cls", image=np.zeros((8, 8, 3)),
+                                   prompt=0, deadline_s=1.0),
+                   seq=0, t_submit=10.0)
+    q.push(e)
+    assert q.expire(10.5) == [] and len(q) == 1
+    assert q.expire(11.5) == [e] and len(q) == 0
+
+
+def test_overload_config_validates():
+    with pytest.raises(ValueError):
+        OverloadConfig(queue_cap=0)
+
+
+# ---------------------------------------------------------------------------
+# engine-level admission outcomes
+# ---------------------------------------------------------------------------
+
+def test_submit_many_requires_overload_config(sat_system):
+    params, cfg, ac, data = sat_system
+    core = EngineCore(TierModel(params, cfg), ac,
+                      EngineCoreConfig(slots=2, answer_vocab=9))
+    with pytest.raises(ValueError):
+        core.submit_many([Request(task="cls", image=data["images"][0],
+                                  prompt=0)])
+
+
+def test_bounded_queue_rejects_overflow_with_reason(sat_system):
+    """Sustained over-capacity submission: slots fill, the queue fills, and
+    the overflow gets an explicit ``rejected`` outcome — never unbounded
+    queueing, never an admission-time ``MemoryError``."""
+    params, cfg, ac, data = sat_system
+    core = _core(params, cfg, ac, slots=2, queue_cap=2)
+    reqs = [Request(task="det", image=data["images"][i], prompt=0,
+                    scene_id=i) for i in range(6)]
+    out = core.submit_many(reqs)
+    outcomes = [out[r.request_id] for r in reqs]
+    assert outcomes == [ADMITTED, ADMITTED, QUEUED, QUEUED,
+                        REJECTED, REJECTED]
+    assert core.queue_depth() == 2
+    rejected = core.take_rejected()
+    assert sorted(r.request_id for r, _ in rejected) == \
+        sorted(r.request_id for r in reqs[4:])
+    assert all(reason == REASON_QUEUE_FULL for _, reason in rejected)
+    done, rej_late = _drain(core)
+    assert sorted(done) == sorted(r.request_id for r in reqs[:4])
+    assert rej_late == []
+    ol = core.scheduler_stats()["overload"]
+    assert ol["rejections"][REASON_QUEUE_FULL] == 2
+    assert ol["admissions_deferred"] == 2
+    _assert_drained_pool(core)
+
+
+def test_urgent_displaces_queued_bulk_when_full(sat_system):
+    params, cfg, ac, data = sat_system
+    core = _core(params, cfg, ac, slots=1, queue_cap=1)
+    bulk = [Request(task="det", image=data["images"][i], prompt=0, scene_id=i)
+            for i in range(2)]
+    urgent = Request(task="vqa", image=data["images"][2], prompt=0,
+                     scene_id=2, priority=PRIORITY_URGENT)
+    out = core.submit_many(bulk)
+    assert [out[r.request_id] for r in bulk] == [ADMITTED, QUEUED]
+    out2 = core.submit_many([urgent])
+    # the queued bulk entry is the least valuable work in the system; the
+    # urgent request takes its place (here: straight into the slot, because
+    # the pump preempts the running bulk request for it)
+    dropped = {r.request_id for r, _ in core.take_rejected()}
+    assert bulk[1].request_id in dropped
+    assert out2[urgent.request_id] in (ADMITTED, QUEUED)
+    done, _ = _drain(core)
+    assert urgent.request_id in done
+
+
+# ---------------------------------------------------------------------------
+# page-pool-aware admission (the tentpole's admission half)
+# ---------------------------------------------------------------------------
+
+def test_page_pressure_defers_instead_of_memoryerror(sat_system):
+    """A pool sized for one slot's worst case: the second distinct-scene
+    request must park (slot free, pages not) and complete after the first
+    drains — the un-controlled engine raises ``MemoryError`` here."""
+    params, cfg, ac, data = sat_system
+    floor = None
+    with pytest.raises(ValueError):
+        EngineCore(TierModel(params, cfg), ac,
+                   EngineCoreConfig(slots=2, answer_vocab=9, pool_pages=1))
+    probe = _core(params, cfg, ac, slots=2)
+    floor = 1 + probe._pages_per_slot
+    core = _core(params, cfg, ac, slots=2, queue_cap=4, pool_pages=floor)
+    reqs = [Request(task="cls", image=data["images"][i], prompt=0,
+                    scene_id=i) for i in range(2)]
+    out = core.submit_many(reqs)
+    assert out[reqs[0].request_id] == ADMITTED
+    assert out[reqs[1].request_id] == QUEUED          # free slot, no pages
+    assert core.active_count() == 1
+    done, rejected = _drain(core)
+    assert sorted(done) == sorted(r.request_id for r in reqs)
+    assert rejected == []
+    ol = core.scheduler_stats()["overload"]
+    assert ol["admissions_deferred"] >= 1
+    _assert_drained_pool(core)
+    # the legacy unconditional path on the same sizing blows up instead
+    legacy = EngineCore(TierModel(params, cfg), ac,
+                        EngineCoreConfig(slots=2, answer_vocab=9,
+                                         pool_pages=floor))
+    with pytest.raises(MemoryError):
+        legacy.admit_many([Request(task="cls", image=data["images"][i],
+                                   prompt=0, scene_id=10 + i)
+                           for i in range(2)])
+
+
+def test_pool_pages_requires_paged_cache(sat_system):
+    params, cfg, ac, _ = sat_system
+    with pytest.raises(ValueError):
+        EngineCore(TierModel(params, cfg), ac,
+                   EngineCoreConfig(slots=2, answer_vocab=9,
+                                    cache_impl="dense", pool_pages=64))
+
+
+def test_admission_atomicity_on_memoryerror(sat_system):
+    """Regression for the check-then-commit refactor: when the single
+    up-front ``evict_for`` of ``admit_many`` raises, NO slot was taken, NO
+    prefix user was acquired and NO private page was allocated — the batch
+    can be retried (or parked) without unwinding anything."""
+    params, cfg, ac, data = sat_system
+    probe = _core(params, cfg, ac, slots=2)
+    floor = 1 + probe._pages_per_slot
+    core = EngineCore(TierModel(params, cfg), ac,
+                      EngineCoreConfig(slots=2, answer_vocab=9,
+                                       pool_pages=floor))
+    # scene 0 resident + running: its pages are protected
+    core.admit_many([Request(task="det", image=data["images"][0], prompt=0,
+                             scene_id=0)])
+    in_use0 = core._pool.pages_in_use
+    free0 = core._pool.free_pages
+    users0 = {s: e.users for s, e in core._prefix._entries.items()}
+    bt0 = core._bt_np.copy()
+    with pytest.raises(MemoryError):
+        core.admit_many([Request(task="cls", image=data["images"][1],
+                                 prompt=0, scene_id=1)])
+    assert core._pool.pages_in_use == in_use0
+    assert core._pool.free_pages == free0
+    assert {s: e.users for s, e in core._prefix._entries.items()} == users0
+    assert core.active_count() == 1
+    np.testing.assert_array_equal(core._bt_np, bt0)
+    # the engine is still healthy: drain, then the same request admits fine
+    while core.active_count():
+        core.step()
+    core.admit_many([Request(task="cls", image=data["images"][1], prompt=0,
+                             scene_id=1)])
+    while core.active_count():
+        core.step()
+    _assert_drained_pool(core)
+
+
+# ---------------------------------------------------------------------------
+# preemption + oracle equality (the tentpole's preemption half)
+# ---------------------------------------------------------------------------
+
+def test_urgent_preempts_bulk_and_all_tokens_match_oracle(sat_system):
+    """The headline guarantee: a saturated engine preempts bulk work for an
+    urgent arrival, the victim re-admits later, and EVERY completed
+    request — preempted-then-resumed included — is token-for-token equal
+    to the uncontended dense oracle (drop-and-recompute is lossless under
+    greedy decoding)."""
+    params, cfg, ac, data = sat_system
+    core = _core(params, cfg, ac, slots=2, queue_cap=8)
+    bulk = [Request(task="det", image=data["images"][i], prompt=0,
+                    scene_id=i, priority=PRIORITY_BULK) for i in range(3)]
+    out = core.submit_many(bulk)
+    assert [out[r.request_id] for r in bulk] == [ADMITTED, ADMITTED, QUEUED]
+    for _ in range(2):                       # let the slots make progress
+        core.step()
+    urgent = Request(task="vqa", image=data["images"][5], prompt=0,
+                     scene_id=5, priority=PRIORITY_URGENT)
+    out2 = core.submit_many([urgent])
+    assert out2[urgent.request_id] == ADMITTED       # preempted its way in
+    ol = core.scheduler_stats()["overload"]
+    assert ol["preemptions"] >= 1
+    done, rejected = _drain(core)
+    assert rejected == []
+    assert sorted(done) == sorted([r.request_id for r in bulk]
+                                  + [urgent.request_id])
+    for r in bulk + [urgent]:
+        assert done[r.request_id] == _oracle(params, cfg, ac, r), \
+            f"request {r.request_id} diverged after preemption"
+    stats = core.scheduler_stats()["overload"]
+    assert stats["readmit_wait_ms"]["n"] >= 1
+    assert set(stats["ttft_by_priority"]) == {PRIORITY_BULK, PRIORITY_URGENT}
+    _assert_drained_pool(core)
+
+
+def test_no_preemption_when_disabled(sat_system):
+    params, cfg, ac, data = sat_system
+    core = EngineCore(TierModel(params, cfg), ac,
+                      EngineCoreConfig(slots=1, answer_vocab=9,
+                                       overload=OverloadConfig(
+                                           queue_cap=4, preempt=False)))
+    bulk = Request(task="det", image=data["images"][0], prompt=0, scene_id=0)
+    urgent = Request(task="vqa", image=data["images"][1], prompt=0,
+                     scene_id=1, priority=PRIORITY_URGENT)
+    assert core.submit_many([bulk])[bulk.request_id] == ADMITTED
+    assert core.submit_many([urgent])[urgent.request_id] == QUEUED
+    assert core.scheduler_stats()["overload"]["preemptions"] == 0
+    done, _ = _drain(core)
+    assert sorted(done) == sorted([bulk.request_id, urgent.request_id])
+
+
+def test_deadline_expires_queued_request_only(sat_system):
+    """A stale queued request expires at pump time with an explicit
+    rejection; admitted requests always run to completion (the deadline is
+    a staleness bound on *starting*, not an execution budget)."""
+    params, cfg, ac, data = sat_system
+    core = _core(params, cfg, ac, slots=1, queue_cap=4)
+    running = Request(task="det", image=data["images"][0], prompt=0,
+                      scene_id=0, deadline_s=0.001)
+    stale = Request(task="cls", image=data["images"][1], prompt=0,
+                    scene_id=1, deadline_s=0.5)
+    fresh = Request(task="cls", image=data["images"][2], prompt=0,
+                    scene_id=2)
+    out = core.submit_many([running, stale], now=0.0)
+    assert out[running.request_id] == ADMITTED       # deadline met: starts
+    assert out[stale.request_id] == QUEUED
+    # time passes beyond stale's deadline; the next pump expires it
+    out2 = core.submit_many([fresh], now=10.0)
+    assert out2[fresh.request_id] == QUEUED
+    rejected = core.take_rejected()
+    assert [(r.request_id, why) for r, why in rejected] == \
+        [(stale.request_id, REASON_EXPIRED)]
+    done, _ = _drain(core)
+    assert sorted(done) == sorted([running.request_id, fresh.request_id])
+    ol = core.scheduler_stats()["overload"]
+    assert ol["rejections"][REASON_EXPIRED] == 1
+
+
+# ---------------------------------------------------------------------------
+# full-stack: InferenceEngine serve() under overload == dense oracle
+# ---------------------------------------------------------------------------
+
+def test_engine_serve_overload_matches_dense_oracle(sat_system):
+    """The served queue under overload control (priorities mixed, queue
+    deep enough that nothing rejects) completes every request with exactly
+    the dense engine's tokens — admission order may differ, outputs don't."""
+    params, cfg, ac, data = sat_system
+    reqs = []
+    for s in range(3):
+        img = data["images"][s]
+        prio = PRIORITY_URGENT if s == 1 else PRIORITY_BULK
+        reqs.append(Request(task="det", image=img, prompt=0, scene_id=s,
+                            priority=prio))
+        reqs.append(Request(task="vqa", image=img, prompt=s % 2, scene_id=s,
+                            priority=prio))
+    ov = InferenceEngine(params, cfg, ac,
+                         EngineConfig(slots=2, answer_vocab=9,
+                                      overload=OverloadConfig(queue_cap=16)))
+    resp_ov = ov.serve(list(reqs))
+    assert ov.last_rejected == []
+    dense = InferenceEngine(params, cfg, ac,
+                            EngineConfig(slots=2, answer_vocab=9,
+                                         cache_impl="dense"))
+    resp_d = dense.serve([Request(task=r.task, image=r.image, prompt=r.prompt,
+                                  scene_id=r.scene_id,
+                                  request_id=r.request_id) for r in reqs])
+    by_id = lambda rs: {r.request_id: np.asarray(r.tokens).tolist()
+                        for r in rs}
+    assert by_id(resp_ov) == by_id(resp_d)
+    _assert_drained_pool(ov.core)
+    ol = ov.core.scheduler_stats()["overload"]
+    assert ol["submitted"] == len(reqs)
+    assert ol["rejected_total"] == 0
