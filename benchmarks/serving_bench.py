@@ -190,13 +190,16 @@ def _legacy_admit(core: EngineCore, request: Request) -> int:
 
 
 def bench_impl(impl: str, *, slots: int, steps: int, warmup: int,
-               det_frac: float, seed: int) -> Dict[str, float]:
+               det_frac: float, seed: int,
+               kv_dtype: str = None) -> Dict[str, float]:
     sat_cfg, _ = proxy_pair("small")
     ac = EO.EOAdapterConfig()
     params = EO.init_adapter(jax.random.PRNGKey(seed), sat_cfg, ac)
     core = EngineCore(TierModel(params, sat_cfg), ac,
                       EngineCoreConfig(slots=slots, answer_vocab=9,
-                                       step_impl=impl))
+                                       step_impl=impl,
+                                       kv_dtype=(kv_dtype if impl != "vmap"
+                                                 else None)))
     # enough pending work that the table never starves (det pins slots for
     # N_r steps; 1-token requests churn through the rest)
     stream = _request_stream(ac, n=slots * (steps + warmup + 4) + 8,
@@ -279,13 +282,19 @@ def _fanout_stream(ac: EO.EOAdapterConfig, scenes: int, fanout: int,
 
 
 def bench_fanout(cache_impl: str, *, slots: int, scenes: int, fanout: int,
-                 seed: int) -> Dict[str, object]:
-    sat_cfg, _ = proxy_pair("small")
+                 seed: int, kv_dtype: str = None,
+                 tier: TierModel = None) -> Dict[str, object]:
     ac = EO.EOAdapterConfig()
-    params = EO.init_adapter(jax.random.PRNGKey(seed), sat_cfg, ac)
-    core = EngineCore(TierModel(params, sat_cfg), ac,
+    if tier is None:
+        sat_cfg, _ = proxy_pair("small")
+        params = EO.init_adapter(jax.random.PRNGKey(seed), sat_cfg, ac)
+        tier = TierModel(params, sat_cfg)
+    core = EngineCore(tier, ac,
                       EngineCoreConfig(slots=slots, answer_vocab=9,
-                                       cache_impl=cache_impl))
+                                       cache_impl=cache_impl,
+                                       kv_dtype=(kv_dtype
+                                                 if cache_impl == "paged"
+                                                 else None)))
     queue = list(reversed(_fanout_stream(ac, scenes, fanout, seed)))
     n_req = len(queue)
     core.warmup()
@@ -412,8 +421,8 @@ def _drive(core: EngineCore, reqs) -> Dict[str, object]:
 
 
 def bench_spec(*, slots: int, n_req: int, det_frac: float, gamma: int,
-               train_steps: int, seed: int, reps: int = 3
-               ) -> Dict[str, object]:
+               train_steps: int, seed: int, reps: int = 3,
+               kv_dtype: str = None) -> Dict[str, object]:
     """Speculative vs greedy ground-tier decode on one request stream.
 
     The stream mixes 1-token vqa answers with N_r-token det answers
@@ -435,11 +444,13 @@ def bench_spec(*, slots: int, n_req: int, det_frac: float, gamma: int,
             out.append(c)
         return out
 
-    base = EngineCore(gs, ac, EngineCoreConfig(slots=slots, answer_vocab=9))
+    base = EngineCore(gs, ac, EngineCoreConfig(slots=slots, answer_vocab=9,
+                                               kv_dtype=kv_dtype))
     base.warmup()
     spec = EngineCore(gs, ac,
                       EngineCoreConfig(slots=slots, answer_vocab=9,
-                                       spec_gamma=gamma), draft=sat)
+                                       spec_gamma=gamma, kv_dtype=kv_dtype),
+                      draft=sat)
     spec.warmup()
     runs_base, runs_spec = [], []
     for _ in range(max(reps, 1)):
@@ -670,8 +681,8 @@ def _steady_state_decode(stall: EngineCore, chunked: EngineCore, ac,
 
 
 def bench_chunked(*, slots: int, grid: int, bursts: int, new_scenes: int,
-                  fanout: int, chunk: int, seed: int, smoke: bool
-                  ) -> Dict[str, object]:
+                  fanout: int, chunk: int, seed: int, smoke: bool,
+                  kv_dtype: str = None) -> Dict[str, object]:
     """Chunked prefill vs the synchronous-admission stall engine on
     production-shaped monitoring traffic (grid² region tokens per scene).
 
@@ -691,7 +702,7 @@ def bench_chunked(*, slots: int, grid: int, bursts: int, new_scenes: int,
        admission freeze directly."""
     tier, ac = _monitor_tier(grid, seed)
     mk = lambda c: EngineCore(tier, ac, EngineCoreConfig(
-        slots=slots, answer_vocab=9, prefill_chunk=c))
+        slots=slots, answer_vocab=9, prefill_chunk=c, kv_dtype=kv_dtype))
     stall, chunked = mk(0), mk(chunk)
     stall.warmup()
     chunked.warmup()
@@ -885,8 +896,8 @@ def _drive_overload(core: EngineCore, stream: List[Request],
 
 
 def bench_overload(*, slots: int, n_req: int, urgent_frac: float,
-                   queue_cap: int, seed: int, smoke: bool
-                   ) -> Dict[str, object]:
+                   queue_cap: int, seed: int, smoke: bool,
+                   kv_dtype: str = None) -> Dict[str, object]:
     """Sustained over-capacity serving (offered load ≈ 2× measured service
     rate), overload control ON vs OFF.
 
@@ -904,35 +915,48 @@ def bench_overload(*, slots: int, n_req: int, urgent_frac: float,
     params = EO.init_adapter(jax.random.PRNGKey(seed), sat_cfg, ac)
     tier = TierModel(params, sat_cfg)
     base = EngineCore(tier, ac,
-                      EngineCoreConfig(slots=slots, answer_vocab=9))
+                      EngineCoreConfig(slots=slots, answer_vocab=9,
+                                       kv_dtype=kv_dtype))
     ctrl = EngineCore(tier, ac,
                       EngineCoreConfig(slots=slots, answer_vocab=9,
+                                       kv_dtype=kv_dtype,
                                        overload=OverloadConfig(
                                            queue_cap=queue_cap)))
     base.warmup()
     ctrl.warmup()
     stream = _overload_stream(ac, n_req, urgent_frac, seed)
 
-    # uncontended dense oracle per request (batched per task)
-    dense = EngineCore(tier, ac,
-                       EngineCoreConfig(slots=2, answer_vocab=9,
-                                        cache_impl="dense"))
+    # uncontended oracle per request.  Exact engines check against a dense
+    # engine (the strongest cross-impl oracle); under ``kv_dtype`` the
+    # oracle must share the engines' numerics — dense stays fp-exact by
+    # design — so the flat-out service-rate probe below doubles as the
+    # uncontended paged oracle.  Either way the invariant gated here is the
+    # same: contention, preemption and recompute never change a request's
+    # tokens.
     oracle: Dict[int, list] = {}
-    by_task: Dict[str, List[Request]] = {}
-    for r in stream:
-        by_task.setdefault(r.task, []).append(r)
-    for task, rs in by_task.items():
-        images = jnp.asarray(np.stack([np.asarray(r.image) for r in rs]))
-        prompts = jnp.asarray(np.array([r.prompt for r in rs], np.int32))
-        toks, _ = dense.generate(task, images, prompts, 9)
-        for r, t in zip(rs, np.asarray(toks)):
-            oracle[r.request_id] = t.tolist()
+    if kv_dtype is None:
+        dense = EngineCore(tier, ac,
+                           EngineCoreConfig(slots=2, answer_vocab=9,
+                                            cache_impl="dense"))
+        by_task: Dict[str, List[Request]] = {}
+        for r in stream:
+            by_task.setdefault(r.task, []).append(r)
+        for task, rs in by_task.items():
+            images = jnp.asarray(np.stack([np.asarray(r.image)
+                                           for r in rs]))
+            prompts = jnp.asarray(np.array([r.prompt for r in rs],
+                                           np.int32))
+            toks, _ = dense.generate(task, images, prompts, 9)
+            for r, t in zip(rs, np.asarray(toks)):
+                oracle[r.request_id] = t.tolist()
 
     # service-rate probe: the baseline serves the stream flat-out, which
     # calibrates the arrival interval to 2× the measured capacity
     probe = _drive_overload(base, _clone_overload(stream, "p"),
                             interval=0.0, controlled=False)
-    probe.pop("outputs")
+    probe_outputs = probe.pop("outputs")
+    if kv_dtype is not None:
+        oracle = probe_outputs
     interval = 0.5 * probe["wall_s"] / max(n_req, 1)
 
     r_base = _drive_overload(base, _clone_overload(stream, "b"),
@@ -986,6 +1010,118 @@ def bench_overload(*, slots: int, n_req: int, urgent_frac: float,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# quantized paged KV: int8 pools + in-kernel dequant vs the exact-fp engine
+# ---------------------------------------------------------------------------
+
+def bench_quantized(*, slots: int, scenes: int, fanout: int, seed: int,
+                    smoke: bool) -> Dict[str, object]:
+    """The int8-vs-fp record: same scene-fan-out stream served by the exact
+    paged engine and the ``kv_dtype="int8"`` engine, plus an admission-
+    capacity probe under ONE shared pool byte budget.
+
+    Three claims, measured:
+
+    1. **footprint** — ``kv_bytes_per_slot`` with scales included must be
+       ≤ 0.55× the fp engine's (the honest ratio: f32 scale buffers ride
+       the same pools they describe);
+    2. **agreement** — greedy outputs are compared token-by-token via
+       ``kv_quant.compare_outputs``; divergence (possible in principle —
+       int8 KV noise can flip a near-tie argmax) is reported per request
+       with first-divergence positions, never hidden;
+    3. **capacity** — two overload-controlled engines sized from the SAME
+       ``pool_bytes`` budget (picked so the fp engine is page-bound below
+       its slot count) serve a burst of distinct-scene requests; the int8
+       engine's cheaper pages must admit measurably more concurrent work.
+    """
+    from repro.core import pipeline as P
+    from repro.kernels import kv_quant
+
+    # Agreement is measured on a briefly proxy-trained tier: a random-init
+    # model's logits are near-uniform, so ANY perturbation — including the
+    # ~0.4% relative error of int8 KV — flips near-tie argmaxes; a trained
+    # model's greedy margins dominate the quantization noise the way a
+    # deployed checkpoint's do.  The comparison itself stays exact and
+    # per-token either way.
+    sat_cfg, _ = proxy_pair("small")
+    ac = EO.EOAdapterConfig()
+    eo_cfg = synthetic.EOTaskConfig(image_size=ac.image_size, grid=ac.grid,
+                                    num_classes=ac.num_classes)
+    train = {t: synthetic.make_dataset(t, 96, seed=seed, cfg=eo_cfg)
+             for t in ("vqa", "cls", "det")}
+    # training differentiates through attention — pin the ref impl for the
+    # duration (the serving kernels define no autodiff rules, so a process-
+    # wide "pallas_interpret" override would break value_and_grad)
+    from repro.kernels import ops
+    prev_impl = ops.set_default_impl("ref")
+    try:
+        params, _ = P.train_proxy(sat_cfg, ac, train,
+                                  steps=8 if smoke else 40, seed=seed)
+    finally:
+        ops.set_default_impl(prev_impl)
+    tier = TierModel(params, sat_cfg)
+
+    per = {}
+    for name, dt in (("fp", None), ("int8", "int8")):
+        per[name] = bench_fanout("paged", slots=slots, scenes=scenes,
+                                 fanout=fanout, seed=seed, kv_dtype=dt,
+                                 tier=tier)
+    outs = {name: r.pop("outputs") for name, r in per.items()}
+    # fan-out outputs are creation-ordered lists: key by position
+    agreement = kv_quant.compare_outputs(dict(enumerate(outs["fp"])),
+                                         dict(enumerate(outs["int8"])))
+    ratio = (per["int8"]["kv_bytes_per_slot"]
+             / max(per["fp"]["kv_bytes_per_slot"], 1))
+
+    # -- capacity under one byte budget ------------------------------------
+    from repro.serving.admission import OverloadConfig
+    cap_slots = 4 if smoke else 12
+    probe = EngineCore(tier, ac, EngineCoreConfig(slots=cap_slots,
+                                                  answer_vocab=9))
+    # budget: the fp engine fits the floor + ~cap_slots/3 distinct-scene
+    # admissions, so pages (not slots) bind admission for fp but not int8
+    demand = probe.page_demand(Request(task="det", image=np.zeros(
+        (ac.image_size, ac.image_size, ac.channels), np.float32), prompt=0))
+    budget = probe._page_nbytes_stack() * (
+        1 + probe._pages_per_slot + demand * max(cap_slots // 3, 1))
+    capacity = {}
+    for name, dt in (("fp", None), ("int8", "int8")):
+        core = EngineCore(tier, ac, EngineCoreConfig(
+            slots=cap_slots, answer_vocab=9, pool_bytes=budget, kv_dtype=dt,
+            overload=OverloadConfig(queue_cap=2 * cap_slots)))
+        core.warmup()
+        burst = [Request(task="det",
+                         image=np.zeros((ac.image_size, ac.image_size,
+                                         ac.channels), np.float32),
+                         prompt=0, scene_id=f"cap-{name}-{i}")
+                 for i in range(2 * cap_slots)]
+        core.submit_many(burst)
+        peak, done = 0, 0
+        while core.active_count() or core.queue_depth():
+            peak = max(peak, core.active_count())
+            done += len(core.step())
+        capacity[name] = {"n_pages": core._n_pages,
+                          "peak_concurrent": peak, "completed": done}
+
+    rec = {
+        "slots": slots, "scenes": scenes, "fanout": fanout,
+        "fp": per["fp"], "int8": per["int8"],
+        "kv_bytes_per_slot_ratio": round(ratio, 4),
+        "bytes_ratio_ok": ratio <= 0.55,
+        "agreement": agreement,
+        "outputs_match": agreement["match"],
+        "tokens_per_s_ratio": round(
+            per["int8"]["answer_tokens_per_s"]
+            / max(per["fp"]["answer_tokens_per_s"], 1e-9), 3),
+        "capacity": {"pool_bytes_budget": budget, **capacity,
+                     "page_ratio": round(capacity["int8"]["n_pages"]
+                                         / capacity["fp"]["n_pages"], 3)},
+        "capacity_up": (capacity["int8"]["peak_concurrent"]
+                        > capacity["fp"]["peak_concurrent"]),
+    }
+    return rec
+
+
 def _collect_recompiles(obj, path=""):
     """Every ``steady_recompiles`` counter anywhere in the record tree —
     one per engine each workload drove — as (path, count) pairs."""
@@ -1006,21 +1142,90 @@ def _collect_recompiles(obj, path=""):
 HISTORY_CAP = 12
 
 
-def _fold_history(out_path: str, rec: Dict) -> Dict:
-    """Append the previous record (its own history stripped) to a bounded
-    ``history`` list so the perf trajectory across PRs survives reruns; the
-    top-level summary fields stay exactly as CI smoke expects."""
-    history: List[Dict] = []
+def _fold_history(out_path: str, rec: Dict, backend: str) -> Dict:
+    """Fold the previous record into a ``history`` dict **keyed by
+    backend** (each entry is a full per-workload record), so runs on
+    different backends never overwrite each other's trajectory.  Pre-matrix
+    files carried a flat history list and no backend discipline — every
+    record in them came from this container's CPU runs, so both the old
+    list and the old top-level record migrate under ``"cpu"``."""
+    history: Dict[str, List[Dict]] = {}
     if os.path.exists(out_path):
         try:
             with open(out_path) as f:
                 prev = json.load(f)
-            history = prev.pop("history", [])
-            history.append(prev)
+            h = prev.pop("history", {})
+            history = {"cpu": h} if isinstance(h, list) else h
+            pb = prev.get("config", {}).get("backend", "cpu")
+            if pb not in ("cpu", "cpu-interpret", "gpu", "tpu"):
+                pb = "cpu"                  # old records stored raw
+            history.setdefault(pb, []).append(prev)
         except (OSError, ValueError):
             pass
-    rec["history"] = history[-HISTORY_CAP:]
+    rec["history"] = {b: h[-HISTORY_CAP:] for b, h in history.items()}
     return rec
+
+
+# ---------------------------------------------------------------------------
+# backend matrix
+# ---------------------------------------------------------------------------
+
+#: cpu-interpret = the CPU backend with every kernel dispatch pinned to
+#: ``pallas_interpret``: the Pallas TPU kernel BODIES (int8 dequant
+#: included) execute in the serving loop instead of the jnp oracles — the
+#: closest this container gets to exercising the real kernels end-to-end.
+BACKENDS = ("cpu", "cpu-interpret", "gpu", "tpu")
+#: the interpret leg is orders of magnitude slower than compiled CPU, so
+#: the matrix runs it at smoke scale on the kernel-heavy workloads only
+INTERPRET_WORKLOADS = "impl,fanout,quantized"
+WORKLOADS = ("impl", "fanout", "spec", "chunked", "overload", "quantized")
+
+
+def _backend_available(backend: str) -> bool:
+    """Probe a JAX platform in a THROWAWAY subprocess: the parent already
+    initialised its own backend, and a failed ``jax.devices()`` for an
+    absent platform would poison this process's runtime."""
+    import subprocess
+    env = dict(os.environ, JAX_PLATFORMS=backend.split("-")[0])
+    try:
+        r = subprocess.run([sys.executable, "-c",
+                            "import jax; jax.devices()"],
+                           env=env, capture_output=True, timeout=60)
+    except subprocess.TimeoutExpired:
+        # e.g. a tpu probe stuck waiting for libtpu on a CPU host
+        return False
+    return r.returncode == 0
+
+
+def _run_matrix(args, argv) -> int:
+    """Run one bench leg per available backend, sequentially, sharing
+    ``--out`` — each leg folds its predecessors into the backend-keyed
+    history, so the final file carries every backend's record.  Absent
+    backends are skipped with a notice, not an error (this container is
+    CPU-only; the gpu/tpu legs light up where the hardware exists)."""
+    import subprocess
+    base = [a for a in (argv if argv is not None else sys.argv[1:])
+            if a != "--matrix"]
+    rc = 0
+    # interpret before compiled cpu, accelerators last: each leg folds its
+    # predecessor into history, so the file's TOP-LEVEL record ends up being
+    # the most production-like backend that actually ran
+    for backend in ("cpu-interpret", "cpu", "gpu", "tpu"):
+        if not _backend_available(backend):
+            print(f"[matrix] {backend}: backend unavailable, skipped",
+                  flush=True)
+            continue
+        leg = base + ["--backend", backend]
+        if backend == "cpu-interpret" and "--workloads" not in base:
+            leg += ["--workloads", INTERPRET_WORKLOADS]
+            if "--smoke" not in leg:
+                leg.append("--smoke")
+        env = dict(os.environ, JAX_PLATFORMS=backend.split("-")[0])
+        print(f"[matrix] {backend}: {' '.join(leg)}", flush=True)
+        r = subprocess.run([sys.executable, os.path.abspath(__file__)]
+                           + leg, env=env)
+        rc = rc or r.returncode
+    return rc
 
 
 def main(argv=None) -> int:
@@ -1079,8 +1284,43 @@ def main(argv=None) -> int:
                          "step function after warmup — the CompileGuard "
                          "steady-state verdict across the plain, spec and "
                          "chunked workloads")
+    ap.add_argument("--kv-dtype", choices=["int8"], default=None,
+                    help="run every paged engine quantized (int8 pages, "
+                         "in-kernel dequant); each workload's existing "
+                         "output assertions then check the quantized "
+                         "engines against their fp/dense oracles")
+    ap.add_argument("--backend", choices=["auto"] + list(BACKENDS),
+                    default="auto",
+                    help="backend label for this leg; cpu-interpret pins "
+                         "kernel dispatch to pallas_interpret (kernel "
+                         "bodies execute on CPU).  The JAX platform itself "
+                         "is chosen via JAX_PLATFORMS before process start")
+    ap.add_argument("--matrix", action="store_true",
+                    help="run one leg per available backend (cpu / "
+                         "cpu-interpret / gpu / tpu), sequentially, folding "
+                         "all records into one backend-keyed history")
+    ap.add_argument("--workloads", default="all",
+                    help="comma list of workloads to run "
+                         f"({','.join(WORKLOADS)}; default all)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
+
+    if args.matrix:
+        return _run_matrix(args, argv)
+
+    backend = (jax.default_backend() if args.backend == "auto"
+               else args.backend)
+    if backend == "cpu-interpret":
+        if jax.default_backend() != "cpu":
+            raise SystemExit("cpu-interpret needs JAX_PLATFORMS=cpu")
+        from repro.kernels import ops
+        ops.set_default_impl("pallas_interpret")
+
+    wl = (set(WORKLOADS) if args.workloads == "all"
+          else {w.strip() for w in args.workloads.split(",") if w.strip()})
+    unknown = wl - set(WORKLOADS)
+    if unknown:
+        raise SystemExit(f"unknown workloads: {sorted(unknown)}")
 
     if args.smoke:
         args.slots, args.steps, args.warmup = 4, 8, 2
@@ -1092,110 +1332,167 @@ def main(argv=None) -> int:
         args.overload_slots, args.overload_requests = 3, 20
         args.overload_queue_cap = 4
 
-    impls = ["batched", "vmap"] if args.impl == "both" else [args.impl]
-    results = {}
-    for impl in impls:
-        r = bench_impl(impl, slots=args.slots, steps=args.steps,
-                       warmup=args.warmup, det_frac=args.det_frac,
-                       seed=args.seed)
-        results[impl] = r
-        print(f"[{impl:7s}] {r['decode_tokens_per_s']:9.1f} tok/s  "
-              f"{r['steps_per_s']:7.2f} steps/s  "
-              f"{r['admissions_per_s']:6.2f} admits/s  "
-              f"({r['wall_s']}s wall)", flush=True)
-
-    # -- scene fan-out: paged prefix sharing vs dense ----------------------
-    fanout = {}
-    for cache_impl in ("paged", "dense"):
-        r = bench_fanout(cache_impl, slots=args.fanout_slots,
-                         scenes=args.scenes, fanout=args.fanout,
-                         seed=args.seed)
-        fanout[cache_impl] = r
-        print(f"[fanout {cache_impl:5s}] {r['answer_tokens_per_s']:9.1f} "
-              f"tok/s  prefill {r['prefill_tokens']:6d} tok  "
-              f"hit-rate {r['prefix_hit_rate']:.2f}  "
-              f"kv/slot {r['kv_bytes_per_slot']} B  ({r['wall_s']}s wall)",
-              flush=True)
-    outputs_match = (fanout["paged"].pop("outputs")
-                     == fanout["dense"].pop("outputs"))
-    print(f"fan-out outputs paged == dense: {outputs_match}")
-
-    # -- cascade-speculative decoding: compact drafts, regular verifies ----
-    spec = bench_spec(slots=args.spec_slots, n_req=args.spec_requests,
-                      det_frac=args.spec_det_frac, gamma=args.spec_gamma,
-                      train_steps=args.spec_train_steps, seed=args.seed)
-    print(f"[spec γ={spec['gamma']}] "
-          f"{spec['spec']['decode_tokens_per_s']:9.1f} tok/s vs "
-          f"{spec['greedy']['decode_tokens_per_s']:9.1f} greedy "
-          f"({spec['speedup_tokens_per_s']}×)  "
-          f"accept {spec['accept_rate']:.2f}  "
-          f"{spec['tokens_per_slot_step']:.2f} tok/slot-step  "
-          f"piggyback {spec['piggyback_frac']:.2f}")
-    print(f"spec outputs == greedy: {spec['outputs_match']}")
-
-    # -- chunked prefill: fused token-budget steps vs admission stalls -----
-    chunked = bench_chunked(slots=args.chunk_slots, grid=args.chunk_grid,
-                            bursts=args.chunk_bursts,
-                            new_scenes=args.chunk_new_scenes,
-                            fanout=args.chunk_fanout, chunk=args.chunk,
-                            seed=args.seed, smoke=args.smoke)
-    ca = chunked["continuous_arrival"]
-    print(f"[chunked C={chunked['chunk']} grid={chunked['grid']}] "
-          f"continuous arrival (interval {chunked['arrival_interval_s']}s): "
-          f"urgent-vqa TTFT p50 "
-          f"{ca['chunked'].get('vqa_ttft_p50_ms', 0):.1f}ms vs "
-          f"{ca['stall'].get('vqa_ttft_p50_ms', 0):.1f}ms stall "
-          f"({chunked['vqa_ttft_p50_speedup']}×; p99 "
-          f"{chunked['vqa_ttft_p99_speedup']}×)")
-    print(f"          decode-gap p99 "
-          f"{ca['chunked'].get('decode_gap_p99_ms', 0):.1f}ms vs "
-          f"{ca['stall'].get('decode_gap_p99_ms', 0):.1f}ms "
-          f"({chunked['decode_gap_p99_speedup']}×; max "
-          f"{chunked['decode_gap_max_speedup']}×)  steady-decode ratio "
-          f"{chunked['steady_decode_ratio']}")
-    print(f"chunked outputs == stall: {chunked['outputs_match']}")
-
-    # -- overload control: sustained over-capacity, mixed priorities -------
-    overload = bench_overload(slots=args.overload_slots,
-                              n_req=args.overload_requests,
-                              urgent_frac=args.overload_urgent_frac,
-                              queue_cap=args.overload_queue_cap,
-                              seed=args.seed, smoke=args.smoke)
-    ob, oc = overload["baseline"], overload["controlled"]
-    print(f"[overload q={overload['queue_cap']}] 2x saturation: urgent TTFT "
-          f"p99 {oc.get('urgent_ttft_p99_ms', 0):.1f}ms vs "
-          f"{ob.get('urgent_ttft_p99_ms', 0):.1f}ms FIFO "
-          f"({overload['urgent_ttft_p99_speedup']}×; p50 "
-          f"{overload['urgent_ttft_p50_speedup']}×)  "
-          f"queue peak {oc['queue_peak']}/{overload['queue_cap']} vs "
-          f"{ob['queue_peak']} unbounded  "
-          f"preempt {overload['preemptions']}  "
-          f"rejected {oc['rejected']}/{overload['requests']}")
-    print(f"overload outputs == oracle: {overload['outputs_match']}")
-
-    rec = {
+    matches: List[bool] = []
+    rec: Dict[str, object] = {
         "config": {"slots": args.slots, "steps": args.steps,
                    "warmup": args.warmup, "det_frac": args.det_frac,
                    "scenes": args.scenes, "fanout": args.fanout,
                    "fanout_slots": args.fanout_slots,
-                   "backend": jax.default_backend(), "smoke": args.smoke},
-        "results": results,
-        "fanout": fanout,
-        "fanout_outputs_match": outputs_match,
-        "fanout_prefill_token_ratio": round(
-            fanout["dense"]["prefill_tokens"]
-            / max(fanout["paged"]["prefill_tokens"], 1), 3),
-        "spec": spec,
-        "chunked": chunked,
-        "overload": overload,
+                   "backend": backend, "jax_backend": jax.default_backend(),
+                   "kv_dtype": args.kv_dtype,
+                   "workloads": sorted(wl), "smoke": args.smoke},
     }
-    if "batched" in results and "vmap" in results:
-        rec["speedup_tokens_per_s"] = round(
-            results["batched"]["decode_tokens_per_s"]
-            / results["vmap"]["decode_tokens_per_s"], 3)
-        print(f"speedup (batched/vmap): {rec['speedup_tokens_per_s']}×")
-    print(f"fan-out prefill-token ratio (dense/paged): "
-          f"{rec['fanout_prefill_token_ratio']}×")
+
+    if "impl" in wl:
+        impls = ["batched", "vmap"] if args.impl == "both" else [args.impl]
+        results = {}
+        for impl in impls:
+            r = bench_impl(impl, slots=args.slots, steps=args.steps,
+                           warmup=args.warmup, det_frac=args.det_frac,
+                           seed=args.seed, kv_dtype=args.kv_dtype)
+            results[impl] = r
+            print(f"[{impl:7s}] {r['decode_tokens_per_s']:9.1f} tok/s  "
+                  f"{r['steps_per_s']:7.2f} steps/s  "
+                  f"{r['admissions_per_s']:6.2f} admits/s  "
+                  f"({r['wall_s']}s wall)", flush=True)
+        rec["results"] = results
+        if "batched" in results and "vmap" in results:
+            rec["speedup_tokens_per_s"] = round(
+                results["batched"]["decode_tokens_per_s"]
+                / results["vmap"]["decode_tokens_per_s"], 3)
+            print(f"speedup (batched/vmap): {rec['speedup_tokens_per_s']}×")
+
+    if "fanout" in wl:
+        # -- scene fan-out: paged prefix sharing vs dense ------------------
+        fanout = {}
+        for cache_impl in ("paged", "dense"):
+            r = bench_fanout(cache_impl, slots=args.fanout_slots,
+                             scenes=args.scenes, fanout=args.fanout,
+                             seed=args.seed, kv_dtype=args.kv_dtype)
+            fanout[cache_impl] = r
+            print(f"[fanout {cache_impl:5s}] "
+                  f"{r['answer_tokens_per_s']:9.1f} "
+                  f"tok/s  prefill {r['prefill_tokens']:6d} tok  "
+                  f"hit-rate {r['prefix_hit_rate']:.2f}  "
+                  f"kv/slot {r['kv_bytes_per_slot']} B  "
+                  f"({r['wall_s']}s wall)", flush=True)
+        paged_outs = fanout["paged"].pop("outputs")
+        dense_outs = fanout["dense"].pop("outputs")
+        outputs_match = (paged_outs == dense_outs)
+        if args.kv_dtype is None:
+            print(f"fan-out outputs paged == dense: {outputs_match}")
+            matches.append(outputs_match)
+        else:
+            # the dense engine is fp-exact by design, so this comparison
+            # crosses dtypes: report token-level divergence instead of
+            # gating on it — the GATED cross-dtype agreement check is the
+            # quantized workload (same fan-out stream, trained tier).
+            from repro.kernels import kv_quant
+            ag = kv_quant.compare_outputs(dict(enumerate(dense_outs)),
+                                          dict(enumerate(paged_outs)))
+            rec["fanout_agreement"] = ag
+            print(f"fan-out paged-{args.kv_dtype} vs dense-fp "
+                  f"(cross-dtype, reported not gated): "
+                  f"{ag['n_tokens_diverged']}/{ag['n_tokens']} tokens "
+                  f"diverged across {ag['n_requests_diverged']}/"
+                  f"{ag['n_requests']} requests")
+        rec["fanout"] = fanout
+        rec["fanout_outputs_match"] = outputs_match
+        rec["fanout_prefill_token_ratio"] = round(
+            fanout["dense"]["prefill_tokens"]
+            / max(fanout["paged"]["prefill_tokens"], 1), 3)
+        print(f"fan-out prefill-token ratio (dense/paged): "
+              f"{rec['fanout_prefill_token_ratio']}×")
+
+    if "spec" in wl:
+        # -- cascade-speculative decoding: compact drafts, regular verifies
+        spec = bench_spec(slots=args.spec_slots, n_req=args.spec_requests,
+                          det_frac=args.spec_det_frac, gamma=args.spec_gamma,
+                          train_steps=args.spec_train_steps, seed=args.seed,
+                          kv_dtype=args.kv_dtype)
+        print(f"[spec γ={spec['gamma']}] "
+              f"{spec['spec']['decode_tokens_per_s']:9.1f} tok/s vs "
+              f"{spec['greedy']['decode_tokens_per_s']:9.1f} greedy "
+              f"({spec['speedup_tokens_per_s']}×)  "
+              f"accept {spec['accept_rate']:.2f}  "
+              f"{spec['tokens_per_slot_step']:.2f} tok/slot-step  "
+              f"piggyback {spec['piggyback_frac']:.2f}")
+        print(f"spec outputs == greedy: {spec['outputs_match']}")
+        matches.append(spec["outputs_match"])
+        rec["spec"] = spec
+
+    if "chunked" in wl:
+        # -- chunked prefill: token-budget fused steps vs admission stalls
+        chunked = bench_chunked(slots=args.chunk_slots, grid=args.chunk_grid,
+                                bursts=args.chunk_bursts,
+                                new_scenes=args.chunk_new_scenes,
+                                fanout=args.chunk_fanout, chunk=args.chunk,
+                                seed=args.seed, smoke=args.smoke,
+                                kv_dtype=args.kv_dtype)
+        ca = chunked["continuous_arrival"]
+        print(f"[chunked C={chunked['chunk']} grid={chunked['grid']}] "
+              f"continuous arrival "
+              f"(interval {chunked['arrival_interval_s']}s): "
+              f"urgent-vqa TTFT p50 "
+              f"{ca['chunked'].get('vqa_ttft_p50_ms', 0):.1f}ms vs "
+              f"{ca['stall'].get('vqa_ttft_p50_ms', 0):.1f}ms stall "
+              f"({chunked['vqa_ttft_p50_speedup']}×; p99 "
+              f"{chunked['vqa_ttft_p99_speedup']}×)")
+        print(f"          decode-gap p99 "
+              f"{ca['chunked'].get('decode_gap_p99_ms', 0):.1f}ms vs "
+              f"{ca['stall'].get('decode_gap_p99_ms', 0):.1f}ms "
+              f"({chunked['decode_gap_p99_speedup']}×; max "
+              f"{chunked['decode_gap_max_speedup']}×)  steady-decode ratio "
+              f"{chunked['steady_decode_ratio']}")
+        print(f"chunked outputs == stall: {chunked['outputs_match']}")
+        matches.append(chunked["outputs_match"])
+        rec["chunked"] = chunked
+
+    if "overload" in wl:
+        # -- overload control: sustained over-capacity, mixed priorities ---
+        overload = bench_overload(slots=args.overload_slots,
+                                  n_req=args.overload_requests,
+                                  urgent_frac=args.overload_urgent_frac,
+                                  queue_cap=args.overload_queue_cap,
+                                  seed=args.seed, smoke=args.smoke,
+                                  kv_dtype=args.kv_dtype)
+        ob, oc = overload["baseline"], overload["controlled"]
+        print(f"[overload q={overload['queue_cap']}] 2x saturation: "
+              f"urgent TTFT "
+              f"p99 {oc.get('urgent_ttft_p99_ms', 0):.1f}ms vs "
+              f"{ob.get('urgent_ttft_p99_ms', 0):.1f}ms FIFO "
+              f"({overload['urgent_ttft_p99_speedup']}×; p50 "
+              f"{overload['urgent_ttft_p50_speedup']}×)  "
+              f"queue peak {oc['queue_peak']}/{overload['queue_cap']} vs "
+              f"{ob['queue_peak']} unbounded  "
+              f"preempt {overload['preemptions']}  "
+              f"rejected {oc['rejected']}/{overload['requests']}")
+        print(f"overload outputs == oracle: {overload['outputs_match']}")
+        matches.append(overload["outputs_match"])
+        rec["overload"] = overload
+
+    if "quantized" in wl:
+        # -- quantized paged KV: int8 vs the exact-fp engine ---------------
+        quant = bench_quantized(slots=args.fanout_slots, scenes=args.scenes,
+                                fanout=args.fanout, seed=args.seed,
+                                smoke=args.smoke)
+        cap = quant["capacity"]
+        print(f"[quantized int8] kv/slot ratio "
+              f"{quant['kv_bytes_per_slot_ratio']} (≤0.55: "
+              f"{quant['bytes_ratio_ok']})  tok/s ratio "
+              f"{quant['tokens_per_s_ratio']}  capacity "
+              f"{cap['int8']['peak_concurrent']} vs "
+              f"{cap['fp']['peak_concurrent']} concurrent "
+              f"({cap['int8']['n_pages']} vs {cap['fp']['n_pages']} pages "
+              f"under {cap['pool_bytes_budget']} B)")
+        ag = quant["agreement"]
+        print(f"int8 outputs == fp: {quant['outputs_match']}  "
+              f"({ag['n_requests_diverged']}/{ag['n_requests']} requests "
+              f"diverged, first at {ag['first_divergences'] or '-'})")
+        matches.append(quant["outputs_match"] and quant["bytes_ratio_ok"]
+                       and quant["capacity_up"])
+        rec["quantized"] = quant
+
     recompiles = _collect_recompiles(rec)
     total_recompiles = sum(v for _, v in recompiles)
     rec["steady_recompiles_total"] = total_recompiles
@@ -1203,14 +1500,14 @@ def main(argv=None) -> int:
     print(f"steady-state recompiles after warmup: {total_recompiles}"
           + (f"  ({', '.join(offenders)})" if offenders else ""))
 
-    rec = _fold_history(args.out, rec)
+    rec = _fold_history(args.out, rec, backend)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
-    print(f"wrote {args.out} (history: {len(rec['history'])} prior runs)")
+    n_hist = sum(len(h) for h in rec["history"].values())
+    print(f"wrote {args.out} (history: {n_hist} prior runs across "
+          f"{sorted(rec['history'])})")
     compiles_ok = not (args.check_compiles and total_recompiles)
-    return 0 if (outputs_match and spec["outputs_match"]
-                 and chunked["outputs_match"] and overload["outputs_match"]
-                 and compiles_ok) else 1
+    return 0 if (all(matches) and compiles_ok) else 1
 
 
 if __name__ == "__main__":

@@ -41,6 +41,18 @@ query-chunk axis joins the grid in ``q_blk``-token sub-blocks, each with its
 own online-softmax scratch and its own causal KV-block skip bounds, so large
 prefix-append chunks stream through bounded VMEM and early chunk tokens
 never fetch KV blocks only later tokens can see.
+
+All three paged kernels additionally accept **int8 pools** (``kv_dtype=
+"int8"`` serving mode): pass ``k_scale``/``v_scale`` pools of per-(token
+slot, head) symmetric scales, laid out ``(n_pages, KH, page, 1)`` so each
+scale block rides the SAME scalar-prefetched block-table indirection as its
+K/V page and lands in VMEM next to it.  Dequantization is fused in-register
+— the int8 block is upcast and multiplied by its scale column at the point
+the fp kernel already upcasts K/V — so quantized decode costs one extra
+(page, 1) fetch and one multiply per page, never a separate dequant pass
+over the pool.  Scale granularity is per token slot, not per page, so
+incremental writes never requantize committed neighbours (see
+``kernels/kv_quant.py`` for the write-side numerics and the rationale).
 """
 from __future__ import annotations
 
@@ -64,10 +76,16 @@ def largest_divisor_leq(n: int, cap: int) -> int:
     return 1
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
-                   l_ref, *, scale: float, window: int,
-                   softcap: Optional[float], kv_blk: int, n_kv: int,
-                   q_len: int = 1, group: int = 0):
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, *rest, scale: float,
+                   window: int, softcap: Optional[float], kv_blk: int,
+                   n_kv: int, q_len: int = 1, group: int = 0):
+    # positional refs after v_ref: optional int8 scale blocks (quantized
+    # pools only), then the output and the three online-softmax scratches
+    if len(rest) == 6:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
+        ks_ref = vs_ref = None
     ib = pl.program_id(0)
     ikv = pl.program_id(2)
     cache_len = len_ref[ib]
@@ -91,6 +109,10 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         q = q_ref[0, 0].astype(jnp.float32)           # (q_len·group, hd)
         k = k_ref[0, 0].astype(jnp.float32)           # (kv_blk, hd)
         v = v_ref[0, 0].astype(jnp.float32)
+        if ks_ref is not None:
+            # in-register dequant: int8 page × per-slot scale column
+            k = k * ks_ref[0, 0]                      # (kv_blk, 1)
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if softcap is not None:
@@ -153,14 +175,18 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         _decode_kernel, scale=scale, window=window, softcap=softcap,
         kv_blk=kv_blk, n_kv=n_kv, q_len=q_len, group=group)
 
+    # list-built (not inline) so the spec count stays dynamic: the kernel
+    # body takes the scale refs as a vararg tail the static arity check
+    # cannot see (dense pools never pass them; the paged wrappers may)
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, hd), lambda b_, h_, ik, *_: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, kv_blk, hd), lambda b_, h_, ik, *_: (b_, h_, ik, 0)),
+        pl.BlockSpec((1, 1, kv_blk, hd), lambda b_, h_, ik, *_: (b_, h_, ik, 0)),
+    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kh, n_kv),
-        in_specs=[
-            pl.BlockSpec((1, 1, rows, hd), lambda b_, h_, ik, *_: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, 1, kv_blk, hd), lambda b_, h_, ik, *_: (b_, h_, ik, 0)),
-            pl.BlockSpec((1, 1, kv_blk, hd), lambda b_, h_, ik, *_: (b_, h_, ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, rows, hd),
                                lambda b_, h_, ik, *_: (b_, h_, 0, 0)),
         scratch_shapes=[
@@ -179,14 +205,14 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     )(cache_len, q, k, v)
 
 
-def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                         acc_ref, m_ref, l_ref, **kw):
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest, **kw):
     """The dense kernel body, page-indirected: the block table only steers
     the BlockSpec index maps (which physical page each logical block DMAs
-    from); the in-kernel math sees logical columns exactly as dense."""
+    from); the in-kernel math sees logical columns exactly as dense.  With
+    int8 pools ``rest`` additionally carries the scale blocks, whose index
+    maps follow the same table."""
     del tbl_ref
-    _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
-                   l_ref, **kw)
+    _decode_kernel(len_ref, q_ref, k_ref, v_ref, *rest, **kw)
 
 
 def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
@@ -195,6 +221,8 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
                                   softcap: Optional[float] = None,
                                   scale: Optional[float] = None,
                                   q_len: int = 1,
+                                  k_scale: Optional[jax.Array] = None,
+                                  v_scale: Optional[jax.Array] = None,
                                   interpret: bool = False) -> jax.Array:
     """q: (B, KH, q_len·group, hd) token-major rows; k_pool, v_pool:
     (n_pages, KH, page, hd); block_table: (B, P) int32 physical page per
@@ -206,7 +234,12 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
     logical position, so the result equals dense decode over the gathered
     cache.  ``q_len > 1`` is the multi-token speculative scoring chunk,
     causal within the chunk; the kernel only ever reads the pools, so shared
-    read-only prefix pages are untouched."""
+    read-only prefix pages are untouched.
+
+    ``k_scale``/``v_scale`` (both or neither): int8 pools with per-slot
+    symmetric scales ``(n_pages, KH, page, 1)`` f32 — each scale block's
+    index map follows the same block-table entry as its page, and the
+    kernel dequants in-register before the QK/PV dots."""
     b, kh, rows, hd = q.shape
     page = k_pool.shape[2]
     n_blocks = block_table.shape[1]
@@ -218,17 +251,27 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
         _paged_decode_kernel, scale=scale, window=window, softcap=softcap,
         kv_blk=page, n_kv=n_blocks, q_len=q_len, group=group)
 
+    def page_map(b_, h_, ip, tbl, lens):
+        return (tbl[b_, ip], h_, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, hd),
+                     lambda b_, h_, ip, tbl, lens: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, page, hd), page_map),
+        pl.BlockSpec((1, 1, page, hd), page_map),
+    ]
+    operands = (q, k_pool, v_pool)
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
+    if k_scale is not None:
+        in_specs += [pl.BlockSpec((1, 1, page, 1), page_map),
+                     pl.BlockSpec((1, 1, page, 1), page_map)]
+        operands += (k_scale, v_scale)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kh, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, rows, hd),
-                         lambda b_, h_, ip, tbl, lens: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, 1, page, hd),
-                         lambda b_, h_, ip, tbl, lens: (tbl[b_, ip], h_, 0, 0)),
-            pl.BlockSpec((1, 1, page, hd),
-                         lambda b_, h_, ip, tbl, lens: (tbl[b_, ip], h_, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, rows, hd),
                                lambda b_, h_, ip, tbl, lens: (b_, h_, 0, 0)),
         scratch_shapes=[
@@ -245,14 +288,13 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kh, rows, hd), q.dtype),
         interpret=interpret,
-    )(block_table, cache_len, q, k_pool, v_pool)
+    )(block_table, cache_len, *operands)
 
 
-def _prefill_append_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                           acc_ref, m_ref, l_ref, *, scale: float,
-                           window: int, softcap: Optional[float],
-                           kv_blk: int, n_kv: int, q_len: int, q_blk: int,
-                           group: int):
+def _prefill_append_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                           scale: float, window: int,
+                           softcap: Optional[float], kv_blk: int, n_kv: int,
+                           q_len: int, q_blk: int, group: int):
     """Prefix-append attention for one (batch row, KV head, query sub-block,
     KV page) grid cell.  The query-chunk axis is tiled: sub-block ``iq``
     covers chunk tokens ``iq·q_blk .. iq·q_blk + q_blk - 1``, so only its
@@ -261,6 +303,11 @@ def _prefill_append_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     the per-sub-block VMEM footprint stays q_blk·group rows no matter how
     large the chunk is (the γ+1 verify kernel holds the whole chunk in one
     block, which is fine for small γ but not for C-token prefill chunks)."""
+    if len(rest) == 6:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
+        ks_ref = vs_ref = None
     ib = pl.program_id(0)
     iq = pl.program_id(2)
     ikv = pl.program_id(3)
@@ -286,6 +333,10 @@ def _prefill_append_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)           # (q_blk·group, hd)
         k = k_ref[0, 0].astype(jnp.float32)           # (kv_blk, hd)
         v = v_ref[0, 0].astype(jnp.float32)
+        if ks_ref is not None:
+            # in-register dequant: int8 page × per-slot scale column
+            k = k * ks_ref[0, 0]                      # (kv_blk, 1)
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if softcap is not None:
@@ -321,6 +372,8 @@ def paged_prefill_attention_pallas(q: jax.Array, k_pool: jax.Array,
                                    softcap: Optional[float] = None,
                                    scale: Optional[float] = None,
                                    q_len: int = 1, q_blk: int = 8,
+                                   k_scale: Optional[jax.Array] = None,
+                                   v_scale: Optional[jax.Array] = None,
                                    interpret: bool = False) -> jax.Array:
     """Chunked-prefill **prefix-append** attention, page-indirect.
 
@@ -337,7 +390,11 @@ def paged_prefill_attention_pallas(q: jax.Array, k_pool: jax.Array,
     per-sub-block online-softmax scratch and per-sub-block KV-block
     skipping, so a C-token chunk costs O(Σ_t prefix_t) block fetches and
     bounded VMEM instead of one C·group-row mega-block — the shape a
-    Sarathi-style chunked prefill feeds (C ≫ γ+1)."""
+    Sarathi-style chunked prefill feeds (C ≫ γ+1).
+
+    ``k_scale``/``v_scale`` (both or neither): int8 pools with per-slot
+    symmetric scales ``(n_pages, KH, page, 1)`` f32, dequanted in-register
+    exactly as in ``paged_decode_attention_pallas``."""
     b, kh, rows, hd = q.shape
     page = k_pool.shape[2]
     n_blocks = block_table.shape[1]
@@ -353,19 +410,27 @@ def paged_prefill_attention_pallas(q: jax.Array, k_pool: jax.Array,
         _prefill_append_kernel, scale=scale, window=window, softcap=softcap,
         kv_blk=page, n_kv=n_blocks, q_len=q_len, q_blk=q_blk, group=group)
 
+    def page_map(b_, h_, iq, ip, tbl, lens):
+        return (tbl[b_, ip], h_, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, sub_rows, hd),
+                     lambda b_, h_, iq, ip, tbl, lens: (b_, h_, iq, 0)),
+        pl.BlockSpec((1, 1, page, hd), page_map),
+        pl.BlockSpec((1, 1, page, hd), page_map),
+    ]
+    operands = (q, k_pool, v_pool)
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
+    if k_scale is not None:
+        in_specs += [pl.BlockSpec((1, 1, page, 1), page_map),
+                     pl.BlockSpec((1, 1, page, 1), page_map)]
+        operands += (k_scale, v_scale)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kh, n_q, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, sub_rows, hd),
-                         lambda b_, h_, iq, ip, tbl, lens: (b_, h_, iq, 0)),
-            pl.BlockSpec((1, 1, page, hd),
-                         lambda b_, h_, iq, ip, tbl, lens:
-                         (tbl[b_, ip], h_, 0, 0)),
-            pl.BlockSpec((1, 1, page, hd),
-                         lambda b_, h_, iq, ip, tbl, lens:
-                         (tbl[b_, ip], h_, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, sub_rows, hd),
                                lambda b_, h_, iq, ip, tbl, lens:
                                (b_, h_, iq, 0)),
@@ -383,4 +448,4 @@ def paged_prefill_attention_pallas(q: jax.Array, k_pool: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kh, rows, hd), q.dtype),
         interpret=interpret,
-    )(block_table, cache_len, q, k_pool, v_pool)
+    )(block_table, cache_len, *operands)

@@ -30,11 +30,16 @@ Impl = Optional[str]
 _DEFAULT_OVERRIDE: Optional[str] = None
 
 
-def set_default_impl(impl: Optional[str]) -> None:
+def set_default_impl(impl: Optional[str]) -> Optional[str]:
     """Process-wide override (the dry-run sets "flash_structured" so the
-    lowered HLO matches the TPU kernel's work profile)."""
+    lowered HLO matches the TPU kernel's work profile).  Returns the
+    previous override so callers can scope it (e.g. pin "ref" across a
+    training phase — the serving kernels are inference-only and define no
+    autodiff rules)."""
     global _DEFAULT_OVERRIDE
+    prev = _DEFAULT_OVERRIDE
     _DEFAULT_OVERRIDE = impl
+    return prev
 
 
 def default_impl() -> str:
@@ -142,11 +147,23 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 # paged decode attention (page-pool layout; per-row block tables)
 # ---------------------------------------------------------------------------
 
+def _scale_to_kernel(scale: Optional[jax.Array]) -> Optional[jax.Array]:
+    """Model-side per-slot scales (n_pages, page, KH) → the kernel layout
+    (n_pages, KH, page, 1): the trailing length-1 lane keeps the in-kernel
+    scale block 2D so it broadcasts straight against the (page, hd) K/V
+    block."""
+    if scale is None:
+        return None
+    return scale.transpose(0, 2, 1)[..., None]
+
+
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_table: jax.Array,
                            cache_len: jax.Array, *, window: int = 0,
                            softcap: Optional[float] = None,
                            scale: Optional[float] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
                            impl: Impl = None) -> jax.Array:
     """q: (B, H, hd); k_pool, v_pool: (n_pages, page, K, hd); block_table:
     (B, P) int32 (physical page per logical block); cache_len: () or (B,)
@@ -154,14 +171,18 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
 
     The paged analogue of ``decode_attention``: each row reads its KV
     through its block table, so shared prefix pages are fetched once per
-    page, not once per sequence."""
+    page, not once per sequence.  ``k_scale``/``v_scale`` (n_pages, page, K)
+    f32: the pools are int8 with per-slot symmetric scales, dequanted inside
+    the kernel (see ``kernels/kv_quant.py``)."""
     kind, interp = _resolve(impl)
     cache_len = jnp.asarray(cache_len, jnp.int32)
     if kind in ("ref", "flash_structured"):
         with jax.named_scope("KERNELREGION_decode"):
             return ref.paged_decode_attention(q, k_pool, v_pool, block_table,
                                               cache_len, window=window,
-                                              softcap=softcap, scale=scale)
+                                              softcap=softcap, scale=scale,
+                                              k_scale=k_scale,
+                                              v_scale=v_scale)
     b, h, hd = q.shape
     kh = k_pool.shape[2]
     group = h // kh
@@ -170,7 +191,10 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     vp = v_pool.transpose(0, 2, 1, 3)
     o = paged_decode_attention_pallas(qg, kp, vp, block_table, cache_len,
                                       window=window, softcap=softcap,
-                                      scale=scale, interpret=interp)
+                                      scale=scale,
+                                      k_scale=_scale_to_kernel(k_scale),
+                                      v_scale=_scale_to_kernel(v_scale),
+                                      interpret=interp)
     return o.reshape(b, h, hd)
 
 
@@ -225,6 +249,8 @@ def paged_multi_decode_attention(q: jax.Array, k_pool: jax.Array,
                                  cache_len: jax.Array, *, window: int = 0,
                                  softcap: Optional[float] = None,
                                  scale: Optional[float] = None,
+                                 k_scale: Optional[jax.Array] = None,
+                                 v_scale: Optional[jax.Array] = None,
                                  impl: Impl = None) -> jax.Array:
     """q: (B, T, H, hd); k_pool, v_pool: (n_pages, page, K, hd);
     block_table: (B, P) int32; cache_len: () or (B,) int32 INCLUDING the
@@ -232,20 +258,25 @@ def paged_multi_decode_attention(q: jax.Array, k_pool: jax.Array,
 
     The speculative verifier's scoring op: ONE call emits attention for all
     T = γ+1 draft positions of every row through its block table (shared
-    read-only prefix pages fetched once per page, never written)."""
+    read-only prefix pages fetched once per page, never written).
+    ``k_scale``/``v_scale`` (n_pages, page, K): int8 pools, in-kernel
+    dequant."""
     kind, interp = _resolve(impl)
     cache_len = jnp.asarray(cache_len, jnp.int32)
     if kind in ("ref", "flash_structured"):
         with jax.named_scope("KERNELREGION_decode"):
             return ref.paged_multi_decode_attention(
                 q, k_pool, v_pool, block_table, cache_len, window=window,
-                softcap=softcap, scale=scale)
+                softcap=softcap, scale=scale, k_scale=k_scale,
+                v_scale=v_scale)
     b, t, h, hd = q.shape
     kh = k_pool.shape[2]
     o = paged_decode_attention_pallas(
         _chunk_to_rows(q, kh), k_pool.transpose(0, 2, 1, 3),
         v_pool.transpose(0, 2, 1, 3), block_table, cache_len, window=window,
-        softcap=softcap, scale=scale, q_len=t, interpret=interp)
+        softcap=softcap, scale=scale, q_len=t,
+        k_scale=_scale_to_kernel(k_scale),
+        v_scale=_scale_to_kernel(v_scale), interpret=interp)
     return _rows_to_chunk(o, t, h)
 
 
@@ -258,6 +289,8 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
                             cache_len: jax.Array, *, window: int = 0,
                             softcap: Optional[float] = None,
                             scale: Optional[float] = None, q_blk: int = 8,
+                            k_scale: Optional[jax.Array] = None,
+                            v_scale: Optional[jax.Array] = None,
                             impl: Impl = None) -> jax.Array:
     """q: (B, C, H, hd) — a C-token **prefill chunk** whose KV the caller
     just scattered at per-row (page, offset); k_pool, v_pool: (n_pages,
@@ -280,14 +313,16 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
         with jax.named_scope("KERNELREGION_decode"):
             return ref.paged_prefill_attention(
                 q, k_pool, v_pool, block_table, cache_len, window=window,
-                softcap=softcap, scale=scale)
+                softcap=softcap, scale=scale, k_scale=k_scale,
+                v_scale=v_scale)
     b, t, h, hd = q.shape
     kh = k_pool.shape[2]
     o = paged_prefill_attention_pallas(
         _chunk_to_rows(q, kh), k_pool.transpose(0, 2, 1, 3),
         v_pool.transpose(0, 2, 1, 3), block_table, cache_len, window=window,
         softcap=softcap, scale=scale, q_len=t, q_blk=q_blk,
-        interpret=interp)
+        k_scale=_scale_to_kernel(k_scale),
+        v_scale=_scale_to_kernel(v_scale), interpret=interp)
     return _rows_to_chunk(o, t, h)
 
 

@@ -355,18 +355,34 @@ def gather_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     return pages.reshape((b, p * page) + pool.shape[2:])
 
 
+def dequantize_pool(pool: jax.Array, scale: Optional[jax.Array]
+                    ) -> jax.Array:
+    """int8 pool (n_pages, page, KH, hd) × per-slot scales (n_pages, page,
+    KH) → f32; a ``None`` scale passes the fp pool through unchanged.  The
+    defining semantics of the quantized paged kernels: dequantize the whole
+    pool, then proceed exactly as the fp oracle (the kernels fuse the same
+    multiply in-register per fetched page)."""
+    if scale is None:
+        return pool
+    return pool.astype(jnp.float32) * scale[..., None]
+
+
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_table: jax.Array,
                            cache_len: jax.Array, *, window: int = 0,
                            softcap: Optional[float] = None,
-                           scale: Optional[float] = None) -> jax.Array:
+                           scale: Optional[float] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None) -> jax.Array:
     """Oracle for the page-indirect decode kernel: gather every row's pages
     into a dense (B, P·page, KH, hd) cache, then dense ragged decode.
 
     q: (B, H, hd); k_pool, v_pool: (n_pages, page, KH, hd); block_table:
-    (B, P) int32; cache_len: () or (B,) int32 → (B, H, hd)."""
-    k = gather_pages(k_pool, block_table)
-    v = gather_pages(v_pool, block_table)
+    (B, P) int32; cache_len: () or (B,) int32 → (B, H, hd).
+    ``k_scale``/``v_scale`` (n_pages, page, KH): int8 pools — dequantized
+    up front, the quantized kernels' defining semantics."""
+    k = gather_pages(dequantize_pool(k_pool, k_scale), block_table)
+    v = gather_pages(dequantize_pool(v_pool, v_scale), block_table)
     return decode_attention(q, k, v, cache_len, window=window,
                             softcap=softcap, scale=scale)
 
@@ -417,14 +433,19 @@ def paged_multi_decode_attention(q: jax.Array, k_pool: jax.Array,
                                  v_pool: jax.Array, block_table: jax.Array,
                                  cache_len: jax.Array, *, window: int = 0,
                                  softcap: Optional[float] = None,
-                                 scale: Optional[float] = None) -> jax.Array:
+                                 scale: Optional[float] = None,
+                                 k_scale: Optional[jax.Array] = None,
+                                 v_scale: Optional[jax.Array] = None
+                                 ) -> jax.Array:
     """Oracle for the multi-token page-indirect scoring kernel: gather every
     row's pages into a dense cache, then chunk-causal ragged attention.
 
     q: (B, T, H, hd); k_pool, v_pool: (n_pages, page, KH, hd); block_table:
-    (B, P) int32; cache_len: () or (B,) int32 → (B, T, H, hd)."""
-    k = gather_pages(k_pool, block_table)
-    v = gather_pages(v_pool, block_table)
+    (B, P) int32; cache_len: () or (B,) int32 → (B, T, H, hd).
+    ``k_scale``/``v_scale`` (n_pages, page, KH): int8 pools, dequantized
+    up front."""
+    k = gather_pages(dequantize_pool(k_pool, k_scale), block_table)
+    v = gather_pages(dequantize_pool(v_pool, v_scale), block_table)
     return multi_decode_attention(q, k, v, cache_len, window=window,
                                   softcap=softcap, scale=scale)
 
@@ -437,7 +458,9 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
                             v_pool: jax.Array, block_table: jax.Array,
                             cache_len: jax.Array, *, window: int = 0,
                             softcap: Optional[float] = None,
-                            scale: Optional[float] = None) -> jax.Array:
+                            scale: Optional[float] = None,
+                            k_scale: Optional[jax.Array] = None,
+                            v_scale: Optional[jax.Array] = None) -> jax.Array:
     """Oracle for the chunked-prefill **prefix-append** kernel: a (B, C)
     query chunk whose tokens sit at logical positions
     ``cache_len - C .. cache_len - 1`` attends causally to its own chunk
@@ -459,7 +482,8 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
     → (B, C, H, hd)."""
     return paged_multi_decode_attention(q, k_pool, v_pool, block_table,
                                         cache_len, window=window,
-                                        softcap=softcap, scale=scale)
+                                        softcap=softcap, scale=scale,
+                                        k_scale=k_scale, v_scale=v_scale)
 
 
 # ---------------------------------------------------------------------------

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, BlockSpec, ATTN, MAMBA, MLSTM, SLSTM, HYBRID
-from repro.kernels import ops
+from repro.kernels import kv_quant, ops
 
 Params = Dict[str, Any]
 
@@ -112,13 +112,52 @@ def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int,
 
 
 def init_paged_attn_cache(cfg: ArchConfig, n_pages: int, page_size: int,
-                          dtype) -> Params:
+                          dtype, kv_dtype: Optional[str] = None) -> Params:
     """Paged KV layout: a pool of fixed-size pages shared by all sequences;
     per-row block tables (passed to ``attention`` at decode) resolve logical
-    positions to (page, offset)."""
+    positions to (page, offset).
+
+    ``kv_dtype="int8"`` stores the pools as int8 with per-(token slot, head)
+    symmetric f32 scales alongside (``k_scale``/``v_scale``, one scale per
+    ``hd`` int8 values): the write paths in ``attention`` quantize each
+    incoming token locally and the paged kernels dequant in-register, so no
+    committed slot is ever requantized (see ``kernels/kv_quant.py``)."""
     hd = cfg.resolved_head_dim
     shape = (n_pages, page_size, cfg.num_kv_heads, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kv_dtype is None:
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kv_dtype != "int8":
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r} (None or 'int8')")
+    return {"k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(shape[:3], jnp.float32)}
+
+
+def _paged_kv_write(cache: Params, pages, off, k, v) -> Params:
+    """The ONE paged KV scatter: write token K/V at physical ``(pages,
+    off)`` (shapes broadcast per call site — decode writes one token per
+    row, verify/prefill chunks write (B, S)).  Quantized pools additionally
+    quantize each token over its head dim and scatter the per-slot scales
+    at the same indices — the write is local to its own slots, so committed
+    neighbours keep their bytes (bit-stable chunking + free spec rollback,
+    exactly as the fp pool)."""
+    if "k_scale" in cache:
+        kq, ks = kv_quant.quantize_kv(k)
+        vq, vs = kv_quant.quantize_kv(v)
+        return {"k": cache["k"].at[pages, off].set(kq),
+                "v": cache["v"].at[pages, off].set(vq),
+                "k_scale": cache["k_scale"].at[pages, off].set(ks),
+                "v_scale": cache["v_scale"].at[pages, off].set(vs)}
+    return {"k": cache["k"].at[pages, off].set(k),
+            "v": cache["v"].at[pages, off].set(v)}
+
+
+def _kv_scales(cache: Params) -> dict:
+    """Scale operands for the paged ``ops`` calls ({} for fp pools)."""
+    if "k_scale" in cache:
+        return {"k_scale": cache["k_scale"], "v_scale": cache["v_scale"]}
+    return {}
 
 
 def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
@@ -176,12 +215,11 @@ def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
                 block_table, jnp.clip(pos // page, 0, n_blocks - 1), axis=1)
             pages = jnp.where(valid, pages, n_pages)      # OOB → dropped
             off = pos % page
-            ck = cache["k"].at[pages, off].set(k)
-            cv = cache["v"].at[pages, off].set(v)
-            new_cache = {"k": ck, "v": cv}
+            new_cache = _paged_kv_write(cache, pages, off, k, v)
             o = ops.paged_prefill_attention(
-                q, ck, cv, block_table, idx + s, window=window,
-                softcap=cfg.attn_softcap)
+                q, new_cache["k"], new_cache["v"], block_table, idx + s,
+                window=window, softcap=cfg.attn_softcap,
+                **_kv_scales(new_cache))
         else:
             rows = jnp.arange(b)[:, None]
             max_len = cache["k"].shape[1]
@@ -206,12 +244,11 @@ def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
             page = cache["k"].shape[1]
             pages = jnp.take_along_axis(block_table, pos // page, axis=1)
             off = pos % page
-            ck = cache["k"].at[pages, off].set(k)
-            cv = cache["v"].at[pages, off].set(v)
-            new_cache = {"k": ck, "v": cv}
+            new_cache = _paged_kv_write(cache, pages, off, k, v)
             o = ops.paged_multi_decode_attention(
-                q, ck, cv, block_table, idx + s, window=window,
-                softcap=cfg.attn_softcap)
+                q, new_cache["k"], new_cache["v"], block_table, idx + s,
+                window=window, softcap=cfg.attn_softcap,
+                **_kv_scales(new_cache))
         else:
             rows = jnp.arange(b)[:, None]
             ck = cache["k"].at[rows, pos].set(k)
@@ -234,12 +271,13 @@ def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
             rows_page = jnp.take_along_axis(
                 block_table, (idx // page)[:, None], axis=1)[:, 0]
             off = idx % page
-            ck = cache["k"].at[rows_page, off].set(k[:, 0])
-            cv = cache["v"].at[rows_page, off].set(v[:, 0])
-            new_cache = {"k": ck, "v": cv}
-            o = ops.paged_decode_attention(q[:, 0], ck, cv, block_table,
+            new_cache = _paged_kv_write(cache, rows_page, off,
+                                        k[:, 0], v[:, 0])
+            o = ops.paged_decode_attention(q[:, 0], new_cache["k"],
+                                           new_cache["v"], block_table,
                                            idx + 1, window=window,
-                                           softcap=cfg.attn_softcap)
+                                           softcap=cfg.attn_softcap,
+                                           **_kv_scales(new_cache))
         else:
             if idx.ndim == 0:
                 ck = jax.lax.dynamic_update_slice(cache["k"], k,

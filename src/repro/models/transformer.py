@@ -102,17 +102,24 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Tuple:
 
 
 def init_paged_cache(cfg: ArchConfig, batch: int, n_pages: int,
-                     page_size: int) -> Tuple:
+                     page_size: int, kv_dtype: Optional[str] = None
+                     ) -> Tuple:
     """Paged variant of ``init_cache``: attention KV leaves become page
     pools ``(n_super, n_pages, page, KH, hd)`` shared by every sequence and
     addressed through the ``block_table`` argument of ``decode_step``;
     recurrent-state leaves (O(1) per token — nothing to page) stay per-slot
-    ``(n_super, batch, ...)`` exactly as in the dense cache."""
+    ``(n_super, batch, ...)`` exactly as in the dense cache.
+
+    ``kv_dtype="int8"``: the pools quantize to int8 with per-(token slot,
+    head) scale leaves ``k_scale``/``v_scale`` stacked alongside
+    (``(n_super, n_pages, page, KH)`` f32) — the attention write paths
+    maintain them and the paged kernels dequant in-register."""
     dt = jnp.dtype(cfg.dtype)
 
     def single(spec: BlockSpec):
         if spec.kind == ATTN:
-            return L.init_paged_attn_cache(cfg, n_pages, page_size, dt)
+            return L.init_paged_attn_cache(cfg, n_pages, page_size, dt,
+                                           kv_dtype)
         if spec.kind == MAMBA:
             return L.init_mamba_cache(cfg, batch)
         if spec.kind == MLSTM:
@@ -121,7 +128,7 @@ def init_paged_cache(cfg: ArchConfig, batch: int, n_pages: int,
             return L.init_slstm_cache(cfg, batch)
         if spec.kind == HYBRID:
             return {"attn": L.init_paged_attn_cache(cfg, n_pages, page_size,
-                                                    dt),
+                                                    dt, kv_dtype),
                     "mamba": L.init_mamba_cache(cfg, batch)}
         raise ValueError(spec.kind)
 

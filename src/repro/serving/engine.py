@@ -53,6 +53,13 @@ class EngineConfig:
     #: explicit KV pool size in pages (None → worst-case bound; smaller
     #: values model real capacity pressure — see EngineCoreConfig)
     pool_pages: Optional[int] = None
+    #: KV pool size as a device-byte budget (mutually exclusive with
+    #: pool_pages; the page count follows the kv_dtype page size — see
+    #: EngineCoreConfig.pool_bytes)
+    pool_bytes: Optional[int] = None
+    #: KV page storage: None = fp (model dtype), "int8" = quantized pages
+    #: with per-(token, head) scales, dequantized inside the kernels
+    kv_dtype: Optional[str] = None
     #: overload control: page-pool-aware admission, bounded priority queue,
     #: deadline expiry and priority preemption (None = off, the legacy
     #: admit-whenever-a-slot-frees contract; see serving/admission.py)
@@ -88,6 +95,8 @@ class InferenceEngine:
                              prefill_chunk=self.ec.prefill_chunk,
                              token_budget=self.ec.token_budget,
                              pool_pages=self.ec.pool_pages,
+                             pool_bytes=self.ec.pool_bytes,
+                             kv_dtype=self.ec.kv_dtype,
                              overload=self.ec.overload),
             draft=draft)
         #: (request, reason) pairs dropped by the last overload-controlled

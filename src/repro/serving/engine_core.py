@@ -54,15 +54,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.compile_guard import CompileGuard
-from repro.configs.base import ATTN
+from repro.configs.base import ATTN, HYBRID
 from repro.core import eo_adapter as EO
+from repro.kernels import kv_quant
 from repro.models import transformer as T
 from repro.serving.admission import (ADMITTED, QUEUED, REJECTED,
                                      REASON_EXPIRED, REASON_INFEASIBLE,
                                      REASON_QUEUE_FULL,
                                      AdmissionQueue, OverloadConfig,
                                      QueueEntry)
-from repro.serving.kv_pool import KVPagePool, PrefixCache, TRASH_PAGE
+from repro.serving.kv_pool import (KVPagePool, PrefixCache, TRASH_PAGE,
+                                   page_nbytes)
 from repro.serving.request import Request, scene_key
 
 Params = Dict[str, Any]
@@ -113,6 +115,24 @@ class EngineCoreConfig:
     #: genuinely page-bound, which is what overload control arbitrates.
     #: Must cover at least one slot's pages + the trash page.
     pool_pages: Optional[int] = None
+    #: Explicit KV pool size as a device **byte budget** (paged only,
+    #: mutually exclusive with ``pool_pages``).  The pool gets
+    #: ``pool_bytes // bytes_per_page`` pages, where bytes-per-page is the
+    #: whole stack's cost for one page — K+V pools *and* int8 scale
+    #: buffers (``kv_pool.page_nbytes`` per attention layer).  This is how
+    #: quantization buys capacity rather than just smaller numbers: under
+    #: the same budget ``kv_dtype="int8"`` yields ~``4·hd/(hd+4)``× the
+    #: pages, which admission control can spend on more concurrent
+    #: requests.  Must cover at least one slot's pages + the trash page.
+    pool_bytes: Optional[int] = None
+    #: KV pool element type (paged only).  ``None`` → the model dtype
+    #: (exact — the oracle).  ``"int8"`` → pages quantize per (token slot,
+    #: head) symmetric with f32 scale leaves alongside; the paged Pallas
+    #: kernels dequantize in-register.  Greedy outputs are expected (and
+    #: bench-asserted) to agree with the exact engine on the serving
+    #: workloads, but equality is empirical, not a kernel guarantee —
+    #: divergence is *reported*, never hidden.
+    kv_dtype: Optional[str] = None
     #: Overload control (None = off, the legacy contract: ``admit_many``
     #: admits unconditionally and callers queue in front of the engine).
     #: When set, ``submit_many``/``step`` run page-pool-aware admission
@@ -220,6 +240,16 @@ class EngineCore:
         # the vmap oracle predates paging and steps the dense layout
         self.cache_impl = ("dense" if self.cfg.step_impl == "vmap"
                            else self.cfg.cache_impl)
+
+        if self.cfg.kv_dtype is not None:
+            if self.cfg.kv_dtype != "int8":
+                raise ValueError(f"unknown kv_dtype {self.cfg.kv_dtype!r} "
+                                 "(None or 'int8')")
+            if self.cache_impl != "paged":
+                raise ValueError(
+                    "kv_dtype requires the paged cache: quantization lives "
+                    "in the page pools + paged kernels (dense/vmap engines "
+                    "stay the exact oracle)")
 
         self.draft = draft
         if self.cfg.spec_gamma:
@@ -394,14 +424,30 @@ class EngineCore:
             # refcounted by slot + cache) + `scenes` cache-only prefixes
             self._n_pages = (1 + n_slots * self._pages_per_slot
                              + scenes * self._n_shared_pages)
+            floor = 1 + self._pages_per_slot
             if self.cfg.pool_pages is not None:
-                floor = 1 + self._pages_per_slot
+                if self.cfg.pool_bytes is not None:
+                    raise ValueError("pool_pages and pool_bytes are "
+                                     "mutually exclusive pool-size knobs")
                 if self.cfg.pool_pages < floor:
                     raise ValueError(
                         f"pool_pages {self.cfg.pool_pages} below the "
                         f"single-slot floor {floor} (trash page + one "
                         "slot's worst-case pages)")
                 self._n_pages = self.cfg.pool_pages
+            elif self.cfg.pool_bytes is not None:
+                # one page's device cost across the whole stack (every
+                # attention layer's K+V pools, scale buffers included) —
+                # the single accounting rule shared with kv_stats()
+                per_page = self._page_nbytes_stack()
+                n = self.cfg.pool_bytes // per_page
+                if n < floor:
+                    raise ValueError(
+                        f"pool_bytes {self.cfg.pool_bytes} buys only {n} "
+                        f"pages at {per_page} B/page, below the "
+                        f"single-slot floor {floor} (trash page + one "
+                        "slot's worst-case pages)")
+                self._n_pages = int(n)
             self._pool = KVPagePool(self._n_pages, ps)
             self._prefix = PrefixCache(self._pool,
                                        capacity=n_slots + scenes)
@@ -430,6 +476,16 @@ class EngineCore:
                         resh = pref_leaf.reshape(
                             (ns, kb * n_shared, ps) + pref_leaf.shape[3:])
                         return pool_leaf.at[:, pages].set(resh)
+                    if "k_scale" in pool:
+                        # quantized pool, exact dense prefix cache: quantize
+                        # at scatter time so the shared pages carry the same
+                        # (values, scales) layout every other write path
+                        # maintains.  Scale leaves drop the trailing hd axis,
+                        # which `leaf` handles via shape[3:].
+                        kq, ks = kv_quant.quantize_kv(pref["k"])
+                        vq, vs = kv_quant.quantize_kv(pref["v"])
+                        pref = {"k": kq, "v": vq,
+                                "k_scale": ks, "v_scale": vs}
                     return jax.tree.map(leaf, pool, pref)
                 return T.map_cache_kinds(cfg, [slot_cache, prefix_cache],
                                          kv=kv, state=lambda sl, pr: sl)
@@ -743,6 +799,8 @@ class EngineCore:
         }
         if self.cfg.pool_pages is not None and self.cache_impl != "paged":
             raise ValueError("pool_pages only applies to the paged cache")
+        if self.cfg.pool_bytes is not None and self.cache_impl != "paged":
+            raise ValueError("pool_bytes only applies to the paged cache")
         # -- overload control (None = legacy admit-unconditionally) ---------
         self._admq: Optional[AdmissionQueue] = None
         if self.cfg.overload is not None:
@@ -843,7 +901,8 @@ class EngineCore:
             cfg = self.tier.cfg
             if self.cache_impl == "paged":
                 self._slot_cache = T.init_paged_cache(
-                    cfg, self.cfg.slots, self._n_pages, self._page_size)
+                    cfg, self.cfg.slots, self._n_pages, self._page_size,
+                    kv_dtype=self.cfg.kv_dtype)
             else:
                 self._slot_cache = T.init_cache(cfg, self.cfg.slots,
                                                 self._slot_max_len)
@@ -862,6 +921,21 @@ class EngineCore:
         if self._bt_dev is None:
             self._bt_dev = jnp.asarray(self._bt_np)
         return self._bt_dev
+
+    def _page_nbytes_stack(self) -> int:
+        """Device bytes ONE pool page costs across the whole stack: the
+        per-layer ``kv_pool.page_nbytes`` (K+V pools + int8 scale buffers)
+        times the number of attention-KV-carrying layers (ATTN and the
+        attention half of HYBRID supers).  ``pool_bytes`` sizing divides by
+        this; ``kv_stats`` asserts the live cache agrees with it."""
+        cfg = self.tier.cfg
+        n_kv = (cfg.n_super
+                * sum(1 for s in cfg.block_pattern
+                      if s.kind in (ATTN, HYBRID)))
+        return n_kv * page_nbytes(
+            self._page_size, cfg.num_kv_heads, cfg.resolved_head_dim,
+            kv_dtype=self.cfg.kv_dtype,
+            fp_bytes=jnp.dtype(cfg.dtype).itemsize)
 
     def _note_prefill(self, kind: str, tokens: int) -> None:
         """The ONE prefill-token accounting hook: every path that runs
@@ -2038,15 +2112,25 @@ class EngineCore:
         the reserved-page equivalent).  ``prefix_hit_rate`` is over all
         slot-path admissions so far."""
         self._ensure_slot_tables()
-        kv_bytes = []
-        T.map_cache_kinds(
-            self.tier.cfg, [self._slot_cache],
-            kv=lambda t: kv_bytes.append(sum(
-                x.size * x.dtype.itemsize for x in jax.tree.leaves(t))),
-            state=lambda t: None)
+        kv_bytes, scale_bytes = [], []
+
+        def _kv(t):
+            kv_bytes.append(sum(
+                x.size * x.dtype.itemsize for x in jax.tree.leaves(t)))
+            scale_bytes.append(sum(
+                v.size * v.dtype.itemsize for k_, v in t.items()
+                if k_.endswith("_scale")))
+
+        T.map_cache_kinds(self.tier.cfg, [self._slot_cache],
+                          kv=_kv, state=lambda t: None)
         total = sum(kv_bytes)
         out: Dict[str, Any] = {"cache_impl": self.cache_impl,
-                               "kv_bytes_total": int(total)}
+                               "kv_bytes_total": int(total),
+                               "kv_dtype": self.cfg.kv_dtype,
+                               #: f32 scale buffers riding the int8 pools —
+                               #: already included in kv_bytes_total; broken
+                               #: out so the ≤ 0.55× fp claim is auditable
+                               "kv_scale_bytes": int(sum(scale_bytes))}
         adm = self.stats["prefix_hits"] + self.stats["prefix_misses"]
         out["prefix_hit_rate"] = (self.stats["prefix_hits"] / adm
                                   if adm else 0.0)

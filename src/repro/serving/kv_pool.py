@@ -40,6 +40,25 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 TRASH_PAGE = 0
 
 
+def page_nbytes(page_size: int, kv_heads: int, head_dim: int, *,
+                kv_dtype: Optional[str] = None, fp_bytes: int = 4) -> int:
+    """Device bytes ONE page of ONE attention layer's K+V pools costs,
+    scale buffers included — the single accounting rule capacity planning
+    (``EngineCoreConfig.pool_bytes``) and ``EngineCore.kv_stats`` share.
+
+    fp: ``page·2·KH·hd·fp_bytes``.  int8: one byte per element plus one f32
+    scale per (token slot, head) — ``page·2·KH·(hd + 4)`` — so the same
+    byte budget buys ``≈ fp_bytes·hd/(hd+4)`` × more pages (3.56× for
+    hd = 32 over fp32), which is exactly the admission headroom overload
+    control gets to spend."""
+    per_tok = 2 * kv_heads * head_dim
+    if kv_dtype is None:
+        return page_size * per_tok * fp_bytes
+    if kv_dtype != "int8":
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r} (None or 'int8')")
+    return page_size * (per_tok + 2 * kv_heads * 4)
+
+
 class KVPagePool:
     """Free-list page allocator with reference counts.
 

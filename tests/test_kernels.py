@@ -479,3 +479,118 @@ def test_ssm_state_continuation():
                                rtol=1e-3, atol=1e-3)
     np.testing.assert_allclose(np.asarray(f_full), np.asarray(f2),
                                rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# quantized paged KV: int8 pools + in-kernel dequant, via the strategy factory
+# ---------------------------------------------------------------------------
+
+from repro.kernels import kv_quant  # noqa: E402
+
+
+def _quant_operands(s, kh, hd, page, q_len, seed=0):
+    """Shared paged-cache fixture for the quantized parity sweep: fp pools,
+    aliased shared-prefix block tables, and ragged lengths hitting the
+    empty row, a row shorter than the chunk, the chunk-only row and the
+    full row."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    clen = jnp.asarray([0, max(q_len - 1, 1), q_len, s], jnp.int32)
+    b = clen.shape[0]
+    n_logical = s // page
+    n_pages = 1 + 2 + b * n_logical
+    kp = _rand(k1, (n_pages, page, kh, hd), jnp.float32)
+    vp = _rand(k2, (n_pages, page, kh, hd), jnp.float32)
+    bt = jnp.asarray(_block_tables(np.random.RandomState(seed), b,
+                                   n_logical, n_pages, n_shared=2))
+    return kp, vp, bt, clen, b, k3
+
+
+def test_kv_quant_roundtrip():
+    """quantize→dequantize stays within the per-element noise bound
+    (amax/254 per row) and all-zero vectors round-trip exactly."""
+    x = _rand(KEY, (5, 4, 2, 32), jnp.float32)
+    q, scale = kv_quant.quantize_kv(x)
+    assert q.dtype == jnp.int8 and scale.dtype == jnp.float32
+    back = kv_quant.dequantize_kv(q, scale)
+    amax = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+    assert np.all(np.abs(np.asarray(back - x))
+                  < amax / (2 * kv_quant.Q_MAX) + 1e-7)
+    zq, zs = kv_quant.quantize_kv(jnp.zeros((3, 8)))
+    assert np.all(np.asarray(zq) == 0) and np.all(np.asarray(zs) == 0)
+    np.testing.assert_array_equal(np.asarray(kv_quant.dequantize_kv(zq, zs)),
+                                  0.0)
+
+
+def test_kv_strategy_factory():
+    with pytest.raises(ValueError):
+        kv_quant.get_strategy("fp8")
+    with pytest.raises(ValueError):
+        kv_quant.for_kv_dtype("int4")
+    assert kv_quant.for_kv_dtype(None).name == "exact"
+    assert kv_quant.for_kv_dtype("int8").name == "int8"
+    exact = kv_quant.get_strategy("exact")
+    pools = exact.make_pools(jnp.ones((2, 4, 1, 8)), jnp.ones((2, 4, 1, 8)))
+    assert set(pools) == {"k", "v"} and exact.scale_kwargs(pools) == {}
+
+
+@pytest.mark.kernel_parity
+@pytest.mark.parametrize("strategy", ["exact", "int8"])
+@pytest.mark.parametrize("which,q_len,window", [
+    ("decode", 1, 0),            # single-token decode
+    ("decode", 1, 24),           # + sliding window
+    ("multi", 3, 0),             # speculative verify chunk (γ+1 = 3)
+    ("multi", 1, 0),             # γ = 0 degenerate chunk
+    ("prefill", 8, 0),           # full prefill chunk (q_blk 4)
+    ("prefill", 6, 24),          # ragged chunk + sliding window
+])
+def test_paged_kernel_strategy_parity(strategy, which, q_len, window):
+    """Every paged kernel × every KV strategy, two bounds per case:
+
+    - kernel vs the strategy's OWN oracle (tight ``tol_self`` — the Pallas
+      body computes the same dequantized math in-register);
+    - strategy oracle vs the exact-fp oracle (``tol_exact`` — the int8
+      quantization-noise budget; 0 for the exact strategy).
+    """
+    st = kv_quant.get_strategy(strategy)
+    s, h, kh, hd, page = 64, 4, 2, 32, 8
+    kp, vp, bt, clen, b, kq = _quant_operands(s, kh, hd, page, q_len)
+    pools = st.make_pools(kp, vp)
+    if which == "decode":
+        q = _rand(kq, (b, h, hd), jnp.float32)
+        fn = ops.paged_decode_attention
+    elif which == "multi":
+        q = _rand(kq, (b, q_len, h, hd), jnp.float32)
+        fn = ops.paged_multi_decode_attention
+    else:
+        q = _rand(kq, (b, q_len, h, hd), jnp.float32)
+        fn = lambda *a, **kw: ops.paged_prefill_attention(*a, q_blk=4, **kw)
+    kw = dict(window=window, **st.scale_kwargs(pools))
+    got = fn(q, pools["k"], pools["v"], bt, clen,
+             impl="pallas_interpret", **kw)
+    own = st.oracle(which, q, pools, bt, clen, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(own),
+                               rtol=st.tol_self, atol=st.tol_self)
+    exact = kv_quant.get_strategy("exact")
+    want = exact.oracle(which, q, exact.make_pools(kp, vp), bt, clen,
+                        window=window)
+    np.testing.assert_allclose(np.asarray(own), np.asarray(want),
+                               rtol=st.tol_exact + 1e-6,
+                               atol=st.tol_exact + 1e-6)
+    assert np.all(np.asarray(got)[0] == 0)      # empty row → exact zeros
+
+
+@pytest.mark.kernel_parity
+def test_paged_decode_int8_zero_scale_rows():
+    """Pages quantized from all-zero KV carry scale 0: the kernel's
+    dequantized contribution is exactly 0·score, so outputs are finite and
+    the all-zero-cache row attends to nothing but still normalizes."""
+    s, kh, hd, page = 32, 2, 16, 8
+    kp, vp, bt, clen, b, kq = _quant_operands(s, kh, hd, page, 1, seed=3)
+    pools = kv_quant.quantize_pool(jnp.zeros_like(kp), jnp.zeros_like(vp))
+    q = _rand(kq, (b, 4, hd), jnp.float32)
+    got = ops.paged_decode_attention(q, pools["k"], pools["v"], bt, clen,
+                                     k_scale=pools["k_scale"],
+                                     v_scale=pools["v_scale"],
+                                     impl="pallas_interpret")
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_array_equal(np.asarray(got), 0.0)

@@ -25,7 +25,7 @@ from repro.data import synthetic
 from repro.models import transformer as T
 from repro.serving import (EngineConfig, EngineCore, EngineCoreConfig,
                            InferenceEngine, KVPagePool, Request)
-from repro.serving.kv_pool import PrefixCache, TRASH_PAGE
+from repro.serving.kv_pool import PrefixCache, TRASH_PAGE, page_nbytes
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +137,8 @@ def test_pool_state_machine_hypothesis():
     run()
 
 
-def test_overload_state_machine_hypothesis():
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_overload_state_machine_hypothesis(kv_dtype):
     """Randomised admit/preempt/re-admit/reject/finish interleavings over
     the pool + prefix cache, following the overload layer's
     check-then-commit discipline (ISSUE 7): an admission runs only when the
@@ -146,17 +147,25 @@ def test_overload_state_machine_hypothesis():
     (private pages freed, prefix released, scene parked for re-admission).
     After every action: pages_in_use == private + shared, per-scene users
     match the model, shared pages hold 1 + users references, and the trash
-    page is never allocated."""
+    page is never allocated.
+
+    The pool is sized from ONE device-byte budget through
+    ``page_nbytes(kv_dtype=...)`` — the int8 variant runs the same machine
+    on the ~3.5× page count the same bytes buy, which is exactly the extra
+    headroom the overload layer's admission probe sees in production."""
     hyp = pytest.importorskip("hypothesis")
     st = pytest.importorskip("hypothesis.strategies")
     PRIV, SHARED, SLOTS, CAP = 2, 3, 3, 3
+    budget = 17 * page_nbytes(4, 2, 32)            # 17 fp pages' worth
+    n_pages = budget // page_nbytes(4, 2, 32, kv_dtype=kv_dtype)
+    assert n_pages == 17 if kv_dtype is None else n_pages >= 2 * 17
 
     @hyp.given(st.lists(st.tuples(
         st.sampled_from(["admit", "preempt", "readmit", "finish"]),
         st.integers(0, 11)), max_size=80))
     @hyp.settings(deadline=None, max_examples=60)
     def run(ops):
-        pool = KVPagePool(n_pages=17, page_size=4)
+        pool = KVPagePool(n_pages=n_pages, page_size=4)
         cache = PrefixCache(pool, capacity=CAP)
         active = []                             # (scene, private_pages)
         parked = []                             # queued / preempted scenes
@@ -463,3 +472,24 @@ def test_shared_core_keyed_by_config_value(sat_system):
     other = shared_core(tier, EO.EOAdapterConfig(grid=2, image_size=32))
     assert other is not core1
     assert shared_core(tier, EO.EOAdapterConfig()) is core1  # still resident
+
+
+def test_admission_headroom_scales_with_kv_dtype(sat_system):
+    """Satellite check for the int8 pool: under ONE ``pool_bytes`` budget
+    the admission probe (``page_demand`` against the pool's free pages)
+    sees ≥ 2× the admissible requests on the int8 engine — per-request
+    page demand is dtype-independent (pages are the unit), the budget just
+    buys ~3.5× the pages."""
+    params, cfg, ac, data = sat_system
+    mk = lambda dt, pb=None: EngineCore(
+        TierModel(params, cfg), ac,
+        EngineCoreConfig(slots=8, answer_vocab=9, pool_bytes=pb,
+                         kv_dtype=dt))
+    budget = mk(None)._page_nbytes_stack() * 24     # a 24-fp-page budget
+    cores = {dt: mk(dt, budget) for dt in (None, "int8")}
+    req = Request(task="det", image=data["images"][0], prompt=0,
+                  scene_id="probe")
+    demand = {dt: c.page_demand(req) for dt, c in cores.items()}
+    assert demand[None] == demand["int8"]           # pages, not bytes
+    cap = {dt: c._pool.free_pages // demand[dt] for dt, c in cores.items()}
+    assert cap["int8"] >= 2 * cap[None] >= 2, cap
