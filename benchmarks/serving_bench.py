@@ -97,6 +97,7 @@ from repro.core.cascade import TierModel
 from repro.data import synthetic
 from repro.serving.engine_core import EngineCore, EngineCoreConfig
 from repro.serving.request import Request
+from repro.serving.sharded import make_engine_core
 
 
 def _request_stream(ac: EO.EOAdapterConfig, n: int, det_frac: float,
@@ -283,18 +284,19 @@ def _fanout_stream(ac: EO.EOAdapterConfig, scenes: int, fanout: int,
 
 def bench_fanout(cache_impl: str, *, slots: int, scenes: int, fanout: int,
                  seed: int, kv_dtype: str = None,
-                 tier: TierModel = None) -> Dict[str, object]:
+                 tier: TierModel = None, mesh=None) -> Dict[str, object]:
     ac = EO.EOAdapterConfig()
     if tier is None:
         sat_cfg, _ = proxy_pair("small")
         params = EO.init_adapter(jax.random.PRNGKey(seed), sat_cfg, ac)
         tier = TierModel(params, sat_cfg)
-    core = EngineCore(tier, ac,
-                      EngineCoreConfig(slots=slots, answer_vocab=9,
-                                       cache_impl=cache_impl,
-                                       kv_dtype=(kv_dtype
-                                                 if cache_impl == "paged"
-                                                 else None)))
+    core = make_engine_core(
+        tier, ac,
+        EngineCoreConfig(slots=slots, answer_vocab=9,
+                         cache_impl=cache_impl, mesh=mesh,
+                         kv_dtype=(kv_dtype
+                                   if cache_impl == "paged"
+                                   else None)))
     queue = list(reversed(_fanout_stream(ac, scenes, fanout, seed)))
     n_req = len(queue)
     core.warmup()
@@ -332,6 +334,13 @@ def bench_fanout(cache_impl: str, *, slots: int, scenes: int, fanout: int,
             / max(core.stats["prefix_hits"]
                   + core.stats["prefix_misses"], 1), 4),
         "kv_bytes_per_slot": kv["kv_bytes_per_slot"],
+        # mesh engines additionally report the per-DEVICE footprint (the
+        # TP shard's cut, from the full-occupancy sample) and the DP
+        # router's end-of-run per-shard breakdown (final routed totals)
+        **{k: kv[k] for k in ("kv_bytes_per_slot_device", "mesh")
+           if k in kv},
+        **({"per_shard": core.kv_stats()["per_shard"]}
+           if mesh is not None and hasattr(core, "shards") else {}),
         **_latency_stats(core),
         # token streams in request-creation order (ids are monotonic per
         # run): compared across impls, then dropped from the JSON record
@@ -1122,6 +1131,56 @@ def bench_quantized(*, slots: int, scenes: int, fanout: int, seed: int,
     return rec
 
 
+def bench_sharded(*, dp: int, tp: int, slots: int, scenes: int,
+                  fanout: int, seed: int,
+                  kv_dtype: str = None) -> Dict[str, object]:
+    """The tentpole record: the SAME scene-fan-out stream served by the
+    single-device paged engine and by the mesh engine at dp×tp — outputs
+    must be token-for-token equal, per-device KV bytes per slot must shrink
+    by the attention-sharding degree, and neither engine may recompile
+    after warmup (``--check-compiles`` gates on the guard verdict).
+
+    Host-mesh caveat: dp×tp "devices" here are XLA host-platform slices of
+    one CPU, so tokens/s is a *correctness-under-sharding* probe (collective
+    overhead at toy scale), not a speedup claim — the per-device footprint
+    and the routing/occupancy numbers are the transferable results."""
+    from repro.launch.mesh import make_host_mesh
+
+    n_dev = len(jax.devices())
+    if n_dev < dp * tp:
+        raise SystemExit(
+            f"--mesh dp{dp},tp{tp} needs {dp * tp} devices, have {n_dev} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            "before process start for a host-mesh run)")
+    sat_cfg, _ = proxy_pair("small")
+    ac = EO.EOAdapterConfig()
+    params = EO.init_adapter(jax.random.PRNGKey(seed), sat_cfg, ac)
+    tier = TierModel(params, sat_cfg)
+
+    single = bench_fanout("paged", slots=slots, scenes=scenes,
+                          fanout=fanout, seed=seed, kv_dtype=kv_dtype,
+                          tier=tier)
+    mesh = make_host_mesh(model=tp, data=dp)
+    sharded = bench_fanout("paged", slots=slots, scenes=scenes,
+                           fanout=fanout, seed=seed, kv_dtype=kv_dtype,
+                           tier=tier, mesh=mesh)
+    outputs_match = single.pop("outputs") == sharded.pop("outputs")
+
+    return {
+        "mesh": {"data": dp, "model": tp},
+        "slots": slots, "scenes": scenes, "fanout": fanout,
+        "kv_dtype": kv_dtype,
+        "single": single, "sharded": sharded,
+        "outputs_match": outputs_match,
+        "tokens_per_s_ratio": round(
+            sharded["answer_tokens_per_s"]
+            / max(single["answer_tokens_per_s"], 1e-9), 3),
+        "kv_bytes_per_slot_single": single["kv_bytes_per_slot"],
+        "kv_bytes_per_slot_device": sharded.get("kv_bytes_per_slot_device",
+                                                sharded["kv_bytes_per_slot"]),
+    }
+
+
 def _collect_recompiles(obj, path=""):
     """Every ``steady_recompiles`` counter anywhere in the record tree —
     one per engine each workload drove — as (path, count) pairs."""
@@ -1178,7 +1237,12 @@ BACKENDS = ("cpu", "cpu-interpret", "gpu", "tpu")
 #: the interpret leg is orders of magnitude slower than compiled CPU, so
 #: the matrix runs it at smoke scale on the kernel-heavy workloads only
 INTERPRET_WORKLOADS = "impl,fanout,quantized"
-WORKLOADS = ("impl", "fanout", "spec", "chunked", "overload", "quantized")
+#: "sharded" is NOT in the default "all" set: it needs dp×tp devices
+#: (XLA_FLAGS host-platform slices on CPU) — run it via --mesh or an
+#: explicit --workloads sharded
+WORKLOADS = ("impl", "fanout", "spec", "chunked", "overload", "quantized",
+             "sharded")
+DEFAULT_WORKLOADS = tuple(w for w in WORKLOADS if w != "sharded")
 
 
 def _backend_available(backend: str) -> bool:
@@ -1299,9 +1363,16 @@ def main(argv=None) -> int:
                     help="run one leg per available backend (cpu / "
                          "cpu-interpret / gpu / tpu), sequentially, folding "
                          "all records into one backend-keyed history")
+    ap.add_argument("--mesh", default=None, metavar="dp2,tp2",
+                    help="device-mesh shape for the sharded workload "
+                         "(launch.mesh.parse_mesh_shape syntax); implies "
+                         "--workloads sharded unless workloads are given "
+                         "explicitly")
     ap.add_argument("--workloads", default="all",
                     help="comma list of workloads to run "
-                         f"({','.join(WORKLOADS)}; default all)")
+                         f"({','.join(WORKLOADS)}; default all minus "
+                         "sharded, which needs a multi-device process — "
+                         "see --mesh)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
@@ -1316,8 +1387,11 @@ def main(argv=None) -> int:
         from repro.kernels import ops
         ops.set_default_impl("pallas_interpret")
 
-    wl = (set(WORKLOADS) if args.workloads == "all"
-          else {w.strip() for w in args.workloads.split(",") if w.strip()})
+    if args.workloads == "all":
+        wl = ({"sharded"} if args.mesh is not None
+              else set(DEFAULT_WORKLOADS))
+    else:
+        wl = {w.strip() for w in args.workloads.split(",") if w.strip()}
     unknown = wl - set(WORKLOADS)
     if unknown:
         raise SystemExit(f"unknown workloads: {sorted(unknown)}")
@@ -1339,7 +1413,7 @@ def main(argv=None) -> int:
                    "scenes": args.scenes, "fanout": args.fanout,
                    "fanout_slots": args.fanout_slots,
                    "backend": backend, "jax_backend": jax.default_backend(),
-                   "kv_dtype": args.kv_dtype,
+                   "kv_dtype": args.kv_dtype, "mesh": args.mesh,
                    "workloads": sorted(wl), "smoke": args.smoke},
     }
 
@@ -1492,6 +1566,32 @@ def main(argv=None) -> int:
         matches.append(quant["outputs_match"] and quant["bytes_ratio_ok"]
                        and quant["capacity_up"])
         rec["quantized"] = quant
+
+    if "sharded" in wl:
+        # -- sharded serving: TP attention + DP slot split on a mesh -------
+        from repro.launch.mesh import parse_mesh_shape
+        dp, tp = parse_mesh_shape(args.mesh or "dp2,tp2")
+        sharded = bench_sharded(dp=dp, tp=tp, slots=args.fanout_slots,
+                                scenes=args.scenes, fanout=args.fanout,
+                                seed=args.seed, kv_dtype=args.kv_dtype)
+        sh = sharded["sharded"]
+        print(f"[sharded dp{dp}×tp{tp}] "
+              f"{sh['answer_tokens_per_s']:9.1f} tok/s vs "
+              f"{sharded['single']['answer_tokens_per_s']:9.1f} "
+              f"single-device ({sharded['tokens_per_s_ratio']}× on a "
+              f"host mesh)  kv/slot/device "
+              f"{sharded['kv_bytes_per_slot_device']} B vs "
+              f"{sharded['kv_bytes_per_slot_single']} B single")
+        if "per_shard" in sh:
+            for row in sh["per_shard"]:
+                print(f"          shard {row['shard']}: "
+                      f"slots {row['slots']} (@{row['slot_offset']})  "
+                      f"routed {row['routed']}  "
+                      f"pages used {row.get('pages_used', 0)}")
+        print(f"sharded outputs == single-device: "
+              f"{sharded['outputs_match']}")
+        matches.append(sharded["outputs_match"])
+        rec["sharded"] = sharded
 
     recompiles = _collect_recompiles(rec)
     total_recompiles = sum(v for _, v in recompiles)

@@ -8,10 +8,19 @@
   issued eagerly, letting XLA's latency-hiding scheduler overlap each
   chunk's all-reduce with the backward compute that produces the next —
   the standard bucketed-overlap pattern expressed jax-natively.
+- ``tp_context`` + ``tp_attn_all_reduce`` / ``tp_mlp_all_reduce``: the
+  serving engine's tensor-parallel hooks.  ``models/layers.py`` calls the
+  all-reduce helpers unconditionally after its attention / MLP output
+  projections; outside a ``tp_context`` they are identity (the
+  single-device engine stays byte-for-byte untouched), and inside one they
+  psum partial outputs over the model axis — but only for the sublayer
+  kinds the context marks as actually head-/ffn-sharded, so a replicated
+  sublayer is never multiplied by the TP degree.
 """
 from __future__ import annotations
 
-from typing import Any, List
+import contextlib
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +28,49 @@ import jax.numpy as jnp
 from repro.distributed import compat
 
 Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Serving tensor-parallel context
+# ---------------------------------------------------------------------------
+
+_TP_AXIS: Optional[str] = None
+_TP_ATTN: bool = False
+_TP_MLP: bool = False
+
+
+@contextlib.contextmanager
+def tp_context(axis: str, *, attn: bool = False, mlp: bool = False):
+    """Arm the TP all-reduce hooks while a sharded step function traces.
+
+    Trace-time state, not run-time: enter this around the model call inside
+    a ``shard_map`` body so the psums are staged into the jaxpr.  ``attn`` /
+    ``mlp`` flag which sublayers hold sharded parameters (partial-sum
+    outputs); the hooks stay identity for the rest.
+    """
+    global _TP_AXIS, _TP_ATTN, _TP_MLP
+    prev = (_TP_AXIS, _TP_ATTN, _TP_MLP)
+    _TP_AXIS, _TP_ATTN, _TP_MLP = axis, attn, mlp
+    try:
+        yield
+    finally:
+        _TP_AXIS, _TP_ATTN, _TP_MLP = prev
+
+
+def tp_attn_all_reduce(x: jax.Array) -> jax.Array:
+    """Sum attention-output partials over the model axis (identity when no
+    ``tp_context`` is active or attention is not head-sharded)."""
+    if _TP_AXIS is not None and _TP_ATTN:
+        return jax.lax.psum(x, _TP_AXIS)
+    return x
+
+
+def tp_mlp_all_reduce(x: jax.Array) -> jax.Array:
+    """Sum MLP-output partials over the model axis (identity when no
+    ``tp_context`` is active or the FFN is not sharded)."""
+    if _TP_AXIS is not None and _TP_MLP:
+        return jax.lax.psum(x, _TP_AXIS)
+    return x
 
 
 def reduce_scatter_grads(grads: Params, axis: str) -> Params:

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ATTN, ArchConfig
 from repro.configs.shapes import ShapeSpec
 
 Params = Any
@@ -222,6 +222,105 @@ def cache_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec,
         return P(*([None] * nd))
 
     return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# Serving tensor-parallel plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TPServingPlan:
+    """What the serving engine shards over the mesh's "model" axis.
+
+    ``attn``: q/k/v/o projections and the paged KV pools split by
+    (KV-)heads — requires BOTH head counts divisible by ``tp`` (dividing
+    only q-heads would break the contiguous-block GQA head→group mapping)
+    and a pure-attention block pattern (mLSTM reuses the ``wq``/``wk``/
+    ``wv`` leaf names at the same rank, so kind-gating, not name-matching,
+    decides).  ``mlp``: dense-FFN hidden dim split — requires ``d_ff``
+    divisible and no MoE blocks (MoE has its own EP/TP rules and does not
+    route through ``layers.mlp``'s all-reduce hook).  ``cfg_local`` is the
+    per-device config every ``shard_map`` body runs the model with: head
+    counts (and ``d_ff``) divided by ``tp``, with ``head_dim`` pinned to
+    the global value — otherwise ``resolved_head_dim`` (= d_model/heads
+    when unset) would grow by ``tp`` after the division.
+    """
+    tp: int
+    attn: bool
+    mlp: bool
+    cfg_local: ArchConfig
+
+
+def tp_serving_plan(cfg: ArchConfig, mesh: Mesh) -> TPServingPlan:
+    tp = mesh_axis_size(mesh, "model")
+    all_attn = all(s.kind == ATTN for s in cfg.block_pattern)
+    no_moe = not any(s.moe for s in cfg.block_pattern)
+    attn = (tp > 1 and all_attn and cfg.num_heads % tp == 0
+            and cfg.num_kv_heads % tp == 0)
+    mlp = tp > 1 and all_attn and no_moe and cfg.d_ff > 0 \
+        and cfg.d_ff % tp == 0
+    over: Dict[str, Any] = {}
+    if attn:
+        over.update(head_dim=cfg.resolved_head_dim,
+                    num_heads=cfg.num_heads // tp,
+                    num_kv_heads=cfg.num_kv_heads // tp)
+    if mlp:
+        over.update(d_ff=cfg.d_ff // tp)
+    cfg_local = dataclasses.replace(cfg, **over) if over else cfg
+    return TPServingPlan(tp=tp, attn=attn, mlp=mlp, cfg_local=cfg_local)
+
+
+def serving_param_specs(plan: TPServingPlan, params_shape: Params) -> Params:
+    """Spec tree for the serving backbone params under ``plan``.
+
+    Narrower than :func:`param_specs` on purpose: only the sublayers whose
+    partial outputs the engine all-reduces (``tp_attn_all_reduce`` /
+    ``tp_mlp_all_reduce`` hooks in ``models/layers.py``) may shard —
+    anything else sharded here would produce silently-wrong sums.
+    """
+    def rule(path, leaf) -> P:
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        last = name.rsplit("/", 1)[-1]
+        blocks = name.startswith("blocks")
+
+        def spec(*tail):
+            assert len(tail) + (1 if blocks else 0) == nd, (name, leaf.shape)
+            return P(*(((None,) if blocks else ()) + tail))
+
+        if blocks and "mixer" in name and nd == 3:
+            if plan.attn and last in ("wq", "wk", "wv"):
+                return spec(None, "model")
+            if plan.attn and last == "wo":
+                return spec("model", None)
+        if blocks and "ffn" in name and nd == 3:
+            if plan.mlp and last in ("wg", "wu"):
+                return spec(None, "model")
+            if plan.mlp and last == "wd":
+                return spec("model", None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def paged_kv_leaf_spec(nd: int, sharded: bool) -> P:
+    """Spec for one paged attention-KV pool leaf.
+
+    Pools are ``(n_super, n_pages, page, KH, hd)``; int8 scale leaves ride
+    alongside as ``(n_super, n_pages, page, KH)``.  Head-sharding puts the
+    KH axis over "model" in both — each device's pool holds only its own
+    KV-head shard, which is where the per-device ``kv_bytes_per_slot`` ÷ tp
+    comes from.
+
+    Returned specs never carry trailing ``None`` entries (unmentioned dims
+    are replicated anyway): jit normalizes output shardings to the short
+    form, and the engine's steady-state zero-recompile guarantee needs the
+    ``device_put`` placement of the initial pool to compare EQUAL to the
+    sharding the first sharded step hands back.
+    """
+    if sharded and nd >= 4:
+        return P(None, None, None, "model")
+    return P()
 
 
 # ---------------------------------------------------------------------------

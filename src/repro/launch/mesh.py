@@ -9,7 +9,11 @@ touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
+from typing import Tuple
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,11 +22,58 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 1):
-    """Tiny mesh over the locally-available devices (tests / examples)."""
+def make_host_mesh(model: int = 1, data: int = 0) -> Mesh:
+    """(data, model) mesh over the locally-available devices.
+
+    ``data=0`` means "all remaining devices" (``len(devices) // model``).
+    Validates the shape up front — ``jax.make_mesh`` requires the product to
+    equal the full device count and the old ``max(n // model, 1)`` fallback
+    silently built a 1×1 mesh when ``model`` exceeded the device count, so
+    both failure modes get a clear error here instead.  On CPU, virtual
+    devices come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    set before the first jax import.
+    """
     n = len(jax.devices())
-    data = max(n // model, 1)
-    return jax.make_mesh((data, model), ("data", "model"))
+    if model < 1:
+        raise ValueError(f"model axis size must be >= 1, got {model}")
+    if model > n:
+        raise ValueError(
+            f"model={model} exceeds the {n} available device(s); on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=<N> before "
+            f"the first jax import")
+    if data == 0:
+        data = n // model
+    if data < 1:
+        raise ValueError(f"data axis size must be >= 1, got {data}")
+    if data * model > n:
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {data * model} devices but only "
+            f"{n} are available")
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+def parse_mesh_shape(spec: str) -> Tuple[int, int]:
+    """Parse a ``"dp2,tp4"`` mesh-shape string into ``(data, model)``.
+
+    Parts may appear in either order and either may be omitted (defaults
+    to 1): ``"tp2"`` → (1, 2), ``"dp4"`` → (4, 1).
+    """
+    dp, tp = 1, 1
+    for part in spec.replace("x", ",").split(","):
+        part = part.strip().lower()
+        if not part:
+            continue
+        if part.startswith("dp"):
+            dp = int(part[2:])
+        elif part.startswith("tp"):
+            tp = int(part[2:])
+        else:
+            raise ValueError(
+                f"bad mesh shape {spec!r}: parts must look like dp<N>/tp<N>")
+    if dp < 1 or tp < 1:
+        raise ValueError(f"bad mesh shape {spec!r}: sizes must be >= 1")
+    return dp, tp
 
 
 def data_axes(mesh) -> tuple:

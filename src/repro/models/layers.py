@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, BlockSpec, ATTN, MAMBA, MLSTM, SLSTM, HYBRID
+from repro.distributed import collectives
 from repro.kernels import kv_quant, ops
 
 Params = Dict[str, Any]
@@ -295,7 +296,9 @@ def attention(p: Params, x: jax.Array, *, cfg: ArchConfig, window: int,
                                      softcap=cfg.attn_softcap)
         o = o[:, None]
     o = o.reshape(b, s, cfg.num_heads * hd)
-    return o @ p["wo"], new_cache
+    # identity outside a serving tp_context; psum over "model" when q/o are
+    # head-sharded and this is a per-device partial sum
+    return collectives.tp_attn_all_reduce(o @ p["wo"]), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -312,7 +315,10 @@ def init_mlp(key, cfg: ArchConfig) -> Params:
 
 
 def mlp(p: Params, x: jax.Array) -> jax.Array:
-    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    # identity outside a serving tp_context; psum over "model" when the
+    # hidden dim is sharded and wd's output is a per-device partial sum
+    return collectives.tp_mlp_all_reduce(
+        (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"])
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,10 @@
 """Serving runtime: one executor for Algorithm 1 behind every entry point.
 
 - ``EngineCore``       — jitted fixed-shape step functions + slot table
-                         (paged KV cache with shared scene-prefix pages)
+                         (paged KV cache with shared scene-prefix pages;
+                         tensor-parallel over a mesh's "model" axis)
+- ``ShardedEngineCore``— data-parallel slot-table split over the mesh's
+                         "data" axis (``make_engine_core`` picks)
 - ``KVPagePool``       — ref-counted page allocator + scene prefix cache
 - ``CascadePolicy``    — pluggable exit/offload decisions (SpaceVerse
   progressive confidence and every baseline strategy)
@@ -20,6 +23,8 @@ from repro.serving.admission import (ADMITTED, QUEUED,  # noqa: F401
                                      OverloadConfig)
 from repro.serving.engine_core import (EngineCore, EngineCoreConfig,  # noqa: F401
                                        shared_core)
+from repro.serving.sharded import (ShardedEngineCore,  # noqa: F401
+                                   make_engine_core)
 from repro.serving.policy import (AIRGPolicy, CascadePolicy,  # noqa: F401
                                   GroundOnlyPolicy,
                                   ProgressiveConfidencePolicy,

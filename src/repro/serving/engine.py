@@ -28,8 +28,9 @@ from repro.configs.base import ArchConfig
 from repro.core import eo_adapter as EO
 from repro.core.cascade import TierModel
 from repro.serving.admission import OverloadConfig
-from repro.serving.engine_core import EngineCore, EngineCoreConfig
+from repro.serving.engine_core import EngineCoreConfig
 from repro.serving.request import Request, Response
+from repro.serving.sharded import make_engine_core
 
 
 @dataclasses.dataclass
@@ -60,6 +61,12 @@ class EngineConfig:
     #: KV page storage: None = fp (model dtype), "int8" = quantized pages
     #: with per-(token, head) scales, dequantized inside the kernels
     kv_dtype: Optional[str] = None
+    #: device mesh with ("data", "model") axes (``launch.mesh``) or None =
+    #: single-device.  The "model" axis tensor-parallelises the core's
+    #: step functions (head-sharded projections + per-device KV pools); a
+    #: non-trivial "data" axis splits the slot table into per-shard
+    #: engines behind a scene-affine router (serving/sharded.py)
+    mesh: Optional[object] = None
     #: overload control: page-pool-aware admission, bounded priority queue,
     #: deadline expiry and priority preemption (None = off, the legacy
     #: admit-whenever-a-slot-frees contract; see serving/admission.py)
@@ -83,7 +90,7 @@ class InferenceEngine:
         self.ac = adapter_cfg
         self.ec = engine_cfg or EngineConfig()
         self.tier = tier
-        self.core = EngineCore(
+        self.core = make_engine_core(
             TierModel(params, cfg), adapter_cfg,
             EngineCoreConfig(slots=self.ec.slots,
                              answer_vocab=self.ec.answer_vocab,
@@ -97,6 +104,7 @@ class InferenceEngine:
                              pool_pages=self.ec.pool_pages,
                              pool_bytes=self.ec.pool_bytes,
                              kv_dtype=self.ec.kv_dtype,
+                             mesh=self.ec.mesh,
                              overload=self.ec.overload),
             draft=draft)
         #: (request, reason) pairs dropped by the last overload-controlled

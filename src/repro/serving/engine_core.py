@@ -45,6 +45,7 @@ The KV cache behind the slot table comes in two implementations
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
@@ -52,10 +53,14 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.analysis.compile_guard import CompileGuard
 from repro.configs.base import ATTN, HYBRID
 from repro.core import eo_adapter as EO
+from repro.distributed import collectives as CO
+from repro.distributed import compat
+from repro.distributed import sharding as SH
 from repro.kernels import kv_quant
 from repro.models import transformer as T
 from repro.serving.admission import (ADMITTED, QUEUED, REJECTED,
@@ -133,6 +138,17 @@ class EngineCoreConfig:
     #: workloads, but equality is empirical, not a kernel guarantee —
     #: divergence is *reported*, never hidden.
     kv_dtype: Optional[str] = None
+    #: Device mesh with ``("data", "model")`` axes (``launch.mesh``) or
+    #: None = today's single-device engine, byte-for-byte.  An EngineCore
+    #: handles the TENSOR-parallel "model" axis only: its jitted step
+    #: families run under ``shard_map`` with q/k/v/o projections and the
+    #: paged KV pools head-sharded per ``distributed.sharding``'s serving
+    #: plan, so each device's page pool holds only its KV-head shard
+    #: (``kv_bytes_per_slot`` per device shrinks by the TP degree,
+    #: composing with int8 pages).  Requires the batched paged engine and a
+    #: size-1 "data" axis — data-parallel slot splits are
+    #: ``serving.sharded.ShardedEngineCore``'s job.
+    mesh: Optional[Any] = None
     #: Overload control (None = off, the legacy contract: ``admit_many``
     #: admits unconditionally and callers queue in front of the engine).
     #: When set, ``submit_many``/``step`` run page-pool-aware admission
@@ -301,6 +317,35 @@ class EngineCore:
 
         params, cfg, ac = tier.params, tier.cfg, adapter_cfg
 
+        # -- device mesh / tensor-parallel plan (None = single device) ------
+        self.mesh = self.cfg.mesh
+        plan = None
+        if self.mesh is not None:
+            if self.cfg.step_impl != "batched" or self.cache_impl != "paged":
+                raise ValueError(
+                    "mesh requires the batched paged engine (the vmap/dense "
+                    "oracles stay single-device by design)")
+            if SH.mesh_axis_size(self.mesh, "data") != 1:
+                raise ValueError(
+                    "EngineCore shards tensor-parallel only (the mesh's "
+                    "'data' axis must be 1); data-parallel slot splits are "
+                    "serving.sharded.ShardedEngineCore's job — it runs one "
+                    "EngineCore per data shard on a 1-row sub-mesh")
+            if any(s.kind != ATTN for s in cfg.block_pattern):
+                raise ValueError(
+                    "mesh serving requires attention-only stacks: recurrent "
+                    "prefix-state rows would mix mesh-committed and "
+                    "uncommitted placements across the admit path (and "
+                    "head-sharding has nothing to shard in an SSM state)")
+            plan = SH.tp_serving_plan(cfg, self.mesh)
+        self._tp_plan = plan
+        mesh = self.mesh
+        bb_host = params["backbone"]
+        # config the step bodies run the model with: per-device head counts
+        # under shard_map (head_dim pinned so RoPE is unchanged), identical
+        # to ``cfg`` on a single device
+        mcfg = plan.cfg_local if plan is not None else cfg
+
         def _encode(images, ptok):
             rf = EO.encode_regions(params, ac, images)
             tf = EO.encode_text(params, cfg, ptok)
@@ -340,16 +385,20 @@ class EngineCore:
             new_index = jnp.where(active, slot_index + 1, slot_index)
             return toks, new_logits, new_cache, new_index
 
-        def _slot_step_paged(slot_logits, slot_cache, slot_index, active,
+        def _slot_step_paged(bb, slot_logits, slot_cache, slot_index, active,
                              block_table, *, answer_vocab):
             """Paged all-slot step: identical to ``_slot_step`` except the
             KV write/read resolve through the block table.  Inactive slots'
             block-table rows point at the trash page, so their garbage write
-            can never land in a page another sequence owns."""
+            can never land in a page another sequence owns.  ``bb`` is the
+            backbone param tree — an explicit operand (not a closure) so the
+            sharded engine can feed per-device weight shards through
+            ``shard_map``; single-device engines partial-bind the host copy,
+            which jit treats as the same closure constant as before."""
             a_logits = slot_logits[:, :answer_vocab]
             toks = jnp.argmax(a_logits, axis=-1).astype(jnp.int32)
             new_logits, new_cache = T.decode_step(
-                params["backbone"], cfg, slot_cache, {"tokens": toks[:, None]},
+                bb, mcfg, slot_cache, {"tokens": toks[:, None]},
                 slot_index, block_table=block_table)
             new_index = jnp.where(active, slot_index + 1, slot_index)
             return toks, new_logits, new_cache, new_index
@@ -390,14 +439,24 @@ class EngineCore:
             return sc, sl, si
 
         if self.cfg.step_impl == "vmap":
-            step_fn = _slot_step_vmap
+            self._slot_step_j = jax.jit(_slot_step_vmap,
+                                        static_argnames=("answer_vocab",))
         elif self.cache_impl == "paged":
-            step_fn = _slot_step_paged
+            if mesh is None:
+                self._slot_step_j = jax.jit(
+                    functools.partial(_slot_step_paged, bb_host),
+                    static_argnames=("answer_vocab",))
+            # mesh: jitted under shard_map in the paged section below, once
+            # the pool shape (and hence the cache partition specs) exists
         else:
-            step_fn = _slot_step
-        self._slot_step_j = jax.jit(step_fn,
-                                    static_argnames=("answer_vocab",))
+            self._slot_step_j = jax.jit(_slot_step,
+                                        static_argnames=("answer_vocab",))
         self._slot_scatter_many_j = jax.jit(_slot_scatter_many)
+        #: positional prefix for the model-calling jitted families: the
+        #: sharded engine passes the device-put backbone as an explicit
+        #: shard_map operand; single-device engines keep it partial-bound
+        #: (empty prefix — call sites and HLO stay byte-identical)
+        self._bb_arg: Tuple = ()
 
         # -- paged-cache machinery ------------------------------------------
         if self.cache_impl == "paged":
@@ -465,6 +524,7 @@ class EngineCore:
                 return cache
 
             n_shared = self._n_shared_pages
+            tp_heads = plan.tp if (plan is not None and plan.attn) else 1
 
             def _prefix_scatter(slot_cache, prefix_cache, pages):
                 """Write K scenes' region KV into their shared pages.
@@ -476,6 +536,20 @@ class EngineCore:
                         resh = pref_leaf.reshape(
                             (ns, kb * n_shared, ps) + pref_leaf.shape[3:])
                         return pool_leaf.at[:, pages].set(resh)
+                    if tp_heads > 1:
+                        # the dense prefix prefill runs replicated (full
+                        # heads on every device); each device keeps only its
+                        # contiguous KV-head block for its pool shard.
+                        # Sliced BEFORE quantization — int8 scales are
+                        # per-(token, head), so slicing commutes exactly.
+                        r = jax.lax.axis_index("model")
+
+                        def shard_heads(x):
+                            h = x.shape[3] // tp_heads
+                            return jax.lax.dynamic_slice_in_dim(
+                                x, r * h, h, axis=3)
+
+                        pref = jax.tree.map(shard_heads, pref)
                     if "k_scale" in pool:
                         # quantized pool, exact dense prefix cache: quantize
                         # at scatter time so the shared pages carry the same
@@ -490,8 +564,8 @@ class EngineCore:
                 return T.map_cache_kinds(cfg, [slot_cache, prefix_cache],
                                          kv=kv, state=lambda sl, pr: sl)
 
-            def _paged_admit(slot_logits, slot_cache, slot_index, block_table,
-                             admit_slots, ptoks, prefix_state):
+            def _paged_admit(bb, slot_logits, slot_cache, slot_index,
+                             block_table, admit_slots, ptoks, prefix_state):
                 """Admit K requests whose prefixes are already page-resident:
                 scatter each scene's recurrent-state snapshot into its slot
                 row, then run ONE decode step over the whole table that
@@ -520,7 +594,7 @@ class EngineCore:
                 idx_in = jnp.where(hit, jnp.int32(n_regions), 0)
                 ptok_row = jnp.where(hit, jnp.take(ptoks, src), 0)
                 logits, cache2 = T.decode_step(
-                    params["backbone"], cfg, cache1,
+                    bb, mcfg, cache1,
                     {"tokens": ptok_row[:, None]}, idx_in,
                     block_table=bt_call)
 
@@ -538,9 +612,88 @@ class EngineCore:
                                slot_index).astype(slot_index.dtype)
                 return sl, cache3, si
 
+            # the dense regions-only prefill always runs replicated: its
+            # output is uncommitted and flows into the sharded scatter,
+            # which keeps only the local head block per device
             self._prefill_prefix_j = jax.jit(_prefill_prefix)
-            self._prefix_scatter_j = jax.jit(_prefix_scatter)
-            self._paged_admit_j = jax.jit(_paged_admit)
+            if mesh is None:
+                self._prefix_scatter_j = jax.jit(_prefix_scatter)
+                self._paged_admit_j = jax.jit(
+                    functools.partial(_paged_admit, bb_host))
+            else:
+                # -- sharded jit family -------------------------------------
+                # Everything below runs under ONE shard_map over the
+                # ("data"=1, "model"=tp) mesh: q/k/v/o projections and the
+                # paged KV pools are head-sharded per the serving plan, all
+                # other operands replicated.  The tp_context arms the
+                # all-reduce hooks in models/layers.py at trace time.
+                rep = P()
+                self._rep_sharding = SH.named(mesh, rep)
+                self._bb_specs = SH.serving_param_specs(
+                    plan, jax.eval_shape(lambda: bb_host))
+                self._bb_sharded = jax.device_put(
+                    bb_host, SH.named(mesh, self._bb_specs))
+                self._bb_arg = (self._bb_sharded,)
+                cache_shape = jax.eval_shape(
+                    lambda: T.init_paged_cache(cfg, n_slots, self._n_pages,
+                                               ps,
+                                               kv_dtype=self.cfg.kv_dtype))
+                cache_specs = T.map_cache_kinds(
+                    cfg, [cache_shape],
+                    kv=lambda t: jax.tree.map(
+                        lambda x: SH.paged_kv_leaf_spec(len(x.shape),
+                                                        plan.attn), t),
+                    state=lambda t: jax.tree.map(lambda x: P(), t))
+                self._cache_specs = cache_specs
+
+                def shard_body(fn, kw=None):
+                    kw2 = kw or {}
+
+                    def body(*ops):
+                        with CO.tp_context("model", attn=plan.attn,
+                                           mlp=plan.mlp):
+                            return fn(*ops, **kw2)
+                    return body
+
+                def shard_jit(fn, in_specs, out_specs):
+                    return jax.jit(compat.shard_map(
+                        shard_body(fn), mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs))
+
+                def shard_jit_av(fn, in_specs, out_specs):
+                    """Sharded jit keeping ``answer_vocab`` a static kwarg
+                    (the shard_map is staged per static value inside jit's
+                    trace cache, exactly one compile per vocab)."""
+                    @functools.partial(jax.jit,
+                                       static_argnames=("answer_vocab",))
+                    def call(*args, answer_vocab):
+                        return compat.shard_map(
+                            shard_body(fn, {"answer_vocab": answer_vocab}),
+                            mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)(*args)
+                    return call
+
+                def shard_jit_ml(fn, in_specs, out_specs):
+                    @functools.partial(jax.jit,
+                                       static_argnames=("max_len",))
+                    def call(*args, max_len):
+                        return compat.shard_map(
+                            shard_body(fn, {"max_len": max_len}),
+                            mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)(*args)
+                    return call
+
+                self._slot_step_j = shard_jit_av(
+                    _slot_step_paged,
+                    (self._bb_specs, rep, cache_specs, rep, rep, rep),
+                    (rep, rep, cache_specs, rep))
+                self._prefix_scatter_j = shard_jit(
+                    _prefix_scatter, (cache_specs, rep, rep), cache_specs)
+                self._paged_admit_j = shard_jit(
+                    _paged_admit,
+                    (self._bb_specs, rep, cache_specs, rep, rep, rep, rep,
+                     rep),
+                    (rep, cache_specs, rep))
 
         # -- chunked-prefill machinery (prefill_chunk > 0) ------------------
         if self.cfg.prefill_chunk:
@@ -562,7 +715,7 @@ class EngineCore:
 
             budget = self._token_budget
 
-            def _fused_step(slot_logits, slot_cache, block_table, staging,
+            def _fused_step(bb, slot_logits, slot_cache, block_table, staging,
                             srow, tokens, pos, patch_mask, use_argmax,
                             *, answer_vocab):
                 """ONE token-budget step over a FLAT token batch — the
@@ -592,7 +745,7 @@ class EngineCore:
                 feed = staging[sclamp, jnp.clip(pos, 0, n_regions - 1)]
                 bt_flat = jnp.take(block_table, sclamp, axis=0)
                 logits_f, new_cache = T.prefill_chunk_step(
-                    params["backbone"], cfg, slot_cache,
+                    bb, mcfg, slot_cache,
                     {"tokens": tok[:, None], "patch_embeds": feed[:, None],
                      "patch_mask": patch_mask},
                     pos, block_table=bt_flat,
@@ -605,8 +758,16 @@ class EngineCore:
 
             self._region_embed_j = jax.jit(_region_embed)
             self._staging_scatter_j = jax.jit(_staging_scatter)
-            self._fused_step_j = jax.jit(_fused_step,
-                                         static_argnames=("answer_vocab",))
+            if mesh is None:
+                self._fused_step_j = jax.jit(
+                    functools.partial(_fused_step, bb_host),
+                    static_argnames=("answer_vocab",))
+            else:
+                self._fused_step_j = shard_jit_av(
+                    _fused_step,
+                    (self._bb_specs, rep, cache_specs, rep, rep, rep, rep,
+                     rep, rep, rep),
+                    (rep, rep, rep, cache_specs))
             #: scene → dict(slot, pages, progress, order): region streams
             #: currently being chunk-prefilled (FIFO by ``order``)
             self._streaming: Dict[Any, Dict[str, Any]] = {}
@@ -633,7 +794,7 @@ class EngineCore:
                 return jax.tree.map(lambda f, n: put(f, n, 1),
                                     draft_cache, cache)
 
-            def _verify_accept(chunk, slot_logits, slot_cache, slot_index,
+            def _verify_accept(bb, chunk, slot_logits, slot_cache, slot_index,
                                active, block_table, answer_vocab):
                 """ONE γ+1-token scoring step of the regular model + the
                 longest-accepted-prefix per row, entirely on device.
@@ -647,7 +808,7 @@ class EngineCore:
                 read < idx), and the next chunk overwrites them — no page
                 copies."""
                 logits_all, new_cache = T.verify_step(
-                    params["backbone"], cfg, slot_cache, {"tokens": chunk},
+                    bb, mcfg, slot_cache, {"tokens": chunk},
                     slot_index, block_table=block_table)
                 gtok = jnp.argmax(logits_all[..., :answer_vocab],
                                   axis=-1).astype(jnp.int32)   # (S, γ+1)
@@ -666,7 +827,7 @@ class EngineCore:
                      logits_all[:, :-1, :answer_vocab]], axis=1), axis=-1)
                 return n_commit, new_logits, new_cache, new_index, tok_probs
 
-            def _spec_step(slot_logits, slot_cache, slot_index, active,
+            def _spec_step(bb, slot_logits, slot_cache, slot_index, active,
                            block_table, draft_cache, pending, pending_len,
                            *, answer_vocab):
                 """Full speculative step: γ+1 compact-model draft feeds
@@ -695,12 +856,12 @@ class EngineCore:
                     body, (y1, draft_cache, slot_index), jnp.arange(gam + 1),
                     unroll=gam + 1)
                 chunk = jnp.concatenate([y1[:, None], drafts[:gam].T], 1)
-                out = _verify_accept(chunk, slot_logits, slot_cache,
+                out = _verify_accept(bb, chunk, slot_logits, slot_cache,
                                      slot_index, active, block_table,
                                      answer_vocab)
                 return (chunk,) + out + (draft_cache,)
 
-            def _spec_verify(slot_logits, slot_cache, slot_index, active,
+            def _spec_verify(bb, slot_logits, slot_cache, slot_index, active,
                              block_table, drafts, *, answer_vocab):
                 """Verify-only fast path: every active row's useful drafts
                 arrived piggybacked (the satellite's answer riding the
@@ -711,7 +872,7 @@ class EngineCore:
                 y1 = jnp.argmax(slot_logits[:, :answer_vocab],
                                 axis=-1).astype(jnp.int32)
                 chunk = jnp.concatenate([y1[:, None], drafts], 1)
-                return (chunk,) + _verify_accept(chunk, slot_logits,
+                return (chunk,) + _verify_accept(bb, chunk, slot_logits,
                                                  slot_cache, slot_index,
                                                  active, block_table,
                                                  answer_vocab)
@@ -734,14 +895,36 @@ class EngineCore:
                                                         toks[:, None]}, idx)
                 return dcache
 
-            self._draft_prefill_j = jax.jit(_draft_prefill,
-                                            static_argnames=("max_len",))
-            self._draft_scatter_j = jax.jit(_draft_scatter)
-            self._draft_feed_j = jax.jit(_draft_feed)
-            self._spec_step_j = jax.jit(_spec_step,
-                                        static_argnames=("answer_vocab",))
-            self._spec_verify_j = jax.jit(_spec_verify,
-                                          static_argnames=("answer_vocab",))
+            if mesh is None:
+                self._draft_prefill_j = jax.jit(_draft_prefill,
+                                                static_argnames=("max_len",))
+                self._draft_scatter_j = jax.jit(_draft_scatter)
+                self._draft_feed_j = jax.jit(_draft_feed)
+                self._spec_step_j = jax.jit(
+                    functools.partial(_spec_step, bb_host),
+                    static_argnames=("answer_vocab",))
+                self._spec_verify_j = jax.jit(
+                    functools.partial(_spec_verify, bb_host),
+                    static_argnames=("answer_vocab",))
+            else:
+                # drafter params stay replicated closure constants, but the
+                # draft jits run under the SAME shard_map (all-replicated
+                # specs): the draft cache cycles through the sharded spec
+                # step, so keeping every producer on the mesh stops it
+                # bouncing between committed placements
+                self._draft_prefill_j = shard_jit_ml(_draft_prefill,
+                                                     rep, rep)
+                self._draft_scatter_j = shard_jit(_draft_scatter, rep, rep)
+                self._draft_feed_j = shard_jit(_draft_feed, rep, rep)
+                self._spec_step_j = shard_jit_av(
+                    _spec_step,
+                    (self._bb_specs, rep, cache_specs, rep, rep, rep, rep,
+                     rep, rep),
+                    (rep, rep, rep, cache_specs, rep, rep, rep))
+                self._spec_verify_j = shard_jit_av(
+                    _spec_verify,
+                    (self._bb_specs, rep, cache_specs, rep, rep, rep, rep),
+                    (rep, rep, rep, cache_specs, rep, rep))
 
         # runtime half of spacelint (repro.analysis): warmup() compiles
         # every slot-path executable, then arms the guard — any cache
@@ -903,19 +1086,39 @@ class EngineCore:
                 self._slot_cache = T.init_paged_cache(
                     cfg, self.cfg.slots, self._n_pages, self._page_size,
                     kv_dtype=self.cfg.kv_dtype)
+                if self.mesh is not None:
+                    # commit the pool to its head-sharded layout up front;
+                    # every sharded step keeps it there (logits/index stay
+                    # uncommitted and auto-replicate)
+                    self._slot_cache = jax.device_put(
+                        self._slot_cache,
+                        SH.named(self.mesh, self._cache_specs))
             else:
                 self._slot_cache = T.init_cache(cfg, self.cfg.slots,
                                                 self._slot_max_len)
-            self._slot_logits = jnp.zeros((self.cfg.slots, cfg.vocab_size),
-                                          jnp.float32)
-            self._slot_index = jnp.zeros((self.cfg.slots,), jnp.int32)
+            self._slot_logits = self._commit_rep(
+                jnp.zeros((self.cfg.slots, cfg.vocab_size), jnp.float32))
+            self._slot_index = self._commit_rep(
+                jnp.zeros((self.cfg.slots,), jnp.int32))
         if self.cfg.spec_gamma and self._draft_cache is None:
-            self._draft_cache = T.init_cache(self.draft.cfg, self.cfg.slots,
-                                             self._draft_max_len)
+            self._draft_cache = self._commit_rep(
+                T.init_cache(self.draft.cfg, self.cfg.slots,
+                             self._draft_max_len))
         if self.cfg.prefill_chunk and self._staging is None:
             self._staging = jnp.zeros(
                 (self.cfg.slots, self.ac.n_regions, self.tier.cfg.d_model),
                 jnp.dtype(self.tier.cfg.dtype))
+
+    def _commit_rep(self, x):
+        """Replicate a host-built value onto the mesh (identity when
+        single-device).  Every input of the sharded step families must keep
+        a STABLE placement across the engine's lifetime — warmup compiles
+        one signature per family, and a later uncommitted-vs-committed flip
+        on any operand is a fresh jit cache entry, i.e. a steady-state
+        recompile the CompileGuard flags."""
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, self._rep_sharding)
 
     def _block_table_dev(self) -> jax.Array:
         if self._bt_dev is None:
@@ -996,7 +1199,8 @@ class EngineCore:
                 zs = jnp.zeros((self.cfg.slots,), jnp.int32)
                 self._draft_feed_j(self._draft_cache, zs, zs)
             tb = self._token_budget
-            self._fused_step_j(self._slot_logits, self._slot_cache,
+            self._fused_step_j(*self._bb_arg,
+                               self._slot_logits, self._slot_cache,
                                self._block_table_dev(), self._staging,
                                jnp.full((tb,), self.cfg.slots, jnp.int32),
                                jnp.zeros((tb,), jnp.int32),
@@ -1016,6 +1220,7 @@ class EngineCore:
                     self.tier.cfg, [cache],
                     kv=lambda _t: None, state=lambda t: t)
                 self._paged_admit_j(
+                    *self._bb_arg,
                     self._slot_logits, self._slot_cache, self._slot_index,
                     self._block_table_dev(),
                     jnp.full((k,), self.cfg.slots, jnp.int32),
@@ -1051,17 +1256,20 @@ class EngineCore:
             # block-table rows point at the trash page, outputs discarded)
             pend = jnp.zeros((self.cfg.slots, self.cfg.spec_gamma),
                              jnp.int32)
-            self._spec_step_j(self._slot_logits, self._slot_cache,
+            self._spec_step_j(*self._bb_arg,
+                              self._slot_logits, self._slot_cache,
                               self._slot_index, inactive,
                               self._block_table_dev(), self._draft_cache,
                               pend, jnp.zeros((self.cfg.slots,), jnp.int32),
                               answer_vocab=self.cfg.answer_vocab)
-            self._spec_verify_j(self._slot_logits, self._slot_cache,
+            self._spec_verify_j(*self._bb_arg,
+                                self._slot_logits, self._slot_cache,
                                 self._slot_index, inactive,
                                 self._block_table_dev(), pend,
                                 answer_vocab=self.cfg.answer_vocab)
         else:
-            self._slot_step_j(self._slot_logits, self._slot_cache,
+            self._slot_step_j(*self._bb_arg,
+                              self._slot_logits, self._slot_cache,
                               self._slot_index, inactive,
                               *self._step_args(),
                               answer_vocab=self.cfg.answer_vocab)
@@ -1253,7 +1461,8 @@ class EngineCore:
             lambda *xs: jnp.concatenate(xs, axis=1), *states_pad)
 
         self._slot_logits, self._slot_cache, self._slot_index = \
-            self._paged_admit_j(self._slot_logits, self._slot_cache,
+            self._paged_admit_j(*self._bb_arg,
+                                self._slot_logits, self._slot_cache,
                                 self._slot_index, self._block_table_dev(),
                                 jnp.asarray(admit_slots),
                                 jnp.asarray(ptoks_pad, jnp.int32),
@@ -1658,7 +1867,8 @@ class EngineCore:
         if self._active_dev is None:
             self._active_dev = jnp.asarray([s.active for s in self._slots])
         toks, self._slot_logits, self._slot_cache, self._slot_index = \
-            self._slot_step_j(self._slot_logits, self._slot_cache,
+            self._slot_step_j(*self._bb_arg,
+                              self._slot_logits, self._slot_cache,
                               self._slot_index, self._active_dev,
                               *self._step_args(),
                               answer_vocab=self.cfg.answer_vocab)
@@ -1772,6 +1982,7 @@ class EngineCore:
 
         tok, probs0, self._slot_logits, self._slot_cache = \
             self._fused_step_j(
+                *self._bb_arg,
                 self._slot_logits, self._slot_cache,
                 self._block_table_dev(), self._staging,
                 jnp.asarray(srow), jnp.asarray(tokens), jnp.asarray(pos),
@@ -1857,8 +2068,8 @@ class EngineCore:
         # the host owns the phase machine: rebuild the per-slot index
         # vector for the plain/spec steps that take over once prefill
         # drains (fused steps themselves take positions per flat token)
-        self._slot_index = jnp.asarray(
-            [self._slot_pos(i) for i in range(n_slots)], jnp.int32)
+        self._slot_index = self._commit_rep(jnp.asarray(
+            [self._slot_pos(i) for i in range(n_slots)], jnp.int32))
         if self.cfg.spec_gamma and newly_decoding:
             self._draft_prefill_rows(newly_decoding)
         self._compile_guard.check("_step_chunked")
@@ -1933,14 +2144,15 @@ class EngineCore:
         if verify_only:
             chunk, n_commit, self._slot_logits, self._slot_cache, \
                 self._slot_index, tok_probs = self._spec_verify_j(
-                    *args, jnp.asarray(pend),
+                    *self._bb_arg, *args, jnp.asarray(pend),
                     answer_vocab=self.cfg.answer_vocab)
             sp["verify_only_steps"] += 1
         else:
             chunk, n_commit, self._slot_logits, self._slot_cache, \
                 self._slot_index, tok_probs, self._draft_cache = \
                 self._spec_step_j(
-                    *args, self._draft_cache, jnp.asarray(pend),
+                    *self._bb_arg, *args, self._draft_cache,
+                    jnp.asarray(pend),
                     jnp.asarray(plen), answer_vocab=self.cfg.answer_vocab)
         # spacelint: disable=SL001 (the single deliberate per-step fetch: the verified chunk must reach the host-side scheduler)
         chunk_np = np.asarray(chunk)
@@ -2161,4 +2373,16 @@ class EngineCore:
             out["kv_bytes_per_slot"] = int(page_bytes * pages / len(active))
         else:
             out["kv_bytes_per_slot"] = int(page_bytes * self._pages_per_slot)
+        if self.mesh is not None:
+            # sharded pools: leaf sizes above are GLOBAL (the full logical
+            # pool); each device physically holds 1/tp of the KV heads, so
+            # the per-device footprint — the capacity the tentpole buys —
+            # is the global number over the attention-sharding degree
+            tp_kv = self._tp_plan.tp if self._tp_plan.attn else 1
+            out["mesh"] = {a: int(self.mesh.shape[a])
+                           for a in self.mesh.axis_names}
+            out["tp_kv_shards"] = tp_kv
+            out["kv_bytes_total_device"] = int(total // tp_kv)
+            out["kv_bytes_per_slot_device"] = int(
+                out["kv_bytes_per_slot"] // tp_kv)
         return out

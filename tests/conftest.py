@@ -20,6 +20,24 @@ def pytest_collection_modifyitems(items):
 
 
 @pytest.fixture(scope="session")
+def make_mesh():
+    """Factory for (data=dp, model=tp) host meshes used by the sharded
+    serving tests; skips cleanly when the process has fewer devices than
+    the requested shape (e.g. XLA_FLAGS was already set elsewhere)."""
+    import jax
+
+    from repro.launch.mesh import make_host_mesh
+
+    def _make(dp: int, tp: int):
+        if len(jax.devices()) < dp * tp:
+            pytest.skip(f"needs {dp * tp} devices, "
+                        f"have {len(jax.devices())}")
+        return make_host_mesh(model=tp, data=dp)
+
+    return _make
+
+
+@pytest.fixture(scope="session")
 def tiny_bundle():
     """A minimal trained two-tier system shared across integration tests."""
     from repro.core import pipeline as P
