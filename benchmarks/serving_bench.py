@@ -68,14 +68,20 @@ to aggregate tokens/s, derived from the engine's own request log
 (admit / first-token / done wall-clock milestones per request).
 
 Metrics land in ``BENCH_serving.json`` so CI can smoke the harness and
-future PRs can diff the numbers; each run folds the previous record into a
-bounded ``history`` list so the perf trajectory across PRs is preserved.
-Model weights are randomly initialised — throughput does not depend on
-training, so the bench needs no proxy-training warmup.
+future PRs can diff the numbers.  The file carries schema metadata at the
+top level and a backend-keyed, bounded ``history`` of full run records —
+every run's config rides inside its own entry (schema 2; the old layout
+left the latest run's config at the top level, clobbered by whichever leg
+ran last).  ``--trend`` prints the per-workload tokens/s trajectory from
+that history; ``--regress-guard`` fails the run if a headline metric drops
+>20% against the last comparable same-backend entry.  Model weights are
+randomly initialised — throughput does not depend on training, so the
+bench needs no proxy-training warmup.
 
 Usage:
     PYTHONPATH=src python benchmarks/serving_bench.py            # full run
     PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI smoke
+    PYTHONPATH=src python benchmarks/serving_bench.py --trend    # history
 """
 from __future__ import annotations
 
@@ -1024,34 +1030,36 @@ def bench_overload(*, slots: int, n_req: int, urgent_frac: float,
 # ---------------------------------------------------------------------------
 
 def bench_quantized(*, slots: int, scenes: int, fanout: int, seed: int,
-                    smoke: bool) -> Dict[str, object]:
-    """The int8-vs-fp record: same scene-fan-out stream served by the exact
-    paged engine and the ``kv_dtype="int8"`` engine, plus an admission-
-    capacity probe under ONE shared pool byte budget.
+                    smoke: bool, kv_dtype: str = "int8"
+                    ) -> Dict[str, object]:
+    """The quantized-vs-fp record: same scene-fan-out stream served by the
+    exact paged engine and the ``kv_dtype`` engine (int8 or fp8 e4m3), plus
+    an admission-capacity probe under ONE shared pool byte budget.
 
     Three claims, measured:
 
     1. **footprint** — ``kv_bytes_per_slot`` with scales included must be
        ≤ 0.55× the fp engine's (the honest ratio: f32 scale buffers ride
-       the same pools they describe);
+       the same pools they describe; fp8 pages cost exactly int8 bytes);
     2. **agreement** — greedy outputs are compared token-by-token via
        ``kv_quant.compare_outputs``; divergence (possible in principle —
-       int8 KV noise can flip a near-tie argmax) is reported per request
-       with first-divergence positions, never hidden;
+       quantized KV noise can flip a near-tie argmax) is reported per
+       request with first-divergence positions, never hidden;
     3. **capacity** — two overload-controlled engines sized from the SAME
        ``pool_bytes`` budget (picked so the fp engine is page-bound below
-       its slot count) serve a burst of distinct-scene requests; the int8
-       engine's cheaper pages must admit measurably more concurrent work.
+       its slot count) serve a burst of distinct-scene requests; the
+       quantized engine's cheaper pages must admit measurably more
+       concurrent work.
     """
     from repro.core import pipeline as P
     from repro.kernels import kv_quant
 
     # Agreement is measured on a briefly proxy-trained tier: a random-init
     # model's logits are near-uniform, so ANY perturbation — including the
-    # ~0.4% relative error of int8 KV — flips near-tie argmaxes; a trained
-    # model's greedy margins dominate the quantization noise the way a
-    # deployed checkpoint's do.  The comparison itself stays exact and
-    # per-token either way.
+    # ~0.4% (int8) / ~3.6% (fp8) relative error of quantized KV — flips
+    # near-tie argmaxes; a trained model's greedy margins dominate the
+    # quantization noise the way a deployed checkpoint's do.  The
+    # comparison itself stays exact and per-token either way.
     sat_cfg, _ = proxy_pair("small")
     ac = EO.EOAdapterConfig()
     eo_cfg = synthetic.EOTaskConfig(image_size=ac.image_size, grid=ac.grid,
@@ -1071,15 +1079,15 @@ def bench_quantized(*, slots: int, scenes: int, fanout: int, seed: int,
     tier = TierModel(params, sat_cfg)
 
     per = {}
-    for name, dt in (("fp", None), ("int8", "int8")):
+    for name, dt in (("fp", None), (kv_dtype, kv_dtype)):
         per[name] = bench_fanout("paged", slots=slots, scenes=scenes,
                                  fanout=fanout, seed=seed, kv_dtype=dt,
                                  tier=tier)
     outs = {name: r.pop("outputs") for name, r in per.items()}
     # fan-out outputs are creation-ordered lists: key by position
     agreement = kv_quant.compare_outputs(dict(enumerate(outs["fp"])),
-                                         dict(enumerate(outs["int8"])))
-    ratio = (per["int8"]["kv_bytes_per_slot"]
+                                         dict(enumerate(outs[kv_dtype])))
+    ratio = (per[kv_dtype]["kv_bytes_per_slot"]
              / max(per["fp"]["kv_bytes_per_slot"], 1))
 
     # -- capacity under one byte budget ------------------------------------
@@ -1094,7 +1102,7 @@ def bench_quantized(*, slots: int, scenes: int, fanout: int, seed: int,
     budget = probe._page_nbytes_stack() * (
         1 + probe._pages_per_slot + demand * max(cap_slots // 3, 1))
     capacity = {}
-    for name, dt in (("fp", None), ("int8", "int8")):
+    for name, dt in (("fp", None), (kv_dtype, kv_dtype)):
         core = EngineCore(tier, ac, EngineCoreConfig(
             slots=cap_slots, answer_vocab=9, pool_bytes=budget, kv_dtype=dt,
             overload=OverloadConfig(queue_cap=2 * cap_slots)))
@@ -1114,18 +1122,19 @@ def bench_quantized(*, slots: int, scenes: int, fanout: int, seed: int,
 
     rec = {
         "slots": slots, "scenes": scenes, "fanout": fanout,
-        "fp": per["fp"], "int8": per["int8"],
+        "kv_dtype": kv_dtype,
+        "fp": per["fp"], kv_dtype: per[kv_dtype],
         "kv_bytes_per_slot_ratio": round(ratio, 4),
         "bytes_ratio_ok": ratio <= 0.55,
         "agreement": agreement,
         "outputs_match": agreement["match"],
         "tokens_per_s_ratio": round(
-            per["int8"]["answer_tokens_per_s"]
+            per[kv_dtype]["answer_tokens_per_s"]
             / max(per["fp"]["answer_tokens_per_s"], 1e-9), 3),
         "capacity": {"pool_bytes_budget": budget, **capacity,
-                     "page_ratio": round(capacity["int8"]["n_pages"]
+                     "page_ratio": round(capacity[kv_dtype]["n_pages"]
                                          / capacity["fp"]["n_pages"], 3)},
-        "capacity_up": (capacity["int8"]["peak_concurrent"]
+        "capacity_up": (capacity[kv_dtype]["peak_concurrent"]
                         > capacity["fp"]["peak_concurrent"]),
     }
     return rec
@@ -1199,30 +1208,153 @@ def _collect_recompiles(obj, path=""):
 
 
 HISTORY_CAP = 12
+#: the file's only top-level keys besides ``history`` — schema metadata.
+#: Every RUN record (config included) lives inside ``history[backend]``;
+#: schema 2 fixed the v1 layout where the latest run's record (and its
+#: ``config``) sat at the top level, clobbered by whichever leg ran last
+#: and masquerading as a description of the whole file.
+SCHEMA = {"benchmark": "serving_bench", "schema": 2}
 
 
-def _fold_history(out_path: str, rec: Dict, backend: str) -> Dict:
-    """Fold the previous record into a ``history`` dict **keyed by
-    backend** (each entry is a full per-workload record), so runs on
-    different backends never overwrite each other's trajectory.  Pre-matrix
-    files carried a flat history list and no backend discipline — every
-    record in them came from this container's CPU runs, so both the old
-    list and the old top-level record migrate under ``"cpu"``."""
-    history: Dict[str, List[Dict]] = {}
-    if os.path.exists(out_path):
-        try:
-            with open(out_path) as f:
-                prev = json.load(f)
-            h = prev.pop("history", {})
-            history = {"cpu": h} if isinstance(h, list) else h
-            pb = prev.get("config", {}).get("backend", "cpu")
-            if pb not in ("cpu", "cpu-interpret", "gpu", "tpu"):
-                pb = "cpu"                  # old records stored raw
-            history.setdefault(pb, []).append(prev)
-        except (OSError, ValueError):
-            pass
-    rec["history"] = {b: h[-HISTORY_CAP:] for b, h in history.items()}
-    return rec
+def _load_history(out_path: str) -> Dict[str, List[Dict]]:
+    """The backend-keyed run history from either file layout.  Legacy
+    (schema-1) files carried the latest run at the top level — it migrates
+    into its backend's list; pre-matrix files carried a flat history list
+    with no backend discipline — every record in them came from this
+    container's CPU runs, so the flat list migrates under ``"cpu"``."""
+    if not os.path.exists(out_path):
+        return {}
+    try:
+        with open(out_path) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    h = prev.pop("history", {})
+    history = {"cpu": h} if isinstance(h, list) else h
+    if any(k not in SCHEMA for k in prev):
+        # schema-1: the remaining top level IS the last run's record
+        pb = prev.get("config", {}).get("backend", "cpu")
+        if pb not in BACKENDS:
+            pb = "cpu"                      # old records stored raw
+        history.setdefault(pb, []).append(prev)
+    return history
+
+
+def _fold_history(out_path: str, run: Dict, backend: str) -> Dict:
+    """Append this run to ``history[backend]`` (bounded) and return the
+    full file record: schema metadata on top, every run — THIS one
+    included, its config inside its own entry — in the history."""
+    history = _load_history(out_path)
+    history.setdefault(backend, []).append(run)
+    return {**SCHEMA,
+            "history": {b: h[-HISTORY_CAP:] for b, h in history.items()}}
+
+
+#: headline tokens/s per workload — the metrics ``--trend`` charts and the
+#: regression guard compares run-over-run
+def _headline_metrics(entry: Dict) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for impl, r in entry.get("results", {}).items():
+        out[f"impl.{impl}"] = r["decode_tokens_per_s"]
+    for ci, r in entry.get("fanout", {}).items():
+        out[f"fanout.{ci}"] = r["answer_tokens_per_s"]
+    if "spec" in entry:
+        out["spec.greedy"] = entry["spec"]["greedy"]["decode_tokens_per_s"]
+        out["spec.spec"] = entry["spec"]["spec"]["decode_tokens_per_s"]
+    if "chunked" in entry:
+        for name, v in entry["chunked"]["steady_decode_tokens_per_s"].items():
+            out[f"chunked.steady.{name}"] = v
+    if "overload" in entry:
+        out["overload.controlled"] = \
+            entry["overload"]["controlled"]["completed_per_s"]
+    if "quantized" in entry:
+        q = entry["quantized"]
+        dt = q.get("kv_dtype", "int8")
+        for name in ("fp", dt):
+            if name in q:
+                out[f"quantized.{name}"] = q[name]["answer_tokens_per_s"]
+    if "sharded" in entry:
+        out["sharded.single"] = \
+            entry["sharded"]["single"]["answer_tokens_per_s"]
+        out["sharded.sharded"] = \
+            entry["sharded"]["sharded"]["answer_tokens_per_s"]
+    return out
+
+
+def _print_trend(out_path: str) -> int:
+    """``--trend``: the per-backend, per-workload tokens/s trajectory
+    across the recorded history — oldest run first, one line per metric,
+    smoke runs flagged (their absolute numbers are not comparable to full
+    runs, so each line groups a single (smoke, kv_dtype, mesh) regime)."""
+    history = _load_history(out_path)
+    if not history:
+        print(f"no history in {out_path}")
+        return 1
+    for backend in sorted(history):
+        runs = history[backend]
+        print(f"== {backend} ({len(runs)} runs) ==")
+        by_regime: Dict[tuple, List[Dict]] = {}
+        for e in runs:
+            c = e.get("config", {})
+            key = (bool(c.get("smoke")), c.get("kv_dtype"), c.get("mesh"))
+            by_regime.setdefault(key, []).append(e)
+        for (smoke, dt, mesh), entries in sorted(by_regime.items(),
+                                                 key=str):
+            tags = [t for t in ("smoke" if smoke else "full",
+                                dt and f"kv={dt}", mesh and f"mesh={mesh}")
+                    if t]
+            print(f"  [{' '.join(tags)}]")
+            series: Dict[str, List[str]] = {}
+            for e in entries:
+                m = _headline_metrics(e)
+                for k in sorted(m):
+                    series.setdefault(k, []).append(f"{m[k]:.1f}")
+            for k, vals in sorted(series.items()):
+                print(f"    {k:24s} {'  '.join(vals)}  tok/s")
+    return 0
+
+
+def _regression_failures(history: Dict[str, List[Dict]], run: Dict,
+                         backend: str, max_drop: float = 0.20
+                         ) -> List[str]:
+    """``--regress-guard``: headline tokens/s of this run vs the LAST
+    comparable same-backend history entry (same smoke/kv_dtype/mesh
+    regime — absolute numbers across regimes mean nothing).  Returns the
+    metrics that dropped more than ``max_drop``; empty = pass (including
+    the no-prior-run case)."""
+    cfg = run.get("config", {})
+    key = lambda c: (bool(c.get("smoke")), c.get("kv_dtype"),
+                     c.get("mesh"))
+    prior = [e for e in history.get(backend, [])
+             if key(e.get("config", {})) == key(cfg)]
+    if not prior:
+        return []
+    prev = _headline_metrics(prior[-1])
+    cur = _headline_metrics(run)
+    fails = []
+    for k in sorted(set(prev) & set(cur)):
+        if prev[k] > 0 and cur[k] < (1.0 - max_drop) * prev[k]:
+            fails.append(f"{k}: {prev[k]:.1f} -> {cur[k]:.1f} tok/s "
+                         f"({cur[k] / prev[k]:.2f}x)")
+    return fails
+
+
+def _autotune_record(backend: str) -> Dict[str, object]:
+    """The checked-in autotune result for this backend key, summarized for
+    the bench record: winning configs + measured speedup over the
+    hand-picked defaults (``kernels/autotune.py`` wrote the file)."""
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                        "src", "repro", "kernels", "tuned",
+                        f"{backend}.json")
+    try:
+        with open(path) as f:
+            tuned = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    return {"configs": tuned.get("configs", {}),
+            "speedup_vs_default": {
+                k: {d: t["speedup_vs_default"] for d, t in per.items()}
+                for k, per in tuned.get("timings_ms", {}).items()}}
 
 
 # ---------------------------------------------------------------------------
@@ -1348,11 +1480,13 @@ def main(argv=None) -> int:
                          "step function after warmup — the CompileGuard "
                          "steady-state verdict across the plain, spec and "
                          "chunked workloads")
-    ap.add_argument("--kv-dtype", choices=["int8"], default=None,
-                    help="run every paged engine quantized (int8 pages, "
-                         "in-kernel dequant); each workload's existing "
-                         "output assertions then check the quantized "
-                         "engines against their fp/dense oracles")
+    ap.add_argument("--kv-dtype", choices=["int8", "fp8"], default=None,
+                    help="run every paged engine quantized (int8 or fp8 "
+                         "e4m3 pages, in-kernel dequant — fp8 also takes "
+                         "the native-fp8 dot path); each workload's "
+                         "existing output assertions then check the "
+                         "quantized engines against their fp/dense "
+                         "oracles")
     ap.add_argument("--backend", choices=["auto"] + list(BACKENDS),
                     default="auto",
                     help="backend label for this leg; cpu-interpret pins "
@@ -1373,9 +1507,20 @@ def main(argv=None) -> int:
                          f"({','.join(WORKLOADS)}; default all minus "
                          "sharded, which needs a multi-device process — "
                          "see --mesh)")
+    ap.add_argument("--trend", action="store_true",
+                    help="print the per-backend, per-workload tokens/s "
+                         "trajectory from --out's recorded history and "
+                         "exit (no benching)")
+    ap.add_argument("--regress-guard", action="store_true",
+                    help="fail (exit 1) if any headline tokens/s metric "
+                         "drops >20%% against the last comparable "
+                         "same-backend history entry (same smoke/kv-dtype/"
+                         "mesh regime)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
+    if args.trend:
+        return _print_trend(args.out)
     if args.matrix:
         return _run_matrix(args, argv)
 
@@ -1546,21 +1691,22 @@ def main(argv=None) -> int:
         rec["overload"] = overload
 
     if "quantized" in wl:
-        # -- quantized paged KV: int8 vs the exact-fp engine ---------------
+        # -- quantized paged KV: int8/fp8 vs the exact-fp engine -----------
+        qdt = args.kv_dtype or "int8"
         quant = bench_quantized(slots=args.fanout_slots, scenes=args.scenes,
                                 fanout=args.fanout, seed=args.seed,
-                                smoke=args.smoke)
+                                smoke=args.smoke, kv_dtype=qdt)
         cap = quant["capacity"]
-        print(f"[quantized int8] kv/slot ratio "
+        print(f"[quantized {qdt}] kv/slot ratio "
               f"{quant['kv_bytes_per_slot_ratio']} (≤0.55: "
               f"{quant['bytes_ratio_ok']})  tok/s ratio "
               f"{quant['tokens_per_s_ratio']}  capacity "
-              f"{cap['int8']['peak_concurrent']} vs "
+              f"{cap[qdt]['peak_concurrent']} vs "
               f"{cap['fp']['peak_concurrent']} concurrent "
-              f"({cap['int8']['n_pages']} vs {cap['fp']['n_pages']} pages "
+              f"({cap[qdt]['n_pages']} vs {cap['fp']['n_pages']} pages "
               f"under {cap['pool_bytes_budget']} B)")
         ag = quant["agreement"]
-        print(f"int8 outputs == fp: {quant['outputs_match']}  "
+        print(f"{qdt} outputs == fp: {quant['outputs_match']}  "
               f"({ag['n_requests_diverged']}/{ag['n_requests']} requests "
               f"diverged, first at {ag['first_divergences'] or '-'})")
         matches.append(quant["outputs_match"] and quant["bytes_ratio_ok"]
@@ -1600,14 +1746,28 @@ def main(argv=None) -> int:
     print(f"steady-state recompiles after warmup: {total_recompiles}"
           + (f"  ({', '.join(offenders)})" if offenders else ""))
 
-    rec = _fold_history(args.out, rec, backend)
+    at = _autotune_record(backend)
+    if at:
+        rec["autotune"] = at
+
+    regress = []
+    if args.regress_guard:
+        regress = _regression_failures(_load_history(args.out), rec,
+                                       backend)
+        for line in regress:
+            print(f"REGRESSION: {line}")
+        if not regress:
+            print("regression guard: no headline metric dropped >20% vs "
+                  "the last comparable run")
+
+    out = _fold_history(args.out, rec, backend)
     with open(args.out, "w") as f:
-        json.dump(rec, f, indent=2)
-    n_hist = sum(len(h) for h in rec["history"].values())
-    print(f"wrote {args.out} (history: {n_hist} prior runs across "
-          f"{sorted(rec['history'])})")
+        json.dump(out, f, indent=2)
+    n_hist = sum(len(h) for h in out["history"].values())
+    print(f"wrote {args.out} (history: {n_hist} runs across "
+          f"{sorted(out['history'])})")
     compiles_ok = not (args.check_compiles and total_recompiles)
-    return 0 if (all(matches) and compiles_ok) else 1
+    return 0 if (all(matches) and compiles_ok and not regress) else 1
 
 
 if __name__ == "__main__":

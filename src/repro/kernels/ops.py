@@ -16,7 +16,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.decode_attention import (decode_attention_pallas,
                                             paged_decode_attention_pallas,
@@ -57,6 +57,16 @@ def _resolve(impl: Impl) -> Tuple[str, bool]:
     if impl == "pallas_interpret":
         return "pallas", True
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def _tile_cfg(kernel: str, pool_dtype, interp: bool):
+    """The autotuned tile knobs for (backend, kernel, pool dtype) — a
+    pure-Python trace-time read of ``kernels/tuned/{backend}.json``
+    (defaults when absent or ``REPRO_KERNEL_TUNED=off``), so tuned dispatch
+    is exactly as compile-stable as a hard-coded constant.  Explicit caller
+    kwargs override per call."""
+    return autotune.lookup(kernel, autotune.dtype_key(pool_dtype),
+                           interpret=interp)
 
 
 # ---------------------------------------------------------------------------
@@ -138,8 +148,10 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     qg = q.reshape(b, kh, group, hd)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
+    cfg = _tile_cfg("decode_dense", k.dtype, interp)
     o = decode_attention_pallas(qg, kt, vt, cache_len, window=window,
-                                softcap=softcap, scale=scale, interpret=interp)
+                                softcap=softcap, scale=scale,
+                                kv_blk=cfg["kv_blk"], interpret=interp)
     return o.reshape(b, h, hd)
 
 
@@ -164,6 +176,8 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            scale: Optional[float] = None,
                            k_scale: Optional[jax.Array] = None,
                            v_scale: Optional[jax.Array] = None,
+                           fan: Optional[int] = None,
+                           native_dot: Optional[bool] = None,
                            impl: Impl = None) -> jax.Array:
     """q: (B, H, hd); k_pool, v_pool: (n_pages, page, K, hd); block_table:
     (B, P) int32 (physical page per logical block); cache_len: () or (B,)
@@ -172,8 +186,10 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     The paged analogue of ``decode_attention``: each row reads its KV
     through its block table, so shared prefix pages are fetched once per
     page, not once per sequence.  ``k_scale``/``v_scale`` (n_pages, page, K)
-    f32: the pools are int8 with per-slot symmetric scales, dequanted inside
-    the kernel (see ``kernels/kv_quant.py``)."""
+    f32: the pools are int8/fp8 with per-slot symmetric scales, dequanted
+    inside the kernel (see ``kernels/kv_quant.py``).  ``fan`` (page-block
+    fan-in) and ``native_dot`` (fp8 widening-dot path) default to the
+    backend's autotuned config (``kernels/autotune.py``)."""
     kind, interp = _resolve(impl)
     cache_len = jnp.asarray(cache_len, jnp.int32)
     if kind in ("ref", "flash_structured"):
@@ -189,11 +205,14 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     qg = q.reshape(b, kh, group, hd)
     kp = k_pool.transpose(0, 2, 1, 3)     # (n_pages, KH, page, hd)
     vp = v_pool.transpose(0, 2, 1, 3)
+    cfg = _tile_cfg("paged_decode", k_pool.dtype, interp)
     o = paged_decode_attention_pallas(qg, kp, vp, block_table, cache_len,
                                       window=window, softcap=softcap,
                                       scale=scale,
+                                      fan=cfg["fan"] if fan is None else fan,
                                       k_scale=_scale_to_kernel(k_scale),
                                       v_scale=_scale_to_kernel(v_scale),
+                                      native_dot=native_dot,
                                       interpret=interp)
     return o.reshape(b, h, hd)
 
@@ -236,11 +255,13 @@ def multi_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                                               scale=scale)
     b, t, h, hd = q.shape
     kh = k.shape[2]
+    cfg = _tile_cfg("decode_dense", k.dtype, interp)
     o = decode_attention_pallas(_chunk_to_rows(q, kh),
                                 k.transpose(0, 2, 1, 3),
                                 v.transpose(0, 2, 1, 3), cache_len,
                                 window=window, softcap=softcap, scale=scale,
-                                q_len=t, interpret=interp)
+                                q_len=t, kv_blk=cfg["kv_blk"],
+                                interpret=interp)
     return _rows_to_chunk(o, t, h)
 
 
@@ -251,6 +272,8 @@ def paged_multi_decode_attention(q: jax.Array, k_pool: jax.Array,
                                  scale: Optional[float] = None,
                                  k_scale: Optional[jax.Array] = None,
                                  v_scale: Optional[jax.Array] = None,
+                                 fan: Optional[int] = None,
+                                 native_dot: Optional[bool] = None,
                                  impl: Impl = None) -> jax.Array:
     """q: (B, T, H, hd); k_pool, v_pool: (n_pages, page, K, hd);
     block_table: (B, P) int32; cache_len: () or (B,) int32 INCLUDING the
@@ -259,8 +282,9 @@ def paged_multi_decode_attention(q: jax.Array, k_pool: jax.Array,
     The speculative verifier's scoring op: ONE call emits attention for all
     T = γ+1 draft positions of every row through its block table (shared
     read-only prefix pages fetched once per page, never written).
-    ``k_scale``/``v_scale`` (n_pages, page, K): int8 pools, in-kernel
-    dequant."""
+    ``k_scale``/``v_scale`` (n_pages, page, K): int8/fp8 pools, in-kernel
+    dequant (fp8 may take the native widening-dot path); ``fan`` defaults
+    to the backend's autotuned ``paged_verify`` config."""
     kind, interp = _resolve(impl)
     cache_len = jnp.asarray(cache_len, jnp.int32)
     if kind in ("ref", "flash_structured"):
@@ -271,12 +295,15 @@ def paged_multi_decode_attention(q: jax.Array, k_pool: jax.Array,
                 v_scale=v_scale)
     b, t, h, hd = q.shape
     kh = k_pool.shape[2]
+    cfg = _tile_cfg("paged_verify", k_pool.dtype, interp)
     o = paged_decode_attention_pallas(
         _chunk_to_rows(q, kh), k_pool.transpose(0, 2, 1, 3),
         v_pool.transpose(0, 2, 1, 3), block_table, cache_len, window=window,
         softcap=softcap, scale=scale, q_len=t,
+        fan=cfg["fan"] if fan is None else fan,
         k_scale=_scale_to_kernel(k_scale),
-        v_scale=_scale_to_kernel(v_scale), interpret=interp)
+        v_scale=_scale_to_kernel(v_scale), native_dot=native_dot,
+        interpret=interp)
     return _rows_to_chunk(o, t, h)
 
 
@@ -288,9 +315,12 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
                             v_pool: jax.Array, block_table: jax.Array,
                             cache_len: jax.Array, *, window: int = 0,
                             softcap: Optional[float] = None,
-                            scale: Optional[float] = None, q_blk: int = 8,
+                            scale: Optional[float] = None,
+                            q_blk: Optional[int] = None,
                             k_scale: Optional[jax.Array] = None,
                             v_scale: Optional[jax.Array] = None,
+                            fan: Optional[int] = None,
+                            native_dot: Optional[bool] = None,
                             impl: Impl = None) -> jax.Array:
     """q: (B, C, H, hd) — a C-token **prefill chunk** whose KV the caller
     just scattered at per-row (page, offset); k_pool, v_pool: (n_pages,
@@ -306,7 +336,8 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
     writes were steered out of bounds by the model layer.  The Pallas path
     tiles the query-chunk axis in ``q_blk``-token sub-blocks (per-sub-block
     scratch + KV-block skipping) — the structural difference from the γ+1
-    verify op, which holds the whole chunk in one block."""
+    verify op, which holds the whole chunk in one block.  ``q_blk`` and
+    ``fan`` default to the backend's autotuned ``paged_prefill`` config."""
     kind, interp = _resolve(impl)
     cache_len = jnp.asarray(cache_len, jnp.int32)
     if kind in ("ref", "flash_structured"):
@@ -317,12 +348,16 @@ def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
                 v_scale=v_scale)
     b, t, h, hd = q.shape
     kh = k_pool.shape[2]
+    cfg = _tile_cfg("paged_prefill", k_pool.dtype, interp)
     o = paged_prefill_attention_pallas(
         _chunk_to_rows(q, kh), k_pool.transpose(0, 2, 1, 3),
         v_pool.transpose(0, 2, 1, 3), block_table, cache_len, window=window,
-        softcap=softcap, scale=scale, q_len=t, q_blk=q_blk,
+        softcap=softcap, scale=scale, q_len=t,
+        q_blk=cfg["q_blk"] if q_blk is None else q_blk,
+        fan=cfg["fan"] if fan is None else fan,
         k_scale=_scale_to_kernel(k_scale),
-        v_scale=_scale_to_kernel(v_scale), interpret=interp)
+        v_scale=_scale_to_kernel(v_scale), native_dot=native_dot,
+        interpret=interp)
     return _rows_to_chunk(o, t, h)
 
 

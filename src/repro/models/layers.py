@@ -118,19 +118,23 @@ def init_paged_attn_cache(cfg: ArchConfig, n_pages: int, page_size: int,
     per-row block tables (passed to ``attention`` at decode) resolve logical
     positions to (page, offset).
 
-    ``kv_dtype="int8"`` stores the pools as int8 with per-(token slot, head)
-    symmetric f32 scales alongside (``k_scale``/``v_scale``, one scale per
-    ``hd`` int8 values): the write paths in ``attention`` quantize each
-    incoming token locally and the paged kernels dequant in-register, so no
-    committed slot is ever requantized (see ``kernels/kv_quant.py``)."""
+    ``kv_dtype="int8"`` / ``"fp8"`` (e4m3) store the pools quantized with
+    per-(token slot, head) symmetric f32 scales alongside
+    (``k_scale``/``v_scale``, one scale per ``hd`` stored values): the
+    write paths in ``attention`` quantize each incoming token locally and
+    the paged kernels dequant in-register, so no committed slot is ever
+    requantized (see ``kernels/kv_quant.py``)."""
     hd = cfg.resolved_head_dim
     shape = (n_pages, page_size, cfg.num_kv_heads, hd)
     if kv_dtype is None:
         return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
-    if kv_dtype != "int8":
-        raise ValueError(f"unknown kv_dtype {kv_dtype!r} (None or 'int8')")
-    return {"k": jnp.zeros(shape, jnp.int8),
-            "v": jnp.zeros(shape, jnp.int8),
+    try:
+        qdtype = {"int8": jnp.int8, "fp8": kv_quant.FP8_DTYPE}[kv_dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown kv_dtype {kv_dtype!r} (None, 'int8' or 'fp8')")
+    return {"k": jnp.zeros(shape, qdtype),
+            "v": jnp.zeros(shape, qdtype),
             "k_scale": jnp.zeros(shape[:3], jnp.float32),
             "v_scale": jnp.zeros(shape[:3], jnp.float32)}
 
@@ -142,10 +146,11 @@ def _paged_kv_write(cache: Params, pages, off, k, v) -> Params:
     quantize each token over its head dim and scatter the per-slot scales
     at the same indices — the write is local to its own slots, so committed
     neighbours keep their bytes (bit-stable chunking + free spec rollback,
-    exactly as the fp pool)."""
+    exactly as the fp pool).  The pool leaf's dtype picks the quantizer
+    (int8 vs fp8), so all three write paths stay dtype-agnostic."""
     if "k_scale" in cache:
-        kq, ks = kv_quant.quantize_kv(k)
-        vq, vs = kv_quant.quantize_kv(v)
+        kq, ks = kv_quant.quantize_kv_as(k, cache["k"].dtype)
+        vq, vs = kv_quant.quantize_kv_as(v, cache["v"].dtype)
         return {"k": cache["k"].at[pages, off].set(kq),
                 "v": cache["v"].at[pages, off].set(vq),
                 "k_scale": cache["k_scale"].at[pages, off].set(ks),

@@ -110,10 +110,10 @@ def init_paged_cache(cfg: ArchConfig, batch: int, n_pages: int,
     recurrent-state leaves (O(1) per token — nothing to page) stay per-slot
     ``(n_super, batch, ...)`` exactly as in the dense cache.
 
-    ``kv_dtype="int8"``: the pools quantize to int8 with per-(token slot,
-    head) scale leaves ``k_scale``/``v_scale`` stacked alongside
-    (``(n_super, n_pages, page, KH)`` f32) — the attention write paths
-    maintain them and the paged kernels dequant in-register."""
+    ``kv_dtype="int8"``/``"fp8"``: the pools quantize (int8 or e4m3) with
+    per-(token slot, head) scale leaves ``k_scale``/``v_scale`` stacked
+    alongside (``(n_super, n_pages, page, KH)`` f32) — the attention write
+    paths maintain them and the paged kernels dequant in-register."""
     dt = jnp.dtype(cfg.dtype)
 
     def single(spec: BlockSpec):

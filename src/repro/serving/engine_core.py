@@ -131,9 +131,13 @@ class EngineCoreConfig:
     #: requests.  Must cover at least one slot's pages + the trash page.
     pool_bytes: Optional[int] = None
     #: KV pool element type (paged only).  ``None`` → the model dtype
-    #: (exact — the oracle).  ``"int8"`` → pages quantize per (token slot,
-    #: head) symmetric with f32 scale leaves alongside; the paged Pallas
-    #: kernels dequantize in-register.  Greedy outputs are expected (and
+    #: (exact — the oracle).  ``"int8"`` / ``"fp8"`` (e4m3) → pages
+    #: quantize per (token slot, head) symmetric with f32 scale leaves
+    #: alongside; the paged Pallas kernels dequantize in-register (fp8 can
+    #: instead feed the stored bytes straight into the dot and apply the
+    #: scales post-hoc — the native-fp8 path).  Both cost the same bytes
+    #: per page; fp8 trades int8's uniform grid for relative precision
+    #: below each row's amax.  Greedy outputs are expected (and
     #: bench-asserted) to agree with the exact engine on the serving
     #: workloads, but equality is empirical, not a kernel guarantee —
     #: divergence is *reported*, never hidden.
@@ -258,9 +262,9 @@ class EngineCore:
                            else self.cfg.cache_impl)
 
         if self.cfg.kv_dtype is not None:
-            if self.cfg.kv_dtype != "int8":
+            if self.cfg.kv_dtype not in ("int8", "fp8"):
                 raise ValueError(f"unknown kv_dtype {self.cfg.kv_dtype!r} "
-                                 "(None or 'int8')")
+                                 "(None, 'int8' or 'fp8')")
             if self.cache_impl != "paged":
                 raise ValueError(
                     "kv_dtype requires the paged cache: quantization lives "
@@ -556,8 +560,10 @@ class EngineCore:
                         # (values, scales) layout every other write path
                         # maintains.  Scale leaves drop the trailing hd axis,
                         # which `leaf` handles via shape[3:].
-                        kq, ks = kv_quant.quantize_kv(pref["k"])
-                        vq, vs = kv_quant.quantize_kv(pref["v"])
+                        kq, ks = kv_quant.quantize_kv_as(
+                            pref["k"], pool["k"].dtype)
+                        vq, vs = kv_quant.quantize_kv_as(
+                            pref["v"], pool["v"].dtype)
                         pref = {"k": kq, "v": vq,
                                 "k_scale": ks, "v_scale": vs}
                     return jax.tree.map(leaf, pool, pref)

@@ -46,16 +46,19 @@ def page_nbytes(page_size: int, kv_heads: int, head_dim: int, *,
     scale buffers included — the single accounting rule capacity planning
     (``EngineCoreConfig.pool_bytes``) and ``EngineCore.kv_stats`` share.
 
-    fp: ``page·2·KH·hd·fp_bytes``.  int8: one byte per element plus one f32
-    scale per (token slot, head) — ``page·2·KH·(hd + 4)`` — so the same
+    fp: ``page·2·KH·hd·fp_bytes``.  int8/fp8: one byte per element plus one
+    f32 scale per (token slot, head) — ``page·2·KH·(hd + 4)`` — so the same
     byte budget buys ``≈ fp_bytes·hd/(hd+4)`` × more pages (3.56× for
     hd = 32 over fp32), which is exactly the admission headroom overload
-    control gets to spend."""
+    control gets to spend.  fp8 (e4m3) matches int8 byte-for-byte: the win
+    is numerics (relative precision below the row amax) and the native-fp8
+    dot path, not bytes."""
     per_tok = 2 * kv_heads * head_dim
     if kv_dtype is None:
         return page_size * per_tok * fp_bytes
-    if kv_dtype != "int8":
-        raise ValueError(f"unknown kv_dtype {kv_dtype!r} (None or 'int8')")
+    if kv_dtype not in ("int8", "fp8"):
+        raise ValueError(
+            f"unknown kv_dtype {kv_dtype!r} (None, 'int8' or 'fp8')")
     return page_size * (per_tok + 2 * kv_heads * 4)
 
 

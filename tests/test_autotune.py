@@ -1,0 +1,139 @@
+"""Kernel tile autotuning: lookup precedence, file plumbing, sweep record.
+
+The tuned-config machinery must be boring and safe: a pure trace-time dict
+read (``lookup``) layered defaults → checked-in tuned file → explicit
+caller kwarg, an env kill-switch (``REPRO_KERNEL_TUNED=off``) for
+bisecting a suspect config, and candidate values that are legal on every
+shape (the kernels clamp to divisors, so a tuned file can never break a
+call).  The sweep itself is exercised at smoke scale under the
+kernel_parity marker (it executes kernel bodies in interpret mode).
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import autotune
+
+
+@pytest.fixture
+def tuned_dir(tmp_path, monkeypatch):
+    """Point the tuned-file directory at a tmp dir and drop the cache on
+    both sides of the test."""
+    monkeypatch.setattr(autotune, "TUNED_DIR", str(tmp_path))
+    autotune.reload_tuned()
+    yield tmp_path
+    autotune.reload_tuned()
+
+
+def _write(tmp_path, backend, configs):
+    with open(os.path.join(str(tmp_path), f"{backend}.json"), "w") as f:
+        json.dump({"backend": backend, "configs": configs}, f)
+    autotune.reload_tuned()
+
+
+def test_dtype_key():
+    assert autotune.dtype_key(jnp.float32) == "fp32"
+    assert autotune.dtype_key(jnp.int8) == "int8"
+    assert autotune.dtype_key(jnp.float8_e4m3fn) == "fp8"
+    assert autotune.dtype_key(jnp.bfloat16) == "fp32"   # fp pools group
+
+
+def test_backend_key_interpret_suffix():
+    base = autotune.backend_key()
+    assert not base.endswith("-interpret")
+    assert autotune.backend_key(interpret=True) == f"{base}-interpret"
+
+
+def test_lookup_defaults_without_tuned_file(tuned_dir):
+    for kernel, defaults in autotune.DEFAULTS.items():
+        assert autotune.lookup(kernel, "fp32") == defaults
+
+
+def test_lookup_overlays_tuned_file(tuned_dir):
+    backend = autotune.backend_key(interpret=True)
+    _write(tuned_dir, backend,
+           {"paged_prefill": {"fp8": {"q_blk": 16}}})
+    cfg = autotune.lookup("paged_prefill", "fp8", interpret=True)
+    assert cfg["q_blk"] == 16
+    assert cfg["fan"] == autotune.DEFAULTS["paged_prefill"]["fan"]
+    # other (kernel, dtype) cells fall through to defaults untouched
+    assert (autotune.lookup("paged_prefill", "int8", interpret=True)
+            == autotune.DEFAULTS["paged_prefill"])
+    assert (autotune.lookup("paged_decode", "fp8", interpret=True)
+            == autotune.DEFAULTS["paged_decode"])
+
+
+def test_lookup_env_kill_switch(tuned_dir, monkeypatch):
+    backend = autotune.backend_key(interpret=True)
+    _write(tuned_dir, backend, {"paged_decode": {"fp32": {"fan": 8}}})
+    assert autotune.lookup("paged_decode", "fp32", interpret=True)["fan"] \
+        == 8
+    for off in ("off", "OFF", "0"):
+        monkeypatch.setenv("REPRO_KERNEL_TUNED", off)
+        assert (autotune.lookup("paged_decode", "fp32", interpret=True)
+                == autotune.DEFAULTS["paged_decode"])
+    monkeypatch.delenv("REPRO_KERNEL_TUNED")
+    assert autotune.lookup("paged_decode", "fp32", interpret=True)["fan"] \
+        == 8
+
+
+def test_lookup_corrupt_file_falls_back(tuned_dir):
+    backend = autotune.backend_key(interpret=True)
+    with open(os.path.join(str(tuned_dir), f"{backend}.json"), "w") as f:
+        f.write("{not json")
+    autotune.reload_tuned()
+    assert (autotune.lookup("paged_decode", "fp32", interpret=True)
+            == autotune.DEFAULTS["paged_decode"])
+
+
+def test_configs_cartesian_product():
+    cfgs = autotune._configs("paged_prefill")
+    space = autotune.SPACE["paged_prefill"]
+    assert len(cfgs) == len(space["q_blk"]) * len(space["fan"])
+    assert autotune.DEFAULTS["paged_prefill"] in cfgs
+    # every kernel's default is a sweep candidate — the speedup baseline
+    for kernel in autotune.SPACE:
+        assert autotune.DEFAULTS[kernel] in autotune._configs(kernel)
+
+
+def test_checked_in_tuned_files_are_wellformed():
+    """Whatever tuned files ship in the repo must parse, cover only known
+    kernels/dtypes/knobs, and carry the timing evidence they came from."""
+    if not os.path.isdir(autotune.TUNED_DIR):
+        pytest.skip("no tuned files checked in")
+    names = [n for n in os.listdir(autotune.TUNED_DIR)
+             if n.endswith(".json")]
+    assert names, "tuned dir exists but holds no records"
+    for name in names:
+        with open(os.path.join(autotune.TUNED_DIR, name)) as f:
+            rec = json.load(f)
+        assert rec["backend"] == name[:-len(".json")]
+        for kernel, per_dtype in rec["configs"].items():
+            assert kernel in autotune.SPACE
+            for dtype, cfg in per_dtype.items():
+                assert dtype in autotune.DTYPE_KEYS
+                assert set(cfg) == set(autotune.SPACE[kernel])
+                for knob, val in cfg.items():
+                    assert val in autotune.SPACE[kernel][knob]
+                t = rec["timings_ms"][kernel][dtype]
+                assert t["best_ms"] <= t["default_ms"]
+                assert t["speedup_vs_default"] >= 1.0
+
+
+@pytest.mark.kernel_parity
+def test_sweep_smoke_records_winner(tuned_dir):
+    """One (kernel, dtype) cell swept for real (interpret mode, kernel
+    bodies execute): the record carries every candidate's timing, the
+    winner is the argmin, and ``write_tuned``→``lookup`` round-trips it."""
+    rec = autotune.sweep(kernels=["paged_decode"], dtypes=("fp8",),
+                         repeats=1, interpret=True)
+    rows = rec["timings_ms"]["paged_decode"]["fp8"]["sweep"]
+    assert len(rows) == len(autotune._configs("paged_decode"))
+    best = min(rows, key=lambda r: r["ms"])
+    assert rec["configs"]["paged_decode"]["fp8"] == best["config"]
+    path = autotune.write_tuned(rec)
+    assert os.path.dirname(path) == str(tuned_dir)
+    got = autotune.lookup("paged_decode", "fp8", interpret=True)
+    assert got["fan"] == best["config"]["fan"]

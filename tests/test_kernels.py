@@ -521,20 +521,127 @@ def test_kv_quant_roundtrip():
                                   0.0)
 
 
+def test_kv_quant_fp8_roundtrip():
+    """fp8 (e4m3) quantize→dequantize: 3 mantissa bits give a relative
+    step of 2⁻³ between adjacent values, so the per-element error after
+    scaling onto ±448 is ≤ amax/16 — ~9× int8's bound, but checked the
+    same way; all-zero rows round-trip to exact zeros (0.0 is exactly
+    representable in e4m3)."""
+    x = _rand(KEY, (5, 4, 2, 32), jnp.float32)
+    q, scale = kv_quant.quantize_kv_fp8(x)
+    assert q.dtype == kv_quant.FP8_DTYPE and scale.dtype == jnp.float32
+    back = kv_quant.dequantize_kv(q, scale)
+    amax = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+    assert np.all(np.abs(np.asarray(back - x)) <= amax / 16 + 1e-7)
+    zq, zs = kv_quant.quantize_kv_fp8(jnp.zeros((3, 8)))
+    assert np.all(np.asarray(zq).astype(np.float32) == 0)
+    assert np.all(np.asarray(zs) == 0)
+    np.testing.assert_array_equal(
+        np.asarray(kv_quant.dequantize_kv(zq, zs)), 0.0)
+
+
+def test_kv_quant_fp8_saturating_cast():
+    """The clamp the quantizer exists for: jnp's raw e4m3 cast OVERFLOWS TO
+    NaN past ±448, so the row amax (which scales exactly onto ±FP8_MAX) and
+    anything float-rounding pushes past it must saturate finite.  Every
+    stored byte round-trips finite, and the amax element round-trips to
+    amax exactly (448 is representable)."""
+    x = jnp.asarray([[1e4, -1e4, 3.0, -2.5, 0.5, 1e-3, 7.0, -448.0]],
+                    jnp.float32)
+    q, scale = kv_quant.quantize_kv_fp8(x)
+    qf = np.asarray(q).astype(np.float32)
+    assert np.isfinite(qf).all()
+    assert np.abs(qf).max() == kv_quant.FP8_MAX
+    back = np.asarray(kv_quant.dequantize_kv(q, scale))
+    np.testing.assert_allclose(back[0, 0], 1e4, rtol=1e-6)
+    # sanity: the raw cast really is non-saturating — the clamp is load-
+    # bearing, not defensive
+    raw = jnp.asarray([600.0], jnp.float32).astype(kv_quant.FP8_DTYPE)
+    assert np.isnan(np.asarray(raw).astype(np.float32)).all()
+
+
+def test_kv_quant_fp8_subnormal_inputs():
+    """Tiny-magnitude rows, two regimes, no garbage in either:
+
+    - amax above the quantizer's 1e-30 guard floor (but far below e4m3's
+      normal range): the per-row scale maps amax onto 448 BEFORE the cast,
+      so the stored elements live in e4m3's well-conditioned range and the
+      round-trip keeps the usual amax/16 bound;
+    - true f32-subnormal rows (amax below the floor): the guard denominator
+      takes over and the row flushes to EXACT zeros — finite, deterministic,
+      and identical to int8's behavior on the same row."""
+    base = np.asarray([[1.0, -0.5, 0.25, 0.125, -1.0, 0.75, 0.3, -0.06]],
+                      np.float32)
+    x = jnp.asarray(base * 1e-20, jnp.float32)
+    q, scale = kv_quant.quantize_kv_fp8(x)
+    qf = np.asarray(q).astype(np.float32)
+    assert np.isfinite(qf).all() and np.abs(qf).max() == kv_quant.FP8_MAX
+    back = np.asarray(kv_quant.dequantize_kv(q, scale))
+    assert np.all(np.abs(back - np.asarray(x)) <= 1e-20 / 16 + 1e-30)
+    # the relative shape of the row survives: largest element stays largest
+    assert np.argmax(np.abs(back[0])) in (0, 4)
+    sub = jnp.asarray(base * 1e-40, jnp.float32)      # f32 subnormals
+    for quant in (kv_quant.quantize_kv_fp8, kv_quant.quantize_kv):
+        qs, ss = quant(sub)
+        np.testing.assert_array_equal(
+            np.asarray(qs).astype(np.float32), 0.0)
+        np.testing.assert_array_equal(
+            np.asarray(kv_quant.dequantize_kv(qs, ss)), 0.0)
+
+
+def test_kv_quant_fp8_chunked_equals_unchunked():
+    """Write-local bit-stability at the quantizer level: quantizing a
+    sequence row-by-row (how decode/verify/prefill chunks land in pages)
+    produces BIT-IDENTICAL stored bytes and scales to quantizing the whole
+    tensor at once — the property that makes chunked == unchunked prefill
+    and free spec rollback hold under fp8."""
+    x = _rand(jax.random.PRNGKey(7), (6, 2, 16), jnp.float32)
+    q_all, s_all = kv_quant.quantize_kv_fp8(x)
+    for i in range(x.shape[0]):
+        q_i, s_i = kv_quant.quantize_kv_fp8(x[i:i + 1])
+        np.testing.assert_array_equal(
+            np.asarray(q_i).view(np.uint8),
+            np.asarray(q_all[i:i + 1]).view(np.uint8))
+        np.testing.assert_array_equal(np.asarray(s_i),
+                                      np.asarray(s_all[i:i + 1]))
+
+
+def test_kv_quantize_as_dispatch():
+    """``quantize_kv_as`` keys the quantizer off the pool leaf's dtype —
+    the one dispatch all three write paths share."""
+    x = _rand(KEY, (4, 2, 16), jnp.float32)
+    qi, si = kv_quant.quantize_kv_as(x, jnp.int8)
+    qi2, si2 = kv_quant.quantize_kv(x)
+    np.testing.assert_array_equal(np.asarray(qi), np.asarray(qi2))
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(si2))
+    qf, sf = kv_quant.quantize_kv_as(x, kv_quant.FP8_DTYPE)
+    qf2, sf2 = kv_quant.quantize_kv_fp8(x)
+    np.testing.assert_array_equal(np.asarray(qf).view(np.uint8),
+                                  np.asarray(qf2).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(sf), np.asarray(sf2))
+    with pytest.raises(ValueError):
+        kv_quant.quantize_kv_as(x, jnp.float16)
+
+
 def test_kv_strategy_factory():
     with pytest.raises(ValueError):
-        kv_quant.get_strategy("fp8")
+        kv_quant.get_strategy("int4")
     with pytest.raises(ValueError):
         kv_quant.for_kv_dtype("int4")
     assert kv_quant.for_kv_dtype(None).name == "exact"
     assert kv_quant.for_kv_dtype("int8").name == "int8"
+    assert kv_quant.for_kv_dtype("fp8").name == "fp8"
     exact = kv_quant.get_strategy("exact")
     pools = exact.make_pools(jnp.ones((2, 4, 1, 8)), jnp.ones((2, 4, 1, 8)))
     assert set(pools) == {"k", "v"} and exact.scale_kwargs(pools) == {}
+    fp8 = kv_quant.get_strategy("fp8")
+    pools8 = fp8.make_pools(jnp.ones((2, 4, 1, 8)), jnp.ones((2, 4, 1, 8)))
+    assert pools8["k"].dtype == kv_quant.FP8_DTYPE
+    assert set(fp8.scale_kwargs(pools8)) == {"k_scale", "v_scale"}
 
 
 @pytest.mark.kernel_parity
-@pytest.mark.parametrize("strategy", ["exact", "int8"])
+@pytest.mark.parametrize("strategy", ["exact", "int8", "fp8"])
 @pytest.mark.parametrize("which,q_len,window", [
     ("decode", 1, 0),            # single-token decode
     ("decode", 1, 24),           # + sliding window
@@ -548,8 +655,13 @@ def test_paged_kernel_strategy_parity(strategy, which, q_len, window):
 
     - kernel vs the strategy's OWN oracle (tight ``tol_self`` — the Pallas
       body computes the same dequantized math in-register);
-    - strategy oracle vs the exact-fp oracle (``tol_exact`` — the int8
-      quantization-noise budget; 0 for the exact strategy).
+    - strategy oracle vs the exact-fp oracle (``tol_exact`` — the
+      strategy's quantization-noise budget; 0 for the exact strategy).
+
+    fp8 additionally exercises the native-fp8 dot path: ``native_dot``
+    resolves True for e4m3 pools, so the kernel contracts over the STORED
+    bytes and applies the scales post-dot — still held to ``tol_self``
+    against the dequantize-first oracle.
     """
     st = kv_quant.get_strategy(strategy)
     s, h, kh, hd, page = 64, 4, 2, 32, 8
@@ -580,13 +692,17 @@ def test_paged_kernel_strategy_parity(strategy, which, q_len, window):
 
 
 @pytest.mark.kernel_parity
-def test_paged_decode_int8_zero_scale_rows():
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_paged_decode_quantized_zero_scale_rows(kv_dtype):
     """Pages quantized from all-zero KV carry scale 0: the kernel's
     dequantized contribution is exactly 0·score, so outputs are finite and
-    the all-zero-cache row attends to nothing but still normalizes."""
+    the all-zero-cache row attends to nothing but still normalizes (fp8
+    additionally pins that 0.0 is exactly representable in e4m3, so the
+    native-dot path contracts true zeros)."""
     s, kh, hd, page = 32, 2, 16, 8
     kp, vp, bt, clen, b, kq = _quant_operands(s, kh, hd, page, 1, seed=3)
-    pools = kv_quant.quantize_pool(jnp.zeros_like(kp), jnp.zeros_like(vp))
+    pools = kv_quant.quantize_pool(jnp.zeros_like(kp), jnp.zeros_like(vp),
+                                   kv_dtype=kv_dtype)
     q = _rand(kq, (b, 4, hd), jnp.float32)
     got = ops.paged_decode_attention(q, pools["k"], pools["v"], bt, clen,
                                      k_scale=pools["k_scale"],

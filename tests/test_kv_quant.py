@@ -1,23 +1,26 @@
-"""Quantized paged KV (``kv_dtype="int8"``): accounting + engine behavior.
+"""Quantized paged KV (``kv_dtype="int8"`` / ``"fp8"``): accounting +
+engine behavior.
 
 Four layers of guarantees:
 
 - accounting: ``kv_pool.page_nbytes`` is the ONE rule; the engine's planned
   page bytes (``_page_nbytes_stack``) equal the LIVE device bytes of its
-  pools (scale buffers included), the int8 per-slot footprint lands ≤ 0.55×
-  the fp paged engine's, and ``kv_stats`` reports ``kv_dtype`` +
-  ``kv_scale_bytes``;
+  pools (scale buffers included), the quantized per-slot footprint lands
+  ≤ 0.55× the fp paged engine's (fp8 pages cost exactly int8 bytes), and
+  ``kv_stats`` reports ``kv_dtype`` + ``kv_scale_bytes``;
 - sizing: ``pool_bytes`` converts one device-byte budget into a page count
   through the kv_dtype page size — the SAME budget buys ~3× the pages under
-  int8 (hd = 32), which is the admission headroom the overload layer spends;
-- validation: int8 is a paged-engine feature (dense/vmap stay the exact
-  oracle), pool_bytes and pool_pages are mutually exclusive, unknown dtypes
-  are rejected loudly;
-- behavior: the int8 engine is deterministic and BIT-STABLE across prefill
-  chunking (per-(token, head) scales make every write local — a committed
-  token's stored bytes never change), and its greedy agreement with the fp
-  engine is REPORTED via the ``kv_quant.compare_outputs`` record rather
-  than collapsed into a hidden boolean.
+  int8/fp8 (hd = 32), which is the admission headroom the overload layer
+  spends;
+- validation: quantization is a paged-engine feature (dense/vmap stay the
+  exact oracle), pool_bytes and pool_pages are mutually exclusive, unknown
+  dtypes are rejected loudly;
+- behavior: each quantized engine is deterministic and BIT-STABLE across
+  prefill chunking AND speculative rollback (per-(token, head) scales make
+  every write local — a committed token's stored bytes never change), and
+  its greedy agreement with the fp engine is REPORTED via the
+  ``kv_quant.compare_outputs`` record rather than collapsed into a hidden
+  boolean.
 """
 import jax
 import numpy as np
@@ -45,9 +48,11 @@ def sat_system():
 
 def _core(sat_system, **kw):
     params, cfg, ac, _ = sat_system
+    draft = kw.pop("draft", None)
     kw.setdefault("slots", 2)
     kw.setdefault("answer_vocab", 9)
-    return EngineCore(TierModel(params, cfg), ac, EngineCoreConfig(**kw))
+    return EngineCore(TierModel(params, cfg), ac, EngineCoreConfig(**kw),
+                      draft=draft)
 
 
 def _reqs(sat_system, n=4, scenes=2):
@@ -81,17 +86,21 @@ def _serve(core, reqs):
 # ---------------------------------------------------------------------------
 
 def test_page_nbytes_rule():
-    # fp32: page · 2 · KH · hd · 4;  int8: page · 2 · KH · (hd + 4)
+    # fp32: page · 2 · KH · hd · 4;  int8/fp8: page · 2 · KH · (hd + 4)
     assert page_nbytes(8, 2, 32) == 8 * 2 * 2 * 32 * 4
     assert page_nbytes(8, 2, 32, kv_dtype="int8") == 8 * 2 * 2 * (32 + 4)
+    # fp8 e4m3 costs EXACTLY int8 bytes (1-byte elements, same f32 scales)
+    assert (page_nbytes(8, 2, 32, kv_dtype="fp8")
+            == page_nbytes(8, 2, 32, kv_dtype="int8"))
     assert page_nbytes(8, 2, 32, fp_bytes=2) == 8 * 2 * 2 * 32 * 2
     with pytest.raises(ValueError):
         page_nbytes(8, 2, 32, kv_dtype="int4")
-    # the int8 page is ≤ 0.55× the fp page for every hd ≥ 8
+    # the quantized page is ≤ 0.55× the fp page for every hd ≥ 8
     for hd in (8, 16, 32, 64, 128):
-        ratio = (page_nbytes(8, 2, hd, kv_dtype="int8")
-                 / page_nbytes(8, 2, hd))
-        assert ratio <= 0.55, (hd, ratio)
+        for dt in ("int8", "fp8"):
+            ratio = (page_nbytes(8, 2, hd, kv_dtype=dt)
+                     / page_nbytes(8, 2, hd))
+            assert ratio <= 0.55, (hd, dt, ratio)
 
 
 def test_kv_stats_dense_vs_paged_vs_int8(sat_system):
@@ -101,7 +110,8 @@ def test_kv_stats_dense_vs_paged_vs_int8(sat_system):
     stats = {}
     for name, kw in (("dense", dict(cache_impl="dense")),
                      ("paged", {}),
-                     ("int8", dict(kv_dtype="int8"))):
+                     ("int8", dict(kv_dtype="int8")),
+                     ("fp8", dict(kv_dtype="fp8"))):
         core = _core(sat_system, **kw)
         _serve(core, _reqs(sat_system, n=2))
         stats[name] = core.kv_stats()
@@ -115,6 +125,12 @@ def test_kv_stats_dense_vs_paged_vs_int8(sat_system):
     assert stats["dense"]["kv_scale_bytes"] == 0
     assert stats["paged"]["kv_scale_bytes"] == 0
     assert stats["int8"]["kv_scale_bytes"] > 0
+    # the fp8 footprint is byte-identical to int8 — scales included; fp8
+    # must never cost more per slot than int8
+    assert (stats["fp8"]["kv_bytes_per_slot"]
+            <= stats["int8"]["kv_bytes_per_slot"])
+    assert (stats["fp8"]["kv_scale_bytes"]
+            == stats["int8"]["kv_scale_bytes"])
     # scales are INSIDE kv_bytes_total, not an extra line item
     assert stats["int8"]["kv_scale_bytes"] < stats["int8"]["kv_bytes_total"]
     ratio = (stats["int8"]["kv_bytes_per_slot"]
@@ -157,37 +173,75 @@ def test_kv_dtype_validation(sat_system):
     with pytest.raises(ValueError):                 # dense stays the oracle
         _core(sat_system, kv_dtype="int8", cache_impl="dense")
     with pytest.raises(ValueError):
-        _core(sat_system, kv_dtype="fp8")
+        _core(sat_system, kv_dtype="fp8", cache_impl="dense")
+    with pytest.raises(ValueError):                 # unknown dtype, loudly
+        _core(sat_system, kv_dtype="e5m2")
+    # fp8 is a first-class paged dtype: construction succeeds
+    assert _core(sat_system, kv_dtype="fp8").cfg.kv_dtype == "fp8"
 
 
 # ---------------------------------------------------------------------------
 # behavior: determinism, chunked bit-stability, reported fp agreement
 # ---------------------------------------------------------------------------
 
-def test_int8_engine_deterministic_and_chunk_stable(sat_system):
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quantized_engine_deterministic_and_chunk_stable(sat_system,
+                                                         kv_dtype):
     """Per-(token, head) scales keep every KV write local to its (page,
-    offset): chunked and synchronous prefill must produce IDENTICAL int8
-    engine outputs (same bytes land in the pools), and a rerun is
-    bit-deterministic."""
+    offset): chunked and synchronous prefill must produce IDENTICAL
+    quantized-engine outputs (same bytes land in the pools), and a rerun
+    is bit-deterministic — for int8 and fp8 alike."""
     reqs = _reqs(sat_system, n=4)
-    a = _serve(_core(sat_system, kv_dtype="int8"), reqs)
-    b = _serve(_core(sat_system, kv_dtype="int8"), reqs)
+    a = _serve(_core(sat_system, kv_dtype=kv_dtype), reqs)
+    b = _serve(_core(sat_system, kv_dtype=kv_dtype), reqs)
     assert a == b
-    chunked = _serve(_core(sat_system, kv_dtype="int8", prefill_chunk=4),
+    chunked = _serve(_core(sat_system, kv_dtype=kv_dtype, prefill_chunk=4),
                      reqs)
     assert a == chunked
 
 
-def test_int8_vs_fp_agreement_reported(sat_system):
-    """The cross-dtype check: greedy outputs of the int8 engine against the
-    exact paged engine, through the comparator the benches use.  On this
-    random-init proxy a near-tie argmax MAY flip under the ~0.4% KV noise —
-    the contract under test is that the record localizes any divergence
-    (per-request first positions) instead of hiding it, and that the token
-    streams keep the same shape either way."""
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quantized_spec_rollback_stable(sat_system, kv_dtype):
+    """Speculative rollback on quantized pools: adversarial piggybacked
+    drafts (every token perturbed) force the verify path to commit into and
+    roll back from shared pages each step, yet the committed streams must
+    stay EXACTLY the quantized greedy engine's — write-local scales mean a
+    rejected draft never perturbs the committed tokens beside it."""
+    params, cfg, _, _ = sat_system
+    reqs = _reqs(sat_system, n=4)
+    greedy = _serve(_core(sat_system, kv_dtype=kv_dtype), reqs)
+    spec = _core(sat_system, kv_dtype=kv_dtype, spec_gamma=2,
+                 draft=TierModel(params, cfg))
+    by_order = {i: np.asarray([(t + 1) % 9 for t in toks], np.int32)
+                for i, toks in enumerate(greedy)}
+    queue = list(reversed([
+        Request(task=r.task, image=r.image, prompt=r.prompt,
+                scene_id=r.scene_id, draft_tokens=by_order[i])
+        for i, r in enumerate(reqs)]))
+    order, outs = {}, {}
+    while queue or spec.active_count() > 0:
+        n = min(len(queue), len(spec.free_slots()))
+        for _ in range(n):
+            r = queue.pop()
+            order[r.request_id] = len(order)
+            spec.admit_many([r])
+        for req, toks in spec.step():
+            outs[order[req.request_id]] = toks.tolist()
+    assert [outs[i] for i in range(len(outs))] == greedy
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quantized_vs_fp_agreement_reported(sat_system, kv_dtype):
+    """The cross-dtype check: greedy outputs of a quantized engine against
+    the exact paged engine, through the comparator the benches use.  On
+    this random-init proxy a near-tie argmax MAY flip under the KV noise
+    (~0.4% int8, ~3.6% fp8) — the contract under test is that the record
+    localizes any divergence (per-request first positions) instead of
+    hiding it, and that the token streams keep the same shape either
+    way."""
     reqs = _reqs(sat_system, n=4)
     fp = _serve(_core(sat_system), reqs)
-    i8 = _serve(_core(sat_system, kv_dtype="int8"), reqs)
+    i8 = _serve(_core(sat_system, kv_dtype=kv_dtype), reqs)
     ag = kv_quant.compare_outputs(dict(enumerate(fp)), dict(enumerate(i8)))
     assert ag["n_requests"] == len(reqs)
     assert [len(t) for t in fp] == [len(t) for t in i8]
@@ -205,15 +259,16 @@ def test_int8_vs_fp_agreement_reported(sat_system):
     assert ag2["n_requests_diverged"] == 1
 
 
-def test_int8_shared_prefix_pages_quantized_once(sat_system):
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quantized_shared_prefix_pages_quantized_once(sat_system, kv_dtype):
     """Prefix sharing composes with quantization: fan-out over one scene
-    hits the prefix cache and the shared int8 pages (values AND scales)
-    are bitwise untouched by subsequent decode."""
-    core = _core(sat_system, kv_dtype="int8", slots=3)
+    hits the prefix cache and the shared quantized pages (values AND
+    scales) are bitwise untouched by subsequent decode."""
+    core = _core(sat_system, kv_dtype=kv_dtype, slots=3)
     _, _, _, data = sat_system
     reqs = [Request(task="vqa", image=data["images"][0], prompt=i % 2,
                     scene_id="shared") for i in range(3)]
     _serve(core, reqs)
     assert core.stats["prefix_hits"] > 0
     st = core.kv_stats()
-    assert st["kv_dtype"] == "int8" and st["kv_scale_bytes"] > 0
+    assert st["kv_dtype"] == kv_dtype and st["kv_scale_bytes"] > 0
